@@ -1,0 +1,53 @@
+"""Roofline table (EXPERIMENTS.md §Roofline source): reads the dry-run
+records and emits the three terms per (arch x shape x mesh), the dominant
+bottleneck, and the MODEL_FLOPS / HLO_FLOPS useful-compute ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def records(mesh: str | None = "16x16"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if r.get("skipped"):
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def rows():
+    out = []
+    for r in records():
+        tag = f"roofline.{r['arch']}.{r['shape']}"
+        tot = r["t_compute"] + 1e-12
+        out.append((f"{tag}.t_compute_s", r["t_compute"],
+                    f"bottleneck={r['bottleneck']}"))
+        out.append((f"{tag}.t_memory_s", r["t_memory"],
+                    f"mem_temp_GiB={r['memory']['temp_bytes']/2**30:.2f}"))
+        out.append((f"{tag}.t_collective_s", r["t_collective"],
+                    "|".join(f"{k}:{v['count']}"
+                             for k, v in r.get("collectives", {}).items())))
+        dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        out.append((f"{tag}.roofline_fraction", r["t_compute"] / max(dom, 1e-12),
+                    f"useful_flops_ratio={r['useful_flops_ratio']:.3f}"))
+    if not out:
+        out.append(("roofline.missing", 0.0,
+                    "run: python -m repro.launch.dryrun --both-meshes"))
+    return out
+
+
+def main():
+    for name, val, extra in rows():
+        print(f"{name},{val:.6f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

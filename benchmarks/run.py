@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig11,fig13]
+
+Prints ``name,value,derived`` CSV lines (value units are in the name).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig9a_accuracy_gap, fig11_breakdown, fig12_timeline,
+                        fig13_energy, real_steps, roofline, table2_devices)
+
+BENCHES = {
+    "table2": table2_devices,
+    "fig11": fig11_breakdown,
+    "fig12": fig12_timeline,
+    "fig13": fig13_energy,
+    "fig9a": fig9a_accuracy_gap,
+    "real": real_steps,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.only.split(",") if n.strip()] \
+        or list(BENCHES)
+    failed = []
+    for name in names:
+        mod = BENCHES[name]
+        t0 = time.time()
+        print(f"# ==== {name} ({mod.__name__}) ====")
+        try:
+            for row_name, val, extra in mod.rows():
+                print(f"{row_name},{val:.6f},{extra}")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time()-t0:.1f}s")
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

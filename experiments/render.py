@@ -1,0 +1,79 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun + experiments/perf.
+
+    PYTHONPATH=src python experiments/render.py [dryrun|roofline|perf]
+"""
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(mesh=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        r = json.load(open(f))
+        if r.get("skipped"):
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def dryrun_table():
+    print("| arch | shape | mesh | HLO GFLOP/dev | HLO GB/dev | coll GB/dev |"
+          " args GiB | temp GiB | compile s |")
+    print("|---|---|---|---:|---:|---:|---:|---:|---:|")
+    for r in load():
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r['hlo_flops_per_device']/1e9:.1f} "
+              f"| {r['hlo_bytes_per_device']/1e9:.1f} "
+              f"| {r['collective_bytes_per_device']/1e9:.2f} "
+              f"| {r['memory']['argument_bytes']/2**30:.2f} "
+              f"| {r['memory']['temp_bytes']/2**30:.2f} "
+              f"| {r['compile_seconds']} |")
+
+
+def roofline_table():
+    print("| arch | shape | t_comp s | t_mem s | t_coll s | bottleneck |"
+          " roofline frac | useful ratio | note |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---|")
+    for r in load(mesh="16x16"):
+        dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = r["t_compute"] / max(dom, 1e-12)
+        coll = r.get("collectives", {})
+        biggest = max(coll.items(), key=lambda kv: kv[1]["bytes"])[0] \
+            if coll else "-"
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3f} "
+              f"| {r['t_memory']:.3f} | {r['t_collective']:.3f} "
+              f"| {r['bottleneck']} | {frac:.3f} "
+              f"| {r['useful_flops_ratio']:.2f} | top-coll={biggest} |")
+
+
+def perf_table():
+    for f in sorted(glob.glob(os.path.join(HERE, "perf", "*.jsonl"))):
+        print(f"### {os.path.basename(f)[:-6]}")
+        print("| variant | t_comp s | t_mem s | t_coll s | temp GiB |"
+              " bottleneck | note |")
+        print("|---|---:|---:|---:|---:|---|---|")
+        for line in open(f):
+            r = json.loads(line)
+            print(f"| {r['variant']} | {r['t_compute']:.3f} "
+                  f"| {r['t_memory']:.3f} | {r['t_collective']:.3f} "
+                  f"| {r['memory']['temp_bytes']/2**30:.2f} "
+                  f"| {r['bottleneck']} | {r['note']} |")
+        print()
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        dryrun_table()
+    if which in ("roofline", "all"):
+        print()
+        roofline_table()
+    if which in ("perf", "all"):
+        print()
+        perf_table()

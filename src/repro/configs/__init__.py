@@ -1,0 +1,23 @@
+"""Config registry: ``get_arch("<id>")`` / ``get_arch("<id>", smoke=True)``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ArchBundle, CheckpointConfig, MambaConfig,
+                                ModelConfig, MoEConfig, ShapeConfig, SHAPES,
+                                ShardingProfile, TrainConfig)
+
+ARCH_IDS = [
+    "tinyllama-1.1b", "qwen3-0.6b", "llama3.2-3b", "granite-20b",
+    "qwen3-moe-235b-a22b", "arctic-480b", "rwkv6-3b", "whisper-base",
+    "qwen2-vl-7b", "jamba-v0.1-52b",
+]
+DLRM_IDS = ["dlrm-rm1", "dlrm-rm2", "dlrm-rm3", "dlrm-rm4"]
+
+_MOD = {i: "repro.configs." + i.replace("-", "_").replace(".", "_")
+        for i in ARCH_IDS + DLRM_IDS}
+
+
+def get_arch(arch_id: str, smoke: bool = False) -> ArchBundle:
+    mod = importlib.import_module(_MOD[arch_id])
+    return mod.smoke() if smoke else mod.full()

@@ -1,0 +1,21 @@
+"""granite-20b — llama-arch, code, MQA kv=1 [arXiv:2405.04324; hf]"""
+from repro.configs import base
+
+
+def full() -> base.ArchBundle:
+    m = base.ModelConfig(
+        name="granite-20b", family="dense", arch_type="transformer",
+        num_layers=52, d_model=6144, num_heads=48, num_kv_heads=1,
+        d_ff=24576, vocab_size=49152, rope_theta=10000.0,
+        source="arXiv:2405.04324; hf")
+    s = base.ShardingProfile(fsdp=True, seq_shard_activations=True)
+    return base.ArchBundle(model=m, sharding=s, shape_skips=("long_500k",), skip_reason="pure full-attention arch: 512k decode needs sub-quadratic mixing (see DESIGN.md)")
+
+def smoke() -> base.ArchBundle:
+    b = full()
+    return base.ArchBundle(
+        model=b.model.replace(num_layers=2, d_model=64, num_heads=4,
+                              num_kv_heads=1, d_ff=256, vocab_size=512,
+                              dtype="float32", remat=False,
+                              attn_chunk=64, loss_chunk=256),
+        sharding=base.ShardingProfile())

@@ -1,0 +1,169 @@
+"""Two-tier asynchronous checkpoint manager (the CXL-MEM checkpointing logic).
+
+Tier-E (embedding pool, every step — paper: "the embedding log should be
+permanently stored for every batch"):
+    1. the *batch-aware* property: touched indices are known from the sparse
+       features before compute finishes; the undo image (old rows) is read
+       from the host mirror — no device traffic;
+    2. write undo log + COMMIT flag;
+    3. apply new row values to the mirror in place (idempotent writes);
+    4. advance the manifest (fsync'd rename).
+
+Tier-M (dense params, every K steps — the *relaxed batch-aware checkpoint*):
+    full atomic snapshot of dense params + optimizer state. May trail tier-E
+    by up to K batches (paper Fig. 9: hundreds of batches cost <0.01 %
+    accuracy). An optional writer deadline emulates "MLP logging stops when
+    the top-MLP completes": a snapshot that misses its deadline is skipped,
+    never blocking training.
+
+All disk work runs on a background writer thread, off the critical path —
+``on_step`` only enqueues. ``flush()`` drains (end of training / tests).
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.checkpoint import store, undo_log
+from repro.training import state as st
+
+
+def _table_of(embed: dict) -> tuple[str, Any]:
+    if "table" in embed:
+        return "table", embed["table"]
+    return "emb_tables", embed["emb_tables"]
+
+
+def flatten_touched(cfg, touched: np.ndarray) -> np.ndarray:
+    """Unique flat row ids (DLRM tables get per-table offsets)."""
+    touched = np.asarray(touched)
+    if cfg.arch_type == "dlrm":
+        T = cfg.dlrm_num_tables
+        R = cfg.dlrm_rows_per_table
+        flat = (np.arange(T)[None, :, None] * R + touched).reshape(-1)
+    else:
+        flat = touched.reshape(-1)
+    return np.unique(flat)
+
+
+class CheckpointManager:
+    def __init__(self, cfg, ckpt_cfg, *, embed_init: Optional[dict] = None):
+        self.cfg = cfg
+        self.ccfg = ckpt_cfg
+        self.root = ckpt_cfg.directory
+        os.makedirs(os.path.join(self.root, "logs"), exist_ok=True)
+        os.makedirs(os.path.join(self.root, "dense"), exist_ok=True)
+        self.manifest_path = os.path.join(self.root, "MANIFEST.json")
+        self.mirror: dict[str, np.ndarray] = {}
+        self.mirror_acc: Optional[np.ndarray] = None
+        self._q: queue.Queue = queue.Queue(maxsize=8)
+        self._err: Optional[BaseException] = None
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self.stats = {"tier_e": 0, "tier_m": 0, "tier_m_skipped": 0,
+                      "bytes_e": 0, "bytes_m": 0}
+        if embed_init is not None:
+            self.init_mirror(embed_init)
+
+    # -- data region -------------------------------------------------------
+    def init_mirror(self, embed: dict, step: int = -1):
+        """Materialise the persistent 'data region' from the initial pool."""
+        name, tab = _table_of(embed)
+        arr = np.asarray(jax.device_get(tab), dtype=np.float32)
+        self.table_name = name
+        self.table_shape = arr.shape
+        flat = arr.reshape(-1, arr.shape[-1])
+        self.mirror_path = os.path.join(self.root, "mirror.dat")
+        mm = np.memmap(self.mirror_path, dtype=np.float32, mode="w+",
+                       shape=flat.shape)
+        mm[:] = flat
+        mm.flush()
+        self.mirror["rows"] = mm
+        store.write_json_atomic(self.manifest_path, {
+            "mirror_step": step, "dense_step": -1,
+            "table_name": name, "table_shape": list(arr.shape)})
+
+    # -- hooks ---------------------------------------------------------------
+    def on_step(self, step: int, state: dict, feed: Optional[dict]):
+        """Called by the train loop after step N. Non-blocking."""
+        if self._err is not None:
+            raise RuntimeError("checkpoint writer failed") from self._err
+        if feed is None:   # strict mode: derive touched rows from the batch
+            return
+        idx = flatten_touched(self.cfg, jax.device_get(feed["touched"]))
+        # new row values: small device gather of exactly the touched rows
+        name, tab = _table_of(state["embed"])
+        flat_tab = tab.reshape(-1, tab.shape[-1])
+        new_rows = np.asarray(
+            jax.device_get(jnp_take(flat_tab, idx)), dtype=np.float32)
+        work = ("tier_e", step, idx, new_rows)
+        self._q.put(work)
+        if (self.ccfg.dense_interval > 0
+                and step % self.ccfg.dense_interval == 0):
+            dense_np = jax.device_get(
+                {"dense": state["dense"], "opt_dense": state["opt_dense"],
+                 "opt_embed": state["opt_embed"]})
+            self._q.put(("tier_m", step, dense_np, time.monotonic()))
+
+    def flush(self):
+        self._q.join()
+        if self._err is not None:
+            raise RuntimeError("checkpoint writer failed") from self._err
+
+    # -- writer thread -------------------------------------------------------
+    def _run(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item[0] == "tier_e":
+                    self._do_tier_e(*item[1:])
+                else:
+                    self._do_tier_m(*item[1:])
+            except BaseException as e:  # surfaced on next on_step/flush
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _do_tier_e(self, step: int, idx: np.ndarray, new_rows: np.ndarray):
+        mm = self.mirror["rows"]
+        old_rows = np.array(mm[idx])              # undo image from the mirror
+        undo_log.write_log(self.root, step, idx, old_rows)   # 1-2: log+COMMIT
+        mm[idx] = new_rows                         # 3: in-place apply
+        mm.flush()
+        man = store.read_json(self.manifest_path)
+        man["mirror_step"] = step                  # 4: persistent flag
+        store.write_json_atomic(self.manifest_path, man)
+        undo_log.gc(self.root, step - self.ccfg.max_undo_logs)
+        self.stats["tier_e"] += 1
+        self.stats["bytes_e"] += idx.nbytes + new_rows.nbytes
+
+    def _do_tier_m(self, step: int, dense_np: dict, t_enq: float):
+        if (self.ccfg.writer_deadline_s
+                and time.monotonic() - t_enq > self.ccfg.writer_deadline_s):
+            self.stats["tier_m_skipped"] += 1      # relaxed ckpt: never block
+            return
+        d = os.path.join(self.root, "dense", f"step_{step:08d}")
+        store.save_pytree(d, dense_np, {"step": step})
+        man = store.read_json(self.manifest_path)
+        prev = man.get("dense_step", -1)
+        man["dense_step"] = step
+        store.write_json_atomic(self.manifest_path, man)
+        if prev >= 0 and prev != step:             # paper step 4: GC old ckpt
+            import shutil
+            shutil.rmtree(os.path.join(self.root, "dense",
+                                       f"step_{prev:08d}"),
+                          ignore_errors=True)
+        self.stats["tier_m"] += 1
+        self.stats["bytes_m"] += sum(a.nbytes for a in
+                                     jax.tree.leaves(dense_np))
+
+
+def jnp_take(flat_tab, idx: np.ndarray):
+    import jax.numpy as jnp
+    return jnp.take(flat_tab, jnp.asarray(idx), axis=0)

@@ -1,0 +1,159 @@
+"""Low-level persistent store: CRC-verified chunked array files with atomic
+publication (write to temp, fsync, rename). The durability contract mirrors
+the paper's PMEM log region: a reader never observes a torn write — either
+the COMMIT marker exists and every chunk passes CRC, or the entry is invalid
+and recovery falls back to the previous consistent state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from typing import Any
+
+import numpy as np
+
+_MAGIC = b"RPR1"
+CHUNK = 4 << 20  # 4 MiB
+
+
+class CorruptError(RuntimeError):
+    pass
+
+
+def _fsync_file(f):
+    f.flush()
+    os.fsync(f.fileno())
+
+
+def write_array(path: str, arr: np.ndarray):
+    """Chunked binary write: header(json) + [len|crc|payload]*."""
+    tmp = path + ".tmp"
+    header = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
+    raw = np.ascontiguousarray(arr).tobytes()
+    with open(tmp, "wb") as f:
+        hj = json.dumps(header).encode()
+        f.write(_MAGIC + struct.pack("<I", len(hj)) + hj)
+        for off in range(0, max(len(raw), 1), CHUNK):
+            chunk = raw[off:off + CHUNK]
+            f.write(struct.pack("<II", len(chunk), zlib.crc32(chunk)))
+            f.write(chunk)
+        _fsync_file(f)
+    os.replace(tmp, path)  # atomic publish
+
+
+def read_array(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != _MAGIC:
+            raise CorruptError(f"{path}: bad magic")
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        total = int(np.prod(header["shape"])) * np.dtype(header["dtype"]).itemsize
+        buf = bytearray()
+        while len(buf) < total:
+            hdr = f.read(8)
+            if len(hdr) < 8:
+                raise CorruptError(f"{path}: truncated")
+            clen, crc = struct.unpack("<II", hdr)
+            chunk = f.read(clen)
+            if len(chunk) != clen or zlib.crc32(chunk) != crc:
+                raise CorruptError(f"{path}: chunk CRC mismatch")
+            buf.extend(chunk)
+    return np.frombuffer(bytes(buf), dtype=header["dtype"]) \
+        .reshape(header["shape"])
+
+
+def _flatten(tree: Any, prefix="") -> dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+        if len(tree) == 0:
+            out[prefix + "@empty"] = np.zeros((0,))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    # rebuild nested dict/list structure from path keys
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def conv(node):
+        if not isinstance(node, dict):
+            return node
+        if "@empty" in node:
+            return ()
+        keys = list(node.keys())
+        if keys and all(k.startswith("#") for k in keys):
+            items = sorted(((int(k[1:]), v) for k, v in node.items()))
+            return [conv(v) for _, v in items]
+        return {k: conv(v) for k, v in node.items()}
+
+    return conv(root)
+
+
+def save_pytree(dirpath: str, tree: Any, extra_meta: dict | None = None):
+    """Atomic directory snapshot with COMMIT marker."""
+    tmp = dirpath + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    names = {}
+    for i, (key, arr) in enumerate(flat.items()):
+        fname = f"a{i:05d}.bin"
+        write_array(os.path.join(tmp, fname), arr)
+        names[key] = fname
+    meta = {"names": names, "extra": extra_meta or {}}
+    with open(os.path.join(tmp, "META.json"), "w") as f:
+        json.dump(meta, f)
+        _fsync_file(f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+        _fsync_file(f)
+    if os.path.exists(dirpath):
+        import shutil
+        old = dirpath + ".gc"
+        shutil.rmtree(old, ignore_errors=True)
+        os.rename(dirpath, old)        # previous snapshot stays valid until...
+        os.rename(tmp, dirpath)        # ...the new one is fully published
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.rename(tmp, dirpath)
+
+
+def is_committed(dirpath: str) -> bool:
+    return os.path.exists(os.path.join(dirpath, "COMMIT"))
+
+
+def load_pytree(dirpath: str) -> tuple[Any, dict]:
+    if not is_committed(dirpath):
+        raise CorruptError(f"{dirpath}: no COMMIT marker")
+    with open(os.path.join(dirpath, "META.json")) as f:
+        meta = json.load(f)
+    flat = {key: read_array(os.path.join(dirpath, fname))
+            for key, fname in meta["names"].items()}
+    return _unflatten(flat), meta.get("extra", {})
+
+
+def write_json_atomic(path: str, obj: dict):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        _fsync_file(f)
+    os.replace(tmp, path)
+
+
+def read_json(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,128 @@
+"""Relaxed embedding lookup (paper §"Relaxation of Failure Tolerant Training").
+
+The RAW hazard: batch N's embedding *update* and batch N+1's *lookup* touch
+the same pool rows (~80 % overlap across consecutive batches, paper ref (10)).
+The strict schedule serialises:   update_N -> lookup_{N+1} -> fwd_{N+1}.
+The relaxed schedule exploits commutativity of the (additive) row update:
+
+    gather(T + U, idx) == gather(T, idx) + gather(U, idx)        (exact)
+    bag(T + U, idx)    == bag(T, idx)   + bag(U, idx)            (linear)
+
+so batch N+1's lookup runs against the *pre-update* table concurrently with
+batch N's backward, and the correction term ``gather(U, idx)`` — U is batch
+N's sparse row delta — is added once the gradient exists. Both gathers are
+off the critical path; the scatter-update no longer blocks the next step.
+
+Because gather is a pure selection and the add is performed in the same
+dtype/ordering as the in-table add, relaxed == strict **bitwise** for
+row-gather models (LM) and to float-sum tolerance for bag models (the reduce
+order differs) — property-tested in tests/test_relaxed.py.
+
+These helpers are model-agnostic: "rows" means (…, d) pre-reduced embedding
+outputs — full rows for LMs, reduced bag vectors for DLRM (the paper operates
+on reduced vectors too, Fig. 8 bottom).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding_ops
+from repro.distributed.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Lookup / scatter / prefetch for the two pool layouts
+# ---------------------------------------------------------------------------
+
+
+def lookup_rows(embed_params: dict, cfg, batch: dict):
+    """Pool lookup for a batch -> 'rows' (pre-reduced embedding outputs)."""
+    if cfg.arch_type == "dlrm":
+        return embedding_ops.bag_lookup(embed_params["emb_tables"],
+                                        batch["sparse"])
+    return embedding_ops.lookup(embed_params["table"], batch["tokens"])
+
+
+def scatter_rows_grad(embed_params: dict, cfg, batch: dict, rows_grad):
+    """Adjoint of lookup_rows: dense table-shaped gradient from row grads."""
+    if cfg.arch_type == "dlrm":
+        tables = embed_params["emb_tables"]
+        T, R, d = tables.shape
+        idx = batch["sparse"]                              # (B, T, L)
+        g = jnp.zeros((T, R, d), jnp.float32)
+        # every row in the bag receives the bag's gradient (d bag / d row = 1)
+        B, _, L = idx.shape
+        flat_idx = (jnp.arange(T)[None, :, None] * R + idx).reshape(-1)
+        flat_g = jnp.broadcast_to(rows_grad[:, :, None, :].astype(jnp.float32),
+                                  (B, T, L, d)).reshape(-1, d)
+        g = g.reshape(T * R, d).at[flat_idx].add(flat_g).reshape(T, R, d)
+        return {"emb_tables": g}
+    table = embed_params["table"]
+    V, d = table.shape
+    idx = batch["tokens"].reshape(-1)
+    g = jnp.zeros((V, d), jnp.float32).at[idx].add(
+        rows_grad.reshape(-1, rows_grad.shape[-1]).astype(jnp.float32))
+    # keep the dense-but-sparse-content gradient on the pool layout
+    return {"table": constrain(g, ("vocab", None))}
+
+
+def prefetch_corrected(embed_params_old: dict, updates: dict, cfg,
+                       next_batch: dict):
+    """Relaxed prefetch of batch N+1's rows.
+
+    ``embed_params_old`` is the PRE-update pool (available at the start of
+    batch N — the gather is schedulable in parallel with N's compute);
+    ``updates`` is batch N's sparse delta U. Returns rows exactly equal to
+    looking up the post-update pool:  gather(T, idx) + gather(U, idx).
+    """
+    stale = lookup_rows(embed_params_old, cfg, next_batch)
+    corr = lookup_rows(jax.tree.map(lambda u: u, updates), cfg, next_batch) \
+        if updates is not None else None
+    if corr is None:
+        return stale
+    # mirror the in-table update arithmetic: f32 add, round to table dtype
+    table_dtype = jax.tree.leaves(embed_params_old)[0].dtype
+    return (stale.astype(jnp.float32) + corr.astype(jnp.float32)) \
+        .astype(table_dtype)
+
+
+def apply_embed_update(embed_params: dict, updates: dict):
+    """T_new = round(T + U) — the arithmetic prefetch_corrected mirrors."""
+    return jax.tree.map(
+        lambda t, u: (t.astype(jnp.float32) + u.astype(jnp.float32))
+        .astype(t.dtype), embed_params, updates)
+
+
+def constrain_pool(tree: dict):
+    """Keep table-shaped tensors (grads/updates/deltas) on the pool layout."""
+    out = dict(tree)
+    if "table" in out:
+        out["table"] = constrain(out["table"], ("vocab", None))
+    if "emb_tables" in out:
+        out["emb_tables"] = constrain(out["emb_tables"],
+                                      (None, "table_rows", None))
+    return out
+
+
+def touched_indices(cfg, batch: dict):
+    """The batch-aware property: the rows a batch WILL update, known from the
+    sparse features before any compute (paper Fig. 6)."""
+    if cfg.arch_type == "dlrm":
+        return batch["sparse"]
+    return batch["tokens"]
+
+
+def consecutive_overlap(cfg, batch_a: dict, batch_b: dict) -> jnp.ndarray:
+    """Fraction of batch_b's lookups that hit rows batch_a updated — the RAW
+    frequency the paper's relaxation targets (ref (10): ~80%)."""
+    ia = touched_indices(cfg, batch_a).reshape(-1)
+    ib = touched_indices(cfg, batch_b).reshape(-1)
+    if cfg.arch_type == "dlrm":
+        size = cfg.dlrm_rows_per_table
+    else:
+        size = cfg.vocab_size
+    hit = jnp.zeros((size,), jnp.bool_).at[ia].set(True)
+    return jnp.mean(hit[ib].astype(jnp.float32))

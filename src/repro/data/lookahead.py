@@ -1,0 +1,54 @@
+"""Lookahead data pipeline — the enabler of batch-aware checkpointing and
+relaxed lookup: batch N+1's sparse indices are visible while batch N trains
+(paper: "Since the sparse features include that information, RM training
+software sets them in the MMIO register for every batch").
+
+``LookaheadIterator`` keeps a prefetch window of fully-materialised batches;
+``peek_indices(k)`` exposes future touched-row sets without consuming them.
+Straggler tolerance: a window of depth >= 2 means one slow producer step
+never stalls the consumer (the producer here is synthetic; on a real cluster
+it is the host input pipeline).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any
+
+from repro.core import relaxed as rx
+
+
+class LookaheadIterator:
+    def __init__(self, batches, cfg, depth: int = 2, start_step: int = 0):
+        assert depth >= 2, "relaxed lookup needs >= 1 batch of lookahead"
+        self.batches = batches
+        self.cfg = cfg
+        self.depth = depth
+        self.step = start_step
+        self.window: collections.deque = collections.deque()
+        for i in range(depth):
+            self.window.append(batches.next(start_step + i))
+
+    def current(self) -> dict:
+        return self.window[0]
+
+    def peek(self, k: int = 1) -> dict:
+        """Batch N+k without consuming (k < depth)."""
+        return self.window[k]
+
+    def peek_indices(self, k: int = 1):
+        """The rows batch N+k WILL touch — feeds the undo-logger early."""
+        return rx.touched_indices(self.cfg, self.window[k])
+
+    def advance(self) -> dict:
+        """Consume batch N; extend the window."""
+        out = self.window.popleft()
+        self.step += 1
+        self.window.append(self.batches.next(self.step + self.depth - 1))
+        return out
+
+    # train_loop compatibility
+    def next(self, step: int) -> dict:
+        offset = step - self.step
+        if 0 <= offset < self.depth:
+            return self.window[offset]
+        return self.batches.next(step)

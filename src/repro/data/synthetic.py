@@ -1,0 +1,97 @@
+"""Synthetic data generation: LM token streams + DLRM features.
+
+DLRM sparse indices follow a zipf-like distribution matching the paper's
+setup ("we consider Criteo Kaggle's embedding table access distribution when
+randomly generating sparse feature input ... to evaluate the RAW impact") —
+the hot-row skew is what makes consecutive-batch row overlap (~80 %, paper
+citation (10)) and hence the RAW hazard / relaxed-lookup win realistic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def zipf_indices(rng: np.random.Generator, shape, num_rows: int,
+                 alpha: float = 1.05):
+    """Zipf-distributed row ids in [0, num_rows) (Criteo-like skew)."""
+    # inverse-CDF sampling on a truncated zipf
+    ranks = np.arange(1, num_rows + 1, dtype=np.float64)
+    probs = 1.0 / np.power(ranks, alpha)
+    probs /= probs.sum()
+    cdf = np.cumsum(probs)
+    u = rng.random(size=shape)
+    idx = np.searchsorted(cdf, u)
+    # scramble rank->row so hot rows are spread across shards
+    perm_seed = np.uint64(num_rows * 2654435761 % (2**31))
+    rows = (idx.astype(np.uint64) * np.uint64(2654435761)
+            + perm_seed) % np.uint64(num_rows)
+    return rows.astype(np.int32)
+
+
+class LMBatches:
+    """Deterministic synthetic LM token stream."""
+
+    def __init__(self, cfg, batch: int, seq: int, seed: int = 0):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.rng = np.random.default_rng(seed)
+
+    def next(self, step: int) -> dict:
+        rng = np.random.default_rng((hash((step, self.batch, self.seq))
+                                     & 0x7FFFFFFF))
+        v = self.cfg.vocab_size
+        toks = zipf_indices(rng, (self.batch, self.seq + 1), v)
+        batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                 "labels": jnp.asarray(toks[:, 1:])}
+        if self.cfg.arch_type == "qwen2vl":
+            sv = max(1, self.seq // 8)
+            batch["vision_embeds"] = jnp.asarray(
+                rng.standard_normal((self.batch, sv, self.cfg.d_model))
+                .astype(np.float32))
+            pos = np.broadcast_to(np.arange(self.seq), (3, self.batch, self.seq))
+            batch["positions3"] = jnp.asarray(pos.copy())
+        if self.cfg.arch_type == "whisper":
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((self.batch, self.seq, self.cfg.d_model))
+                .astype(np.float32))
+        return batch
+
+
+class DLRMBatches:
+    """Synthetic DLRM batches with zipf sparse features.
+
+    ``indices_for_step`` is separable from ``next`` — the data pipeline knows
+    batch N+1's indices before batch N finishes (the paper's batch-aware
+    property, Figure 6).
+    """
+
+    def __init__(self, cfg, batch: int, seed: int = 0, alpha: float = 1.05):
+        self.cfg, self.batch, self.seed, self.alpha = cfg, batch, seed, alpha
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed * 1_000_003 + step))
+
+    def indices_for_step(self, step: int) -> np.ndarray:
+        """(B, T, L) int32 — known in advance of the step's compute."""
+        rng = self._rng(step)
+        c = self.cfg
+        return zipf_indices(rng, (self.batch, c.dlrm_num_tables,
+                                  max(1, c.dlrm_num_sparse)),
+                            c.dlrm_rows_per_table, self.alpha)
+
+    def next(self, step: int) -> dict:
+        rng = self._rng(step)
+        c = self.cfg
+        dense = rng.standard_normal((self.batch, c.dlrm_num_dense)) \
+            .astype(np.float32)
+        labels = (rng.random(self.batch) < 0.5).astype(np.float32)
+        return {"dense": jnp.asarray(dense),
+                "sparse": jnp.asarray(self.indices_for_step(step)),
+                "labels": jnp.asarray(labels)}
+
+
+def make_batches(cfg, batch: int, seq: int, seed: int = 0):
+    if cfg.arch_type == "dlrm":
+        return DLRMBatches(cfg, batch, seed)
+    return LMBatches(cfg, batch, seq, seed)

@@ -1,0 +1,97 @@
+"""Context-parallel decode: KV cache sharded along the *sequence* axis.
+
+For decode against very deep caches (decode_32k, long_500k) the cache
+dominates memory; sharding it across mesh axes by sequence position is the
+TPU-native layout (flash-decoding style). The softmax over a sharded axis
+needs the two-pass max/sum combine — XLA cannot derive it, so it lives in a
+``shard_map``:
+
+    local:  m_i = max_j s_ij ; l_i = sum exp(s-m) ; o_i = sum exp(s-m) v
+    global: m* = pmax(m);  o = psum(o_i e^{m_i-m*}) / psum(l_i e^{m_i-m*})
+
+The single new KV row is written by exactly the shard that owns position
+``pos`` (idempotent masked dynamic_update_slice).
+
+This composes with the near-data embedding pool: both are shard_map islands
+inside one jitted serve step.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding
+
+
+def _linear_index(axes: tuple[str, ...]):
+    idx = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def _local_body(q, k_cache, v_cache, new_k, new_v, pos, *, axes):
+    B, S_loc, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    base = _linear_index(axes) * S_loc
+    off = pos - base
+    in_range = jnp.logical_and(off >= 0, off < S_loc)
+    offc = jnp.clip(off, 0, S_loc - 1)
+
+    def upd(cache, new):
+        # row-level masked write: never materialises a full-cache copy
+        orig = jax.lax.dynamic_slice(cache, (0, offc, 0, 0),
+                                     (cache.shape[0], 1) + cache.shape[2:])
+        row = jnp.where(in_range, new.astype(cache.dtype), orig)
+        return jax.lax.dynamic_update_slice(cache, row, (0, offc, 0, 0))
+
+    kc, vc = upd(k_cache, new_k), upd(v_cache, new_v)
+
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, kc.astype(jnp.float32)) \
+        / math.sqrt(D)
+    valid = (base + jnp.arange(S_loc)) <= pos                  # (S_loc,)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    m = s.max(axis=-1)                                          # (B,Hkv,G)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vc.astype(jnp.float32))
+
+    m_g = m
+    for ax in axes:
+        m_g = jax.lax.pmax(m_g, ax)
+    alpha = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * alpha, axes)
+    o_g = jax.lax.psum(o * alpha[..., None], axes)
+    out = (o_g / jnp.maximum(l_g, 1e-30)[..., None]).reshape(B, 1, Hq, D)
+    return out.astype(q.dtype), kc, vc
+
+
+def decode_attention_cp(q, k_cache, v_cache, new_k, new_v, pos):
+    """q/new_k/new_v: (B,1,H*,D); caches: (B,Smax,Hkv,D) sharded on seq.
+
+    Requires an active sharding context with rules["cache_seq"] set.
+    Returns (attn_out, new_k_cache, new_v_cache).
+    """
+    ctx = sharding.current()
+    ca = ctx.rules.get("cache_seq")
+    axes = tuple(a for a in ((ca,) if isinstance(ca, str) else tuple(ca))
+                 if a in ctx.mesh_axes)
+    dp = ctx.rules.get("batch")
+    if isinstance(dp, (tuple, list)):
+        dp = tuple(a for a in dp if a in ctx.mesh_axes and a not in axes) or None
+    dp = dp if dp else None
+    bspec = P(dp, None, None, None)
+    cspec = P(dp, axes, None, None)
+
+    body = partial(_local_body, axes=axes)
+    return jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(bspec, cspec, cspec, bspec, bspec, P()),
+        out_specs=(bspec, cspec, cspec))(
+            q, k_cache, v_cache, new_k, new_v, pos)

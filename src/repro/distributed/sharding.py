@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP/pod) + per-arch parameter specs.
+
+Models annotate activations with *logical* axis names via ``constrain``; the
+launcher installs a ``ShardingContext`` that maps logical names to mesh axes.
+Outside a context every call is a no-op, so models run unsharded on CPU tests
+unchanged. Parameter shardings are derived from path-pattern rules in
+``param_specs`` — this is the single place the hillclimb loop edits.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,              # "model" under Megatron-SP profile
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",      # auto-downgraded to None if kv_heads % tp != 0
+    "ffn": "model",
+    "vocab": "model",         # the disaggregated pool axis
+    "experts": "model",       # EP
+    "expert_ffn": None,
+    "cache_seq": None,        # "data" under context-parallel decode
+    "table_rows": "model",    # DLRM embedding pool rows
+}
+
+
+class ShardingContext:
+    def __init__(self, mesh: Mesh, rules: dict[str, Any]):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        self.rules.update(rules or {})
+        self.mesh_axes = set(mesh.axis_names)
+
+    def spec(self, logical: tuple[Optional[str], ...]) -> P:
+        out = []
+        for name in logical:
+            ax = self.rules.get(name) if name else None
+            if ax is None:
+                out.append(None)
+                continue
+            if isinstance(ax, (tuple, list)):
+                ax = tuple(a for a in ax if a in self.mesh_axes)
+                out.append(ax if ax else None)
+            else:
+                out.append(ax if ax in self.mesh_axes else None)
+        return P(*out)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: dict[str, Any] | None = None):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = ShardingContext(mesh, rules or {})
+    try:
+        yield _state.ctx
+    finally:
+        _state.ctx = prev
+
+
+def current() -> Optional[ShardingContext]:
+    return getattr(_state, "ctx", None)
+
+
+def constrain(x, logical: tuple[Optional[str], ...]):
+    """Annotate activation x with logical axes; no-op without a context."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = ctx.spec(logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(logical: tuple[Optional[str], ...]) -> Optional[NamedSharding]:
+    ctx = current()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, ctx.spec(logical))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by path pattern
+# ---------------------------------------------------------------------------
+
+# (regex on '/'-joined path, logical axes per dim). First match wins.
+# Stacked (scan-over-layers) params get a leading None for the layer dim,
+# handled by the L+1-dim fallback in _match.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"moe/(wi|wg)$", ("experts", "embed_w", "expert_ffn_w")),
+    (r"moe/wo$", ("experts", "expert_ffn_w", "embed_w")),
+    (r"moe/dense/(wi|wg)$", ("embed_w", "ffn_w")),
+    (r"moe/dense/wo$", ("ffn_w", "embed_w")),
+    (r"emb_tables$", ("tables", "table_rows", None)),
+    (r"embed/table$", ("vocab", None)),        # pool rows over model (paper)
+    (r"lm_head$", ("embed_w", "vocab")),
+    (r"(wq|wk|wv)$", ("embed_w", "heads_w")),
+    (r"wo$", ("heads_w", "embed_w")),          # attention out / mlp out
+    (r"(wi|wg)$", ("embed_w", "ffn_w")),
+    (r"router$", ("embed_w", None)),
+    (r"in_proj$", ("embed_w", "ffn_w")),
+    (r"out_proj$", ("ffn_w", "embed_w")),
+    (r"bc_proj$", ("ffn_w", None)),
+    (r"dt_proj$", ("ffn_w", None)),
+    (r".*", None),                              # biases, norms: replicated
+]
+
+# logical weight-axis -> rules key (weights may shard differently from acts)
+_WEIGHT_LOGICAL = {
+    "embed_w": "w_embed", "heads_w": "w_heads", "ffn_w": "w_ffn",
+    "expert_ffn_w": "w_expert_ffn",
+}
+
+DEFAULT_WEIGHT_RULES = {
+    "w_embed": None,          # fsdp profile: "data"
+    "w_heads": "model",
+    "w_ffn": "model",
+    "w_expert_ffn": None,     # fsdp profile for MoE: "data"
+    "vocab": "model",
+    "experts": "model",
+    "tables": None,
+    "table_rows": "model",
+}
+
+
+def param_specs(params, rules: dict[str, Any] | None = None,
+                mesh_axes: set[str] | None = None):
+    """PartitionSpec pytree for a params pytree, by path-pattern rules."""
+    r = dict(DEFAULT_WEIGHT_RULES)
+    r.update(rules or {})
+
+    def resolve(name):
+        key = _WEIGHT_LOGICAL.get(name, name)
+        ax = r.get(key)
+        if ax is None:
+            return None
+        if mesh_axes is not None:
+            if isinstance(ax, (tuple, list)):
+                ax = tuple(a for a in ax if a in mesh_axes) or None
+            elif ax not in mesh_axes:
+                ax = None
+        return ax
+
+    def spec_for(path: str, leaf) -> P:
+        for pat, logical in _PARAM_RULES:
+            if re.search(pat, path):
+                if logical is None:
+                    return P()
+                axes = [resolve(n) if n else None for n in logical]
+                nd = leaf.ndim
+                if nd == len(axes) + 1:      # stacked scan-over-layers leaf
+                    axes = [None] + axes
+                elif nd != len(axes):
+                    return P()
+                # never shard a dim that isn't divisible by the axis size
+                return P(*axes[:nd])
+        return P()
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in kp) for kp, _ in flat]
+    leaves = [spec_for(p, leaf) for p, (_, leaf) in zip(paths, flat)]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), leaves)
+
+
+def check_divisibility(params, specs, mesh: Mesh):
+    """Downgrade spec axes whose size doesn't divide the dim (e.g. kv=1 GQA)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(leaf, spec):
+        out = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            if ax is None:
+                out.append(None)
+                continue
+            n = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                n *= sizes[a]
+            out.append(ax if dim % n == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, params, specs)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused embedding gather + segment reduce.
+
+This is the CXL-MEM *computing logic* re-thought for the TPU memory
+hierarchy: instead of adders beside PMEM, the scalar-prefetch grid spec lets
+the DMA engine stream exactly the needed table rows HBM->VMEM (one row block
+per grid step, chosen by the prefetched index), and the VPU accumulates the
+bag sum in a VMEM-resident output block. Consecutive grid steps that hit the
+same bag keep the output block in VMEM (no HBM round trip) — indices arrive
+grouped by bag, which the callers guarantee by construction.
+
+Layout requirements (ops.py enforces/pads):
+  * D padded to a multiple of 128 (lane width)
+  * seg non-decreasing; idx in [0, R)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, seg_ref, row_ref, out_ref, *, num_bags: int):
+    """Grid prologue (i < num_bags): zero bag block i — Pallas outputs are
+    uninitialised, and a bag with no items must read as zeros (hypothesis
+    found this). Steps i >= num_bags: out[seg[j]] += table[idx[j]]."""
+    i = pl.program_id(0)
+
+    @pl.when(i < num_bags)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(i >= num_bags)
+    def _acc():
+        out_ref[...] += row_ref[...].astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(table, idx, seg, num_bags: int, *,
+                         interpret: bool = True):
+    """table: (R, D); idx/seg: (N,) int32; -> (num_bags, D) fp32 bag sums."""
+    import functools
+    n = idx.shape[0]
+    D = table.shape[1]
+
+    def row_map(i, idx_ref, seg_ref):
+        j = jnp.maximum(i - num_bags, 0)
+        return (idx_ref[j], 0)
+
+    def out_map(i, idx_ref, seg_ref):
+        j = jnp.maximum(i - num_bags, 0)
+        return (jnp.where(i < num_bags, i, seg_ref[j]), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # idx, seg
+        grid=(num_bags + n,),                      # zeroing prologue + items
+        in_specs=[pl.BlockSpec((1, D), row_map)],
+        out_specs=pl.BlockSpec((1, D), out_map),
+    )
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, num_bags=num_bags),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_bags, D), jnp.float32),
+        interpret=interpret,
+    )(idx, seg, table)
+
+
+def _gather_kernel(idx_ref, row_ref, out_ref):
+    out_ref[...] = row_ref[...]
+
+
+def gather_rows_pallas(table, idx, *, interpret: bool = True):
+    """Pure near-data gather: out[i] = table[idx[i]] (no reduce)."""
+    n = idx.shape[0]
+    D = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, D), table.dtype),
+        interpret=interpret,
+    )(idx, table)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, idx, seg, num_bags):
+    """table: (R, D); idx: (N,); seg: (N,) non-decreasing bag ids.
+    Returns (num_bags, D) with out[b] = sum_{i: seg[i]==b} table[idx[i]]."""
+    rows = jnp.take(table, idx, axis=0)
+    return jax.ops.segment_sum(rows, seg, num_segments=num_bags)
+
+
+def scatter_update_ref(table, idx, delta):
+    """Unique idx: (N,); delta: (N, D). Returns table with rows += delta."""
+    return table.at[idx].add(delta.astype(table.dtype))
+
+
+def scatter_update_logged_ref(table, idx, delta):
+    """Fused update + undo capture: returns (new_table, old_rows)."""
+    old = jnp.take(table, idx, axis=0)
+    return table.at[idx].add(delta.astype(table.dtype)), old
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q,k,v: (B, S, H, D) (same H — GQA expansion done by caller)."""
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """Sequential-scan oracle for the chunked wkv6 (same clamped logw).
+
+    r,k,v,logw: (B, S, H, K); u: (H, K); s0: (B, H, K, K).
+    y_t = r_t . (diag(u) k_t^T v_t + S_{t-1});  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(logw.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                      # (B,H,K) each
+        kv = jnp.einsum("bhk,bhw->bhkw", kt, vt)  # k^T v
+        y = jnp.einsum("bhk,bhkw->bhw", rt,
+                       u[None, :, :, None] * kv + s)   # diag(u) on the k axis
+        s = s * wt[..., None] + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, w))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin          # (B,S,H,K), (B,H,K,K)
+
+
+def mamba_ssd_ref(xh, dt, a, B_, C_):
+    """Sequential oracle for the chunked SSD.
+
+    xh: (B,S,H,P); dt: (B,S,H); a: (H,); B_/C_: (B,S,N).
+    h_t = exp(dt_t a) h_{t-1} + dt_t x_t B_t^T;  y_t = C_t . h_t
+    """
+    Bb, S, H, P = xh.shape
+    N = B_.shape[-1]
+
+    def step(h, inp):
+        x, d, b, c = inp
+        dec = jnp.exp(d * a[None])                 # (B,H)
+        upd = jnp.einsum("bm,bhp->bhmp", b, x * d[..., None])
+        h = h * dec[..., None, None] + upd
+        y = jnp.einsum("bm,bhmp->bhp", c, h)
+        return h, y
+
+    xs = (jnp.moveaxis(xh, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B_, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C_, 1, 0).astype(jnp.float32))
+    h_fin, ys = jax.lax.scan(step, jnp.zeros((Bb, H, N, P), jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_fin

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: in-place sparse row update (+ fused undo capture).
+
+The CXL-MEM *checkpointing logic* fused with the embedding update (paper
+Fig. 7): for each touched row the kernel first copies the old value into the
+log buffer ("2: copy embedding vectors from the data region to the log
+region"), then applies the delta in place via input/output aliasing ("4: the
+embedding table in the data region can be directly updated").
+
+Constraint: ``idx`` must be unique (duplicates pre-combined by the caller via
+segment-sum, as in production sparse-core updates); ops.py provides the
+combine helper. D padded to a lane multiple by ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _update_kernel(idx_ref, delta_ref, row_ref, out_ref):
+    out_ref[...] = row_ref[...] + delta_ref[...].astype(row_ref.dtype)
+
+
+def scatter_update_pallas(table, idx, delta, *, interpret: bool = True):
+    """table: (R, D); idx: (N,) unique; delta: (N, D). Rows += delta in place.
+
+    Aliasing: the table is donated; untouched rows pass through because every
+    grid step writes the block it read (identity for rows not in idx happens
+    by construction — only touched blocks are visited, others remain).
+    """
+    n = idx.shape[0]
+    D = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0)),          # delta
+            pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0)),  # row in
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _update_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        input_output_aliases={2: 0},               # table -> out (in-place)
+        interpret=interpret,
+    )(idx, delta, table)
+
+
+def _update_logged_kernel(idx_ref, delta_ref, row_ref, out_ref, log_ref):
+    log_ref[...] = row_ref[...]                    # undo image first (Fig. 7)
+    out_ref[...] = row_ref[...] + delta_ref[...].astype(row_ref.dtype)
+
+
+def scatter_update_logged_pallas(table, idx, delta, *, interpret: bool = True):
+    """Fused update + undo-log capture. Returns (new_table, old_rows)."""
+    n = idx.shape[0]
+    D = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0)),
+            pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _update_logged_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(table.shape, table.dtype),
+                   jax.ShapeDtypeStruct((n, D), table.dtype)],
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx, delta, table)

@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+
+The 512 placeholder host devices exist ONLY here (the env var above precedes
+every jax import, per the launch contract). Smoke tests and benches see the
+real device count.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, DLRM_IDS, SHAPES, get_arch
+from repro.configs.base import TrainConfig
+from repro.distributed import sharding
+from repro.launch import mesh as mesh_lib
+from repro.models.registry import get_api
+from repro.training import serve_loop, train_loop
+from repro.utils import hlo as hlo_util
+
+# TPU v5e-class constants (per spec)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape, *, with_labels=True):
+    """Training/prefill batch structs for one arch x shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.arch_type == "dlrm":
+        batch = {"dense": sd((B, cfg.dlrm_num_dense), jnp.float32),
+                 "sparse": sd((B, cfg.dlrm_num_tables,
+                               max(1, cfg.dlrm_num_sparse)), jnp.int32),
+                 "labels": sd((B,), jnp.float32)}
+        return batch
+    batch = {"tokens": sd((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = sd((B, S), jnp.int32)
+    if cfg.arch_type == "whisper":
+        batch["frames"] = sd((B, S, cfg.d_model), jnp.float32)
+    if cfg.arch_type == "qwen2vl":
+        batch["vision_embeds"] = sd((B, max(1, S // 8), cfg.d_model),
+                                    jnp.float32)
+        batch["positions3"] = sd((3, B, S), jnp.int32)
+    return batch
+
+
+def batch_shardings(cfg, batch_struct, mesh, dp):
+    """NamedSharding tree for a batch struct: leading batch dim over dp."""
+    def spec_for(key, leaf):
+        if key == "positions3":
+            return P(None, dp, None)
+        return P(dp, *([None] * (leaf.ndim - 1)))
+    return {k: NamedSharding(mesh, spec_for(k, v))
+            for k, v in batch_struct.items()}
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules per cell
+# ---------------------------------------------------------------------------
+
+
+def build_rules(bundle, shape, mesh):
+    prof = bundle.sharding
+    cfg = bundle.model
+    axes = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    act_rules = {"batch": dp}
+    # head sharding only when divisible (GQA kv often isn't); fall back to
+    # kv-sequence sharding (ring-attention-style partial softmax via XLA)
+    act_rules["heads"] = "model" if cfg.num_heads % tp == 0 else None
+    act_rules["kv_heads"] = "model" if cfg.num_kv_heads % tp == 0 else None
+    act_rules["kv_seq"] = None if act_rules["heads"] else "model"
+    if prof.seq_shard_activations and shape.kind == "train":
+        act_rules["seq"] = "model"
+    if shape.kind == "decode":
+        if shape.global_batch == 1:
+            # long-context: every axis carries cache sequence
+            act_rules["cache_seq"] = tuple(mesh.axis_names)
+            act_rules["batch"] = None
+        else:
+            act_rules["cache_seq"] = "model"
+    weight_rules = {}
+    if prof.fsdp:
+        # ZeRO-3-style: weights/optimizer sharded over data in addition to TP;
+        # expert tensors are already 2D (experts x embed) so only embed_w
+        # picks up the data axis (one mesh axis per tensor dim).
+        weight_rules["w_embed"] = "data"
+    return act_rules, weight_rules, dp
+
+
+def state_shardings(state_struct, weight_rules, mesh, dp, cfg):
+    specs = sharding.param_specs(state_struct, weight_rules,
+                                 set(mesh.axis_names))
+    specs = sharding.check_divisibility(state_struct, specs, mesh)
+    # activation-carry overrides
+    if state_struct.get("prefetch") is not None:
+        rows = state_struct["prefetch"]["rows"]
+        specs["prefetch"] = {"rows": P(dp, *([None] * (rows.ndim - 1)))}
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_shardings(cfg, cache_struct, mesh, dp, act_rules):
+    """Path-pattern specs for KV caches / recurrent state."""
+    cache_ax = act_rules.get("cache_seq")
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def nax(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= sizes[a]
+            return n
+        return sizes[ax]
+
+    def spec_for(path, leaf):
+        name = path.split("/")[-1]
+        shp = leaf.shape
+        def fit(dim, ax):
+            return ax if ax and dim % nax(ax) == 0 else None
+        if name in ("k", "v"):
+            # (L, B, S, Hkv, D) stacked or (B, S, Hkv, D)
+            off = leaf.ndim - 4
+            lead = (None,) * off
+            return P(*lead, fit(shp[off], dp), fit(shp[off + 1], cache_ax),
+                     None, None)
+        if name == "h":      # mamba state (G, B, H, N, P)
+            off = leaf.ndim - 4
+            return P(*((None,) * off), fit(shp[off], dp),
+                     fit(shp[off + 1], "model"), None, None)
+        if name == "conv":   # (G, B, K-1, di)
+            off = leaf.ndim - 3
+            return P(*((None,) * off), fit(shp[off], dp), None,
+                     fit(shp[off + 2], "model"))
+        if name == "s":      # rwkv state (L, B, H, K, K)
+            off = leaf.ndim - 4
+            return P(*((None,) * off), fit(shp[off], dp), None, None, None)
+        if name == "shift":  # (L, B, d)
+            return P(None, fit(shp[1], dp), None)
+        if name == "cmix":   # rwkv channel-mix shift (L, B, d)
+            return P(None, fit(shp[1], dp), None)
+        # whisper xkv etc: (L, B, Sf, H, D)
+        if leaf.ndim >= 2:
+            return P(None, fit(shp[1], dp), *([None] * (leaf.ndim - 2)))
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_struct)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in kp) for kp, _ in flat]
+    leaves = [NamedSharding(mesh, spec_for(p, leaf))
+              for p, (_, leaf) in zip(paths, flat)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _record_compiled(lowered, compiled, meta, mesh):
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    # NOTE: cost_analysis() counts while bodies once; our analyzer multiplies
+    # by scan trip counts (validated in tests/test_hlo_analyzer.py)
+    hlo = hlo_util.analyze(compiled.as_text())
+    n_dev = mesh.devices.size
+    flops = float(hlo["flops"])
+    bytes_acc = float(hlo["bytes"])
+    rec = dict(meta)
+    rec.update({
+        "devices": int(n_dev),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "xla_cost_flops": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": hlo["collective_bytes"],
+        "collectives": hlo["collectives"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        # roofline terms (seconds)
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_acc / HBM_BW,
+        "t_collective": hlo["collective_bytes"] / ICI_BW,
+    })
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    return rec
+
+
+def lower_train_cell(bundle, shape, mesh, *, relaxed=True):
+    cfg = bundle.model
+    train_cfg = bundle.train
+    act_rules, weight_rules, dp = build_rules(bundle, shape, mesh)
+    init_fn, strict_step, relaxed_step, warmup = train_loop.make_step_fns(
+        cfg, train_cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    with sharding.use_sharding(mesh, act_rules):
+        state_struct = jax.eval_shape(init_fn, key)
+        batch = input_specs(cfg, shape)
+        if relaxed:
+            # warmup fills the prefetch carry; lower the steady-state step
+            state_struct = jax.eval_shape(warmup, state_struct, batch)
+        st_sh = state_shardings(state_struct, weight_rules, mesh, dp, cfg)
+        b_sh = batch_shardings(cfg, batch, mesh, dp)
+        if relaxed:
+            fn = jax.jit(relaxed_step, in_shardings=(st_sh, b_sh, b_sh),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_struct, batch, batch)
+        else:
+            fn = jax.jit(strict_step, in_shardings=(st_sh, b_sh),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_struct, batch)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def lower_serve_cell(bundle, shape, mesh):
+    cfg = bundle.model
+    act_rules, weight_rules, dp = build_rules(bundle, shape, mesh)
+    api = get_api(cfg)
+    prefill_step, decode_step, _ = serve_loop.make_serve_fns(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    with sharding.use_sharding(mesh, act_rules):
+        params_struct = jax.eval_shape(
+            lambda k: api.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+        p_specs = sharding.param_specs({"state": params_struct}, weight_rules,
+                                       set(mesh.axis_names))["state"]
+        p_specs = sharding.check_divisibility(params_struct, p_specs, mesh)
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+        cache_struct = jax.eval_shape(lambda: api.init_cache(cfg, B, S))
+        c_sh = cache_shardings(cfg, cache_struct, mesh, dp, act_rules)
+
+        if shape.kind == "prefill":
+            batch = input_specs(cfg, shape, with_labels=False)
+            b_sh = batch_shardings(cfg, batch, mesh, dp)
+            fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh, c_sh),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_struct, batch, cache_struct)
+        else:  # decode
+            tokens = sd((B, 1), jnp.int32)
+            t_sh = NamedSharding(mesh, P(dp if B > 1 else None, None))
+            pos = sd((), jnp.int32)
+            extras = {}
+            e_sh = {}
+            if cfg.arch_type == "whisper":
+                extras = jax.eval_shape(
+                    lambda p, f: serve_loop.serve_extras(cfg, p,
+                                                         {"frames": f}),
+                    params_struct, sd((B, S, cfg.d_model), jnp.float32))
+                e_sh = cache_shardings(cfg, extras, mesh, dp, act_rules)
+            fn = jax.jit(decode_step,
+                         in_shardings=(p_sh, t_sh, NamedSharding(mesh, P()),
+                                       c_sh, e_sh),
+                         donate_argnums=(3,))
+            lowered = fn.lower(params_struct, tokens, pos, cache_struct,
+                               extras)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "experiments/dryrun", relaxed: bool = True):
+    bundle = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    cfg = bundle.model
+    if shape_name in bundle.shape_skips:
+        return {"arch": arch_id, "shape": shape_name, "skipped": True,
+                "reason": bundle.skip_reason}
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    meta = {"arch": arch_id, "shape": shape_name,
+            "mesh": "x".join(map(str, mesh.devices.shape)),
+            "multi_pod": multi_pod, "kind": shape.kind,
+            "global_batch": shape.global_batch, "seq_len": shape.seq_len}
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered, compiled = lower_train_cell(bundle, shape, mesh,
+                                             relaxed=relaxed)
+        counts = cfg.param_counts()
+        tokens = shape.global_batch * shape.seq_len
+        meta["model_flops"] = 6 * counts["active"] * tokens
+    else:
+        lowered, compiled = lower_serve_cell(bundle, shape, mesh)
+        counts = cfg.param_counts()
+        tokens = (shape.global_batch if shape.kind == "decode"
+                  else shape.global_batch * shape.seq_len)
+        meta["model_flops"] = 2 * counts["active"] * tokens
+    rec = _record_compiled(lowered, compiled, meta, mesh)
+    rec["compile_seconds"] = round(time.time() - t0, 1)
+    rec["params_total"] = counts["total"]
+    rec["params_active"] = counts["active"]
+    n_dev = mesh.devices.size
+    rec["model_flops_per_device"] = rec["model_flops"] / n_dev
+    rec["useful_flops_ratio"] = (rec["model_flops_per_device"]
+                                 / max(rec["hlo_flops_per_device"], 1.0))
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch_id}_{shape_name}_{rec['mesh']}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[dryrun] {tag}: bottleneck={rec['bottleneck']} "
+          f"t_comp={rec['t_compute']:.4f}s t_mem={rec['t_memory']:.4f}s "
+          f"t_coll={rec['t_collective']:.4f}s "
+          f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+          f"args={rec['memory']['argument_bytes']/2**30:.2f}GiB "
+          f"({rec['compile_seconds']}s compile)")
+    print("  memory_analysis:", compiled.memory_analysis())
+    ca = compiled.cost_analysis()
+    print("  cost_analysis: flops=%.3e bytes=%.3e" %
+          (ca.get("flops", 0), ca.get("bytes accessed", 0)))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="lower the strict (dependent) step instead")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                             relaxed=not args.strict)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("dry-run: all requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state. The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever devices exist, data x model (CPU tests: 1 x 1)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

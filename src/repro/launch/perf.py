@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lowers one (arch x shape) cell with a named
+variant (config/rule/implementation override), records the roofline terms,
+and appends the iteration to experiments/perf/<cell>.jsonl.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell rwkv6-3b:train_4k \
+        --variant wkv_bf16
+
+Run each variant in a fresh process (module-level switches + XLA state).
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import SHAPES, get_arch
+from repro.launch import dryrun as dr
+from repro.launch import mesh as mesh_lib
+
+
+def _analytic_wkv_kernel_terms(cfg, shape, n_dev):
+    """Pallas wkv6 kernel cost (per device): I/O once, state in VMEM.
+
+    fwd+bwd: backward recomputes the chunk (flash-style), so I/O ~3x fwd
+    (read inputs twice, write/read y + cotangents); flops ~3x fwd.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    H = cfg.d_model // 64
+    K = 64
+    c = 16  # chunk
+    tokens = B * S
+    io_bytes = tokens * H * K * (3 * 2 + 4 + 4)      # r,k,v bf16; logw,y f32
+    flops = tokens * H * (4 * c * K + 4 * K * K)     # scores+av+state+cross
+    L = cfg.num_layers
+    return {"flops": 3 * flops * L / n_dev,
+            "bytes": 3 * io_bytes * L / n_dev}
+
+
+# --------------------------------------------------------------------------
+# variants per cell: name -> callable(bundle) -> (bundle, rule_patch, note)
+# --------------------------------------------------------------------------
+
+
+def _v_baseline(b):
+    return b, {}, "paper-faithful baseline (relaxed schedule)"
+
+
+def _v_wkv_bf16(b):
+    from repro.models import rwkv6
+    rwkv6.WKV_COMPUTE_BF16 = True
+    return b, {}, "wkv chunk factors carried in bf16 (halve f32 traffic)"
+
+
+def _v_wkv_kernel(b):
+    from repro.models import rwkv6
+    rwkv6.WKV_IMPL = "kernel_stub"
+    return b, {}, ("Pallas wkv6 kernel (state in VMEM); kernel cost added "
+                   "analytically — see kernels/wkv6.py")
+
+
+def _v_wkv_kernel_bf16(b):
+    from repro.models import rwkv6
+    rwkv6.WKV_IMPL = "kernel_stub"
+    rwkv6.WKV_COMPUTE_BF16 = True
+    return b, {}, "Pallas wkv6 kernel + bf16 mixes"
+
+
+def _v_no_seqshard(b):
+    s = dataclasses.replace(b.sharding, seq_shard_activations=False)
+    return dataclasses.replace(b, sharding=s), {}, \
+        "disable Megatron-SP residual sharding"
+
+
+def _v_loss_chunk_128(b):
+    m = b.model.replace(loss_chunk=128)
+    return dataclasses.replace(b, model=m), {}, "CE seq-chunk 512 -> 128"
+
+
+def _v_attn_chunk_256(b):
+    m = b.model.replace(attn_chunk=256)
+    return dataclasses.replace(b, model=m), {}, "attention q-chunk -> 256"
+
+
+def _v_attn_chunk_128(b):
+    m = b.model.replace(attn_chunk=128)
+    return dataclasses.replace(b, model=m), {}, "attention q-chunk -> 128"
+
+
+def _v_no_remat(b):
+    m = b.model.replace(remat=False)
+    return dataclasses.replace(b, model=m), {}, \
+        "no per-layer remat (memory for recompute flops)"
+
+
+def _v_fsdp_off(b):
+    s = dataclasses.replace(b.sharding, fsdp=False)
+    return dataclasses.replace(b, sharding=s), {}, "disable FSDP (TP only)"
+
+
+def _v_heads_uneven(b):
+    # shard 56 q-heads over 16 TP ranks anyway (XLA pads to 64): trades 14%
+    # padding waste for removing the 16x head replication of scores
+    return b, {"heads": "model", "kv_seq": None}, \
+        "uneven head sharding (padded) instead of head replication + kv_seq"
+
+
+def _v_lookup_near_data(b):
+    from repro.core import embedding_ops
+    embedding_ops._state.mode = "near_data"
+    return b, {}, "force near-data pool lookup (psum of reduced rows)"
+
+
+def _v_lookup_gather(b):
+    from repro.core import embedding_ops
+    embedding_ops._state.mode = "table_gather"
+    return b, {}, "force table-gather pool lookup (replicate rows)"
+
+
+VARIANTS = {
+    "baseline": _v_baseline,
+    "wkv_bf16": _v_wkv_bf16,
+    "wkv_kernel": _v_wkv_kernel,
+    "wkv_kernel_bf16": _v_wkv_kernel_bf16,
+    "no_seqshard": _v_no_seqshard,
+    "loss_chunk_128": _v_loss_chunk_128,
+    "attn_chunk_256": _v_attn_chunk_256,
+    "attn_chunk_128": _v_attn_chunk_128,
+    "no_remat": _v_no_remat,
+    "fsdp_off": _v_fsdp_off,
+    "heads_uneven": _v_heads_uneven,
+    "lookup_near_data": _v_lookup_near_data,
+    "lookup_gather": _v_lookup_gather,
+}
+
+
+def run(cell: str, variant: str, out_dir="experiments/perf",
+        multi_pod=False):
+    arch_id, shape_name = cell.split(":")
+    bundle = get_arch(arch_id)
+    bundle, rule_patch, note = VARIANTS[variant](bundle)
+    shape = SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+
+    if rule_patch:
+        orig = dr.build_rules
+        def patched(b, s, m):
+            act, w, dp = orig(b, s, m)
+            act.update(rule_patch)
+            return act, w, dp
+        dr.build_rules = patched
+
+    if shape.kind == "train":
+        lowered, compiled = dr.lower_train_cell(bundle, shape, mesh)
+    else:
+        lowered, compiled = dr.lower_serve_cell(bundle, shape, mesh)
+    meta = {"cell": cell, "variant": variant, "note": note,
+            "mesh": "x".join(map(str, mesh.devices.shape))}
+    rec = dr._record_compiled(lowered, compiled, meta, mesh)
+
+    if variant.startswith("wkv_kernel"):
+        extra = _analytic_wkv_kernel_terms(bundle.model, shape,
+                                           mesh.devices.size)
+        rec["kernel_terms"] = extra
+        rec["hlo_flops_per_device"] += extra["flops"]
+        rec["hlo_bytes_per_device"] += extra["bytes"]
+        rec["t_compute"] = rec["hlo_flops_per_device"] / dr.PEAK_FLOPS
+        rec["t_memory"] = rec["hlo_bytes_per_device"] / dr.HBM_BW
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell.replace(":", "_") + ".jsonl"),
+              "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"[perf] {cell} {variant}: t_comp={rec['t_compute']:.3f}s "
+          f"t_mem={rec['t_memory']:.3f}s t_coll={rec['t_collective']:.3f}s "
+          f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+          f"bottleneck={rec['bottleneck']}  # {note}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    run(args.cell, args.variant, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,367 @@
+"""Shared model building blocks (pure-functional JAX).
+
+Conventions:
+  * params are nested dicts of jnp arrays
+  * activations in ``cfg.dtype`` (bf16 default), accumulation/softmax in fp32
+  * attention is GQA, computed chunked (flash-style streaming softmax) so the
+    32k-prefill cells never materialise an S x S score tensor
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dense_init(key, d_in, d_out, dtype):
+    scale = math.sqrt(1.0 / d_in)
+    return uniform_init(key, (d_in, d_out), scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                   # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple[int, ...]):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions3: (3, B, S) (temporal, height, width);
+    sections: half-dim split, sum(sections) == D // 2.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (D/2,)
+    # angles per modality: (3, B, S, D/2)
+    angles = positions3[..., None].astype(jnp.float32) * freqs
+    # select modality per frequency slot
+    sect_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                         total_repeat_length=d // 2)      # (D/2,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(angles, 0, -1),                      # (B, S, D/2, 3)
+        sect_id[None, None, :, None], axis=-1)[..., 0]    # (B, S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, chunked / flash-style)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      kv_chunk: int = 1024, positions_q=None, positions_k=None):
+    """Q-chunked attention: scan over query blocks, full-KV softmax inside.
+
+    Never materialises (Sq x Sk) — peak score tensor is (B, H, Tq, Sk) for
+    one query block, and the block body is rematerialised in the backward
+    pass (flash-style recompute), so the scan saves no per-block scores.
+
+    Heads stay FLAT (GQA kv expanded to Hq) so the `heads` sharding
+    constraint survives into the score tensor — factoring into (Kv, G)
+    loses single-axis shardability when neither factor divides the TP size.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D). Hq % Hkv == 0 (GQA).
+    Returns (B, Sq, Hq, D).
+    """
+    from repro.distributed.sharding import constrain as _constrain
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    q_chunk = min(q_chunk, Sq)
+    nq = -(-Sq // q_chunk)
+
+    if G > 1:  # expand kv to full heads; sharding follows q's heads axis
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        k = _constrain(k, ("batch", "kv_seq", "heads", None))
+        v = _constrain(v, ("batch", "kv_seq", "heads", None))
+
+    def pad_to(x, n, axis):
+        pad = n - x.shape[axis]
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    qp = pad_to(q, nq * q_chunk, 1).reshape(B, nq, q_chunk, Hq, D)
+    qp = jnp.moveaxis(qp, 1, 0)                           # (nq,B,Tq,H,D)
+    if positions_q is None:
+        positions_q = jnp.arange(Sq)
+    if positions_k is None:
+        positions_k = jnp.arange(Sk)
+    pq = pad_to(positions_q, nq * q_chunk, 0).reshape(nq, q_chunk)
+
+    @jax.checkpoint  # recompute scores in backward: nothing saved per block
+    def q_block(qi, pqi):
+        # qi: (B,Tq,H,D)
+        s = jnp.einsum("bthd,bshd->bhts", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = _constrain(s, ("batch", "heads", None, "kv_seq"))
+        if causal:
+            cm = pqi[:, None] >= positions_k[None, :]     # (Tq,Sk)
+            s = jnp.where(cm[None, :, :], s, -1e30)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bhts,bshd->bthd", (p / l).astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.astype(qi.dtype)                         # (B,Tq,H,D)
+
+    def body(carry, xs):
+        qi, pqi = xs
+        return carry, q_block(qi, pqi)
+
+    _, outs = jax.lax.scan(body, None, (qp, pq))          # (nq,B,Tq,H,D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, Hq, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, kv_len):
+    """Single-token decode. q: (B, 1, Hq, D); caches: (B, Smax, Hkv, D).
+
+    kv_len: (B,) or scalar number of valid cache entries (new token already
+    written). Simple einsum form — scores are (B, Hq, Smax), small for decode.
+    """
+    B, _, Hq, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    pos = jnp.arange(Smax)
+    kv_len = jnp.asarray(kv_len)
+    mask = pos[None, :] < kv_len.reshape(-1, 1)           # (B, Smax)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, nq * hd, dt),
+        "wk": dense_init(ks[1], d, nkv * hd, dt),
+        "wv": dense_init(ks[2], d, nkv * hd, dt),
+        "wo": dense_init(ks[3], nq * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def attention_fwd(p, cfg, x, positions, *, causal=True, cache=None,
+                  cache_index=None, cross_kv=None, positions3=None):
+    """Generic attention.
+
+    x: (B, S, d). positions: (B, S) or (S,) global positions.
+    cache: optional dict(k, v) of (B, Smax, Hkv, D) — decode path when S == 1.
+    cross_kv: optional (k, v) for cross-attention (whisper decoder).
+    Returns (out, new_cache).
+    """
+    from repro.distributed.sharding import constrain as _constrain
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    q = (x @ p["wq"]).reshape(B, S, nq, hd)
+    q = _constrain(q, ("batch", None, "heads", None))
+    if cross_kv is None:
+        k = (x @ p["wk"]).reshape(B, S, nkv, hd)
+        v = (x @ p["wv"]).reshape(B, S, nkv, hd)
+        k = _constrain(k, ("batch", "kv_seq", "kv_heads", None))
+        v = _constrain(v, ("batch", "kv_seq", "kv_heads", None))
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cross_kv is None:
+        if cfg.mrope_sections and positions3 is not None:
+            q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+        elif cfg.rope_theta > 0:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cache is not None and cross_kv is None:
+        idx = cache_index if cache_index is not None else 0
+        if S == 1:
+            from repro.distributed import sharding as _sh
+            ctx = _sh.current()
+            if ctx is not None and ctx.rules.get("cache_seq"):
+                # context-parallel decode: cache sharded along sequence
+                from repro.distributed.context_parallel import \
+                    decode_attention_cp
+                out, kc, vc = decode_attention_cp(
+                    q, cache["k"], cache["v"], k, v, jnp.asarray(idx))
+                return (out.reshape(B, S, nq * hd) @ p["wo"]), \
+                    {"k": kc, "v": vc}
+        # write new K/V at cache_index (decode: S==1; prefill: S==chunk)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        if S == 1:
+            out = decode_attention(q, kc, vc, idx + 1)
+            return (out.reshape(B, S, nq * hd) @ p["wo"]), new_cache
+        if isinstance(idx, int) and idx + S <= kc.shape[1]:
+            k, v = kc[:, : idx + S], vc[:, : idx + S]
+        else:  # traced index (e.g. under remat): attend over the full cache —
+            # the causal position mask hides the unwritten tail
+            k, v = kc, vc
+
+    if S == 1 and cross_kv is not None:
+        out = decode_attention(q, k, v, k.shape[1])
+    else:
+        pos_q = positions if positions.ndim == 1 else positions[0]
+        out = chunked_attention(q, k, v, causal=causal,
+                                q_chunk=min(cfg.attn_chunk, 512),
+                                kv_chunk=cfg.attn_chunk,
+                                positions_q=pos_q,
+                                positions_k=jnp.arange(k.shape[1]))
+    return (out.reshape(B, S, nq * hd) @ p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {"wi": dense_init(ks[0], d, f, dt),
+                "wg": dense_init(ks[1], d, f, dt),
+                "wo": dense_init(ks[2], f, d, dt)}
+    return {"wi": dense_init(ks[0], d, f, dt),
+            "wo": dense_init(ks[2], f, d, dt)}
+
+
+def mlp_fwd(p, cfg, x):
+    if cfg.act == "silu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x @ p["wi"], approximate=True) @ p["wo"]
+    if cfg.act == "relu_sq":
+        return jnp.square(jax.nn.relu(x @ p["wi"])) @ p["wo"]
+    raise ValueError(cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# Memory-efficient cross-entropy (chunked over tokens)
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(hidden, w_out, labels, *, chunk: int = 8192,
+                         mask=None):
+    """Cross-entropy without materialising (tokens x vocab) logits.
+
+    hidden: (B, S, d); w_out: (d, V); labels: (B, S) int32; mask optional.
+    Scans sequence chunks (batch dim untouched — keeps DP sharding layouts
+    stable); each chunk's logits are rematerialised in the backward pass.
+    Returns (sum_loss, sum_weight).
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hidden = jnp.moveaxis(hidden.reshape(B, n, chunk, d), 1, 0)   # (n,B,c,d)
+    labels = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    mask = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+    from repro.distributed.sharding import constrain as _constrain
+
+    @jax.checkpoint
+    def chunk_loss(w, h, y, m):
+        logits = (h @ w).astype(jnp.float32)              # (B, c, V)
+        logits = _constrain(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - ll) * m), jnp.sum(m)
+
+    def body(carry, xs):
+        h, y, m = xs
+        l, c = chunk_loss(w_out, h, y, m)
+        return (carry[0] + l, carry[1] + c), None
+
+    (loss, count), _ = jax.lax.scan(body, (0.0, 0.0), (hidden, labels, mask))
+    return loss, count
+
+
+def sinusoidal_positions(S: int, d: int):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe

@@ -1,0 +1,165 @@
+"""Selective SSM block (Jamba's Mamba layer), SSD/chunked formulation.
+
+Hardware adaptation (see DESIGN.md §8): Jamba ships Mamba-1 (per-(channel,
+state) diagonal decay), whose exact chunked form has no MXU-friendly matmul
+shape. We use the Mamba-2 SSD structure — channels grouped into heads with a
+scalar per-head decay — which admits the chunked matmul formulation that maps
+onto the MXU, and is the variant later Jamba-class models adopted. The
+recurrence semantics (data-dependent decay, selective B/C, conv front, gated
+output) are preserved.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+HEAD_P = 64  # channels per SSD head
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = cfg.mamba.d_inner(d)
+    ds = cfg.mamba.d_state
+    dc = cfg.mamba.d_conv
+    nh = di // HEAD_P
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": layers.uniform_init(ks[1], (dc, di), math.sqrt(1.0 / dc), dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "bc_proj": layers.dense_init(ks[2], di, 2 * ds, dt),      # B, C
+        "dt_proj": layers.dense_init(ks[3], di, nh, dt),          # per-head dt
+        "dt_bias": jnp.asarray(
+            jnp.log(jnp.expm1(jax.random.uniform(ks[4], (nh,), jnp.float32,
+                                                 0.001, 0.1))), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_proj": layers.dense_init(ks[5], di, d, dt),
+        "norm_w": jnp.ones((di,), dt),
+    }
+
+
+def _conv1d_causal(x, w, b):
+    """Depthwise causal conv. x: (B, S, di); w: (K, di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssd_chunked(xh, dt, a, B_, C_, chunk: int):
+    """Chunked scan.  xh: (B,S,H,P); dt: (B,S,H); a: (H,)<0 ; B_/C_: (B,S,N).
+
+    y_t = C_t . h_t,  h_t = exp(dt_t a) h_{t-1} + dt_t x_t B_t^T
+    Returns y: (B,S,H,P).
+    """
+    Bb, S, H, P = xh.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:  # largest divisor of S not exceeding the requested chunk
+        chunk -= 1
+    nc = S // chunk
+    # per-step log decay (negative)
+    ldec = dt * a[None, None, :]                              # (B,S,H)
+    xs = (xh * dt[..., None]).reshape(Bb, nc, chunk, H, P)
+    ld = ldec.reshape(Bb, nc, chunk, H)
+    Bc = B_.reshape(Bb, nc, chunk, N)
+    Cc = C_.reshape(Bb, nc, chunk, N)
+
+    cum = jnp.cumsum(ld, axis=2)                              # (B,nc,Q,H)
+    # intra-chunk: y_t += C_t.B_j (exp(cum_t - cum_j)) x_j  for j<=t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmask = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bntm,bnsm->bnts", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))                   # (B,nc,Q,Q)
+    y_in = jnp.einsum("bnts,bntsh,bnshp->bnthp", cb, dmask,
+                      xs.astype(jnp.float32))
+
+    # chunk-level states: h_chunk_end contribution of chunk n
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,Q,H)
+    state_c = jnp.einsum("bnsm,bnsh,bnshp->bnhmp", Bc.astype(jnp.float32),
+                         dec_to_end, xs.astype(jnp.float32))  # (B,nc,H,N,P)
+    chunk_dec = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, cd = inp                                          # (B,H,N,P),(B,H)
+        h_new = h * cd[..., None, None] + st
+        return h_new, h                                       # emit state BEFORE chunk
+
+    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    h_final, h_prev = jax.lax.scan(scan_fn, h0,
+                                   (jnp.moveaxis(state_c, 1, 0),
+                                    jnp.moveaxis(chunk_dec, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                       # (B,nc,H,N,P)
+    # inter-chunk: y_t += C_t . (exp(cum_t) h_prev)
+    y_cross = jnp.einsum("bntm,bnth,bnhmp->bnthp", Cc.astype(jnp.float32),
+                         jnp.exp(cum), h_prev)
+    y = (y_in + y_cross).reshape(Bb, S, H, P)
+    return y, h_final
+
+
+def mamba_fwd(p, cfg, x, *, state=None, chunk: int = 128):
+    """x: (B,S,d). state: decode-mode dict(h:(B,H,N,P), conv:(B,K-1,di)).
+
+    Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    di = cfg.mamba.d_inner(d)
+    ds = cfg.mamba.d_state
+    nh = di // HEAD_P
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                         # (B,S,di) each
+
+    K = cfg.mamba.d_conv
+    if state is not None and S == 1:
+        # decode: rolling conv window over raw in_proj activations
+        win = jnp.concatenate([state["conv"], xi], axis=1)    # (B,K,di)
+        xc = jnp.einsum("bkd,kd->bd", win, p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)[:, None, :]
+        new_conv = win[:, 1:]
+    else:
+        xc = jax.nn.silu(_conv1d_causal(xi, p["conv_w"], p["conv_b"]))
+        if S >= K - 1:
+            new_conv = xi[:, S - (K - 1):]
+        else:
+            new_conv = jnp.pad(xi, ((0, 0), (K - 1 - S, 0), (0, 0)))
+
+    bc = xc @ p["bc_proj"]
+    B_, C_ = jnp.split(bc.astype(jnp.float32), 2, axis=-1)    # (B,S,N)
+    dt = jax.nn.softplus((xc @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])                      # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                  # (H,) < 0
+    xh = xc.reshape(B, S, nh, HEAD_P)
+
+    if state is not None and S == 1:
+        dec = jnp.exp(dt[:, 0] * a[None, :])                  # (B,H)
+        upd = jnp.einsum("bm,bhp->bhmp", B_[:, 0],
+                         (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32))
+        h = state["h"] * dec[..., None, None] + upd
+        y = jnp.einsum("bm,bhmp->bhp", C_[:, 0], h).reshape(B, 1, di)
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        y, h_final = _ssd_chunked(xh.astype(jnp.float32), dt, a, B_, C_, chunk)
+        y = y.reshape(B, S, di)
+        # prefill: hand the final recurrent state to the decode loop
+        new_state = {"h": h_final, "conv": new_conv} if state is not None else None
+    y = y + xc.astype(jnp.float32) * jnp.repeat(
+        p["d_skip"], HEAD_P)[None, None, :]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state
+
+
+def init_mamba_state(cfg, batch: int):
+    d = cfg.d_model
+    di = cfg.mamba.d_inner(d)
+    nh = di // HEAD_P
+    return {"h": jnp.zeros((batch, nh, cfg.mamba.d_state, HEAD_P), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.mamba.d_conv - 1, di),
+                              cfg.activation_dtype)}

@@ -1,0 +1,181 @@
+"""Mixture-of-Experts FFN (top-k routing, expert-parallel shard_map).
+
+Distribution (mirrors the disaggregated-pool contract): experts are
+row-sharded across the ``model`` mesh axis; tokens stay sharded across the
+``data`` axes and replicated (or sequence-sharded, Megatron-SP) across
+``model``. Each model shard routes the *local* token set against the full
+router, computes only the experts it owns on capacity-bounded slices, and
+contributes a partial output; partials combine with ``psum`` (or
+``psum_scatter`` back into the sequence shards under SP). Only the reduced
+``(tokens, d)`` vectors cross the interconnect — raw expert weights never
+move. Dispatch is sort-based with per-expert ``dynamic_slice`` capacity
+windows, so the only materialised buffer is (E_local, C, d).
+
+Outside a sharding context the same algorithm runs unsharded (E_local = E),
+so CPU tests exercise the identical code path.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding
+from repro.models import layers
+
+
+def init_moe(key, cfg):
+    d = cfg.d_model
+    e, f = cfg.moe.num_experts, cfg.moe.d_ff_expert
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 5)
+    scale = math.sqrt(1.0 / d)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, jnp.float32),
+        "wi": layers.uniform_init(ks[1], (e, d, f), scale, dt),
+        "wg": layers.uniform_init(ks[2], (e, d, f), scale, dt),
+        "wo": layers.uniform_init(ks[3], (e, f, d), math.sqrt(1.0 / f), dt),
+    }
+    if cfg.moe.dense_residual:
+        p["dense"] = layers.init_mlp(ks[4], cfg)  # arctic: parallel dense FFN
+    return p
+
+
+def _capacity(T: int, k: int, e: int, factor: float = 1.25) -> int:
+    c = int(math.ceil(T * k / e * factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def route(router_w, xt, top_k: int):
+    """Router (pjit side): returns (gate, choice, aux). xt: (T, d)."""
+    logits = xt.astype(jnp.float32) @ router_w              # (T, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, choice = jax.lax.top_k(probs, top_k)              # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    e = router_w.shape[1]
+    counts = jnp.bincount(choice.reshape(-1), length=e)
+    me = probs.mean(0)
+    ce = (counts / jnp.maximum(counts.sum(), 1)).astype(jnp.float32)
+    aux = e * jnp.sum(me * ce)
+    return gate, choice, aux
+
+
+def _moe_local(xt, gate, choice, wi, wg, wo, *, top_k: int, num_experts: int,
+               e_offset, capacity: int):
+    """Dispatch pre-routed tokens to the E_local experts in (wi, wg, wo).
+
+    xt: (T, d); gate/choice: (T, k); wi/wg: (E_loc, d, f); wo: (E_loc, f, d);
+    e_offset: first global expert id owned here. Returns partial_out.
+    """
+    T, d = xt.shape
+    e_loc = wi.shape[0]
+    flat_expert = choice.reshape(-1)                        # (T*k,)
+    order = jnp.argsort(flat_expert)
+    tok_of = order // top_k                                 # (T*k,) sorted
+    gate_of = gate.reshape(-1)[order]
+    counts = jnp.bincount(flat_expert, length=num_experts)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+
+    C = capacity
+    tok_pad = jnp.pad(tok_of, (0, C))
+    gate_pad = jnp.pad(gate_of, (0, C))
+
+    def expert_slice(i):
+        e_glob = e_offset + i
+        off = offsets[e_glob]
+        toks = jax.lax.dynamic_slice(tok_pad, (off,), (C,))
+        gts = jax.lax.dynamic_slice(gate_pad, (off,), (C,))
+        valid = jnp.arange(C) < counts[e_glob]
+        return toks, jnp.where(valid, gts, 0.0)
+
+    toks, gts = jax.vmap(expert_slice)(jnp.arange(e_loc))   # (E_loc, C)
+    xe = jnp.take(xt, toks.reshape(-1), axis=0) \
+        .reshape(e_loc, C, d)                               # (E_loc, C, d)
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    g = jnp.einsum("ecd,edf->ecf", xe, wg)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo)
+    y = y * gts[..., None].astype(y.dtype)                  # gate (+mask drops)
+
+    out = jnp.zeros((T, d), y.dtype) \
+        .at[toks.reshape(-1)].add(y.reshape(-1, d))
+    return out
+
+
+def moe_fwd(p, cfg, x):
+    """x: (B, S, d) -> (B, S, d). Capacity-dropped tokens pass through 0."""
+    B, S, d = x.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    ctx = sharding.current()
+
+    # routing + aux loss on the pjit side (computed once, sharded over dp)
+    gate, choice, aux = route(p["router"], x.reshape(B * S, d), k)
+    gate = gate.reshape(B, S, k)
+    choice = choice.reshape(B, S, k)
+
+    if ctx is None or "model" not in ctx.mesh_axes:
+        C = _capacity(B * S, k, e)
+        out = _moe_local(x.reshape(B * S, d), gate.reshape(-1, k),
+                         choice.reshape(-1, k), p["wi"], p["wg"], p["wo"],
+                         top_k=k, num_experts=e, e_offset=0, capacity=C)
+        out = out.reshape(B, S, d)
+        if cfg.moe.dense_residual:
+            out = out + layers.mlp_fwd(p["dense"], cfg, x)
+        return out.astype(x.dtype), aux
+
+    mesh = ctx.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    e_loc = e // tp
+    dp_rule = ctx.rules.get("batch") or ()
+    if isinstance(dp_rule, str):
+        dp_rule = (dp_rule,)
+    dp = tuple(a for a in dp_rule if a in ctx.mesh_axes)
+    dp_total = 1
+    for a in dp:
+        dp_total *= sizes[a]
+    if dp_total == 0 or B % max(dp_total, 1):
+        dp, dp_total = (), 1                                # batch unshardable
+    seq_ax = ctx.rules.get("seq") if S > 1 else None
+    seq_ax = seq_ax if seq_ax in ctx.mesh_axes else None
+    T_group = (B // max(dp_total, 1)) * S                   # tokens per dp group
+    C = _capacity(T_group, k, e)
+
+    def body(xl, gl, cl, wi, wg, wo):
+        # xl: (B_loc, S_loc, d) — S_loc = S/tp under SP else S
+        b_loc = xl.shape[0]
+        if seq_ax is not None:
+            xl = jax.lax.all_gather(xl, seq_ax, axis=1, tiled=True)
+            gl = jax.lax.all_gather(gl, seq_ax, axis=1, tiled=True)
+            cl = jax.lax.all_gather(cl, seq_ax, axis=1, tiled=True)
+        e_offset = jax.lax.axis_index("model") * e_loc
+        out = _moe_local(xl.reshape(-1, d), gl.reshape(-1, k),
+                         cl.reshape(-1, k), wi, wg, wo, top_k=k,
+                         num_experts=e, e_offset=e_offset, capacity=C)
+        out = out.reshape(b_loc, S, d)
+        if seq_ax is not None:
+            out = jax.lax.psum_scatter(out, seq_ax, scatter_dimension=1,
+                                       tiled=True)
+        else:
+            out = jax.lax.psum(out, "model")
+        return out
+
+    xspec = P(dp if dp else None, seq_ax, None)
+    kspec = P(dp if dp else None, seq_ax, None)
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, kspec, kspec, P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=xspec)(x, gate, choice, p["wi"], p["wg"], p["wo"])
+    if cfg.moe.dense_residual:
+        out = out + layers.mlp_fwd(p["dense"], cfg, x)
+    return out.astype(x.dtype), aux
+
+
+def touched_experts(cfg, choice):
+    """Expert ids touched by a batch — the sparse-tier undo-log set."""
+    e = cfg.moe.num_experts
+    return jnp.zeros((e,), jnp.bool_).at[choice.reshape(-1)].set(True)

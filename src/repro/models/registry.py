@@ -1,0 +1,60 @@
+"""Uniform model API: name -> ModelApi(init, loss, prefill, decode, cache)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dlrm, rwkv6, transformer, whisper
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    init: Callable          # (key, cfg) -> params
+    loss: Callable          # (params, cfg, batch) -> scalar
+    init_cache: Optional[Callable] = None   # (cfg, B, Smax) -> caches
+    prefill: Optional[Callable] = None      # (params, cfg, tokens, caches, **kw)
+    decode_step: Optional[Callable] = None  # (params, cfg, tokens, pos, caches, **kw)
+
+
+def _whisper_prefill(params, cfg, tokens, caches, **kw):
+    return whisper.prefill(params, cfg, tokens, caches, frames=kw["frames"])
+
+
+def _whisper_decode(params, cfg, tokens, pos, caches, **kw):
+    # decode against precomputed cross-attention K/V
+    if "xkv" not in kw:
+        enc = whisper.encode(params, cfg, kw["frames"])
+        kw = dict(kw, xkv=whisper.cross_kv(params, cfg, enc))
+    return whisper.decode_step(params, cfg, tokens, pos, caches, xkv=kw["xkv"])
+
+
+_REGISTRY: dict[str, ModelApi] = {
+    "transformer": ModelApi(
+        init=transformer.init_lm, loss=transformer.lm_loss,
+        init_cache=transformer.init_kv_cache,
+        prefill=transformer.prefill, decode_step=transformer.decode_step),
+    "qwen2vl": ModelApi(
+        init=transformer.init_lm, loss=transformer.lm_loss,
+        init_cache=transformer.init_kv_cache,
+        prefill=transformer.prefill, decode_step=transformer.decode_step),
+    "jamba": ModelApi(
+        init=transformer.init_lm, loss=transformer.lm_loss,
+        init_cache=transformer.init_kv_cache,
+        prefill=transformer.prefill, decode_step=transformer.decode_step),
+    "rwkv6": ModelApi(
+        init=rwkv6.init_lm, loss=rwkv6.lm_loss,
+        init_cache=rwkv6.init_kv_cache,
+        prefill=rwkv6.prefill, decode_step=rwkv6.decode_step),
+    "whisper": ModelApi(
+        init=whisper.init_lm, loss=whisper.lm_loss,
+        init_cache=whisper.init_kv_cache,
+        prefill=_whisper_prefill, decode_step=_whisper_decode),
+    "dlrm": ModelApi(init=dlrm.init_dlrm, loss=dlrm.bce_loss),
+}
+
+
+def get_api(cfg) -> ModelApi:
+    return _REGISTRY[cfg.arch_type]

@@ -1,0 +1,276 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay.
+
+Time-mix (wkv6): per-head linear-attention state S in R^{Dk x Dv} with a
+data-dependent per-channel decay w_t in (0,1):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (diag(u) k_t^T v_t + S_{t-1})        (u = "bonus" for current)
+
+Computed in chunked matmul form (flash-linear-attention style): within a
+chunk, score_tj = sum_c r_tc k_jc exp(L_tc - L_jc) with L the running log
+decay; factorised as (r .* exp(L_t - L_0)) @ (k .* exp(L_0 - L_j))^T which is
+MXU-friendly. Per-step log decay is clamped to >= LOG_W_MIN so the
+exp(L_0 - L_j) factor stays finite in fp32 — the sequential oracle in
+``kernels/ref.py`` applies the identical clamp, so chunked == sequential to
+machine precision (property-tested).
+
+Token-shift and the decay/mix LoRAs follow the RWKV-6 block layout; channel
+mix is the relu^2 FFN.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding_ops
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+HEAD_K = 64          # rwkv6 head size
+LORA_R = 64          # decay lora rank
+# Chunk-safety: the factorised intra-chunk form materialises exp(+/-cumsum of
+# log decay); with |logw| <= 5 and chunk 16 the extreme exponent is 80, inside
+# fp32 range (e^88 overflows, e^-87 underflows). The sequential oracle applies
+# the identical clamp so chunked == sequential holds exactly.
+LOG_W_MIN = -5.0     # per-step log-decay clamp
+WKV_CHUNK = 16
+
+# §Perf iteration switches (set by repro.launch.perf; defaults = baseline)
+WKV_IMPL = "chunked"         # "chunked" | "kernel_stub" (Pallas target, cost
+                             # accounted analytically — CPU can't lower Mosaic)
+WKV_COMPUTE_BF16 = False     # carry the big (B,S,H,K) factors in bf16
+
+
+def _token_shift(x, prev):
+    """shift right by one; prev: (B, d) last token of previous segment."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def init_rwkv(key, cfg):
+    d = cfg.d_model
+    H = d // HEAD_K
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 16)
+    tm = {
+        "mu": layers.uniform_init(ks[0], (5, d), 0.5, jnp.float32),  # r,k,v,g,w mix
+        "wr": layers.dense_init(ks[1], d, d, dt),
+        "wk": layers.dense_init(ks[2], d, d, dt),
+        "wv": layers.dense_init(ks[3], d, d, dt),
+        "wg": layers.dense_init(ks[4], d, d, dt),
+        "wo": layers.dense_init(ks[5], d, d, dt),
+        "w_lora_a": layers.dense_init(ks[6], d, LORA_R, jnp.float32),
+        "w_lora_b": layers.dense_init(ks[7], LORA_R, d, jnp.float32),
+        "w_base": jax.random.uniform(ks[8], (d,), jnp.float32, -6.0, -5.0),
+        "u": layers.uniform_init(ks[9], (H, HEAD_K), 0.3, jnp.float32),
+        "ln_w": jnp.ones((d,), jnp.float32),   # per-head groupnorm weight
+        "ln_b": jnp.zeros((d,), jnp.float32),
+    }
+    cm = {
+        "mu": layers.uniform_init(ks[10], (2, d), 0.5, jnp.float32),
+        "wk": layers.dense_init(ks[11], d, cfg.d_ff, dt),
+        "wv": layers.dense_init(ks[12], cfg.d_ff, d, dt),
+        "wr": layers.dense_init(ks[13], d, d, dt),
+    }
+    return {"norm1": jnp.ones((d,), dt), "norm2": jnp.ones((d,), dt),
+            "tmix": tm, "cmix": cm}
+
+
+def init_lm(key, cfg):
+    ks = jax.random.split(key, 4)
+    dt = cfg.activation_dtype
+    table = (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+             * 0.02).astype(dt)
+    lkeys = jax.random.split(ks[1], cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_rwkv(k, cfg))(lkeys)
+    return {"embed": {"table": table}, "blocks": blocks,
+            "norm_in": jnp.ones((cfg.d_model,), dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": layers.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dt)}
+
+
+# ---------------------------------------------------------------------------
+# wkv6 core (chunked)
+# ---------------------------------------------------------------------------
+
+
+def wkv6_chunked(r, k, v, logw, u, s0, chunk: int = WKV_CHUNK):
+    """r,k,v: (B,S,H,K); logw: (B,S,H,K) (<0, clamped); u: (H,K);
+    s0: (B,H,K,K) initial state. Returns (y: (B,S,H,K), s_final)."""
+    B, S, H, K = r.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+    cdt = jnp.bfloat16 if WKV_COMPUTE_BF16 else jnp.float32
+    rc = r.reshape(B, nc, chunk, H, K).astype(cdt)
+    kc = k.reshape(B, nc, chunk, H, K).astype(cdt)
+    vc = v.reshape(B, nc, chunk, H, K).astype(cdt)
+    lw = logw.reshape(B, nc, chunk, H, K).astype(jnp.float32)
+
+    # cumulative log decay: state passed from step j to step t (t > j)
+    # decays by steps j+1..t-1 = cum_excl_t - cum_incl_j
+    cum_incl = jnp.cumsum(lw, axis=2)                      # includes step t
+    cum_excl = cum_incl - lw
+    r_f = (rc.astype(jnp.float32) * jnp.exp(cum_excl)).astype(cdt)
+    k_f = (kc.astype(jnp.float32) * jnp.exp(-cum_incl)).astype(cdt)
+    scores = jnp.einsum("bnthk,bnjhk->bnhtj", r_f, k_f,
+                        preferred_element_type=jnp.float32)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly lower
+    scores = jnp.where(mask[None, None, None], scores, 0.0).astype(cdt)
+    y_intra = jnp.einsum("bnhtj,bnjhk->bnthk", scores, vc,
+                         preferred_element_type=jnp.float32)
+    # current-token bonus term: r_t (u .* k_t) v_t
+    bonus = jnp.einsum("bnthk,hk,bnthk->bnth", rc.astype(jnp.float32),
+                       u, kc.astype(jnp.float32))
+    y_intra = y_intra + bonus[..., None] * vc.astype(jnp.float32)
+
+    # chunk-end states: contribution of chunk n = sum_j e^{L(end)-L(j)} k_j^T v_j
+    dec_to_end = jnp.exp(cum_incl[:, :, -1:, :, :] - cum_incl).astype(cdt)
+    st_c = jnp.einsum("bnjhk,bnjhw->bnhkw", kc * dec_to_end, vc,
+                      preferred_element_type=jnp.float32)
+    chunk_dec = jnp.exp(cum_incl[:, :, -1])                # (B,nc,H,K)
+
+    def scan_fn(s, inp):
+        st, cd = inp
+        return s * cd[..., None] + st, s                   # emit pre-chunk state
+
+    s_fin, s_prev = jax.lax.scan(
+        scan_fn, s0.astype(jnp.float32),
+        (jnp.moveaxis(st_c, 1, 0), jnp.moveaxis(chunk_dec, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                    # (B,nc,H,K,K)
+    y_cross = jnp.einsum("bnthk,bnhkw->bnthw", r_f, s_prev.astype(cdt),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_cross).reshape(B, S, H, K)
+    return y, s_fin
+
+
+def _ddlerp(x, xprev, mu):
+    return x + (xprev - x) * mu
+
+
+def time_mix(p, cfg, x, *, state=None):
+    """x: (B,S,d). state: dict(shift:(B,d), s:(B,H,K,K)) for decode/carry."""
+    B, S, d = x.shape
+    H = d // HEAD_K
+    prev = state["shift"] if state is not None else jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, prev)
+    mu = p["mu"]
+    xr = _ddlerp(x, xs, mu[0].astype(x.dtype))
+    xk = _ddlerp(x, xs, mu[1].astype(x.dtype))
+    xv = _ddlerp(x, xs, mu[2].astype(x.dtype))
+    xg = _ddlerp(x, xs, mu[3].astype(x.dtype))
+    xw = _ddlerp(x, xs, mu[4].astype(x.dtype))
+    r = (xr @ p["wr"]).reshape(B, S, H, HEAD_K)
+    k = (xk @ p["wk"]).reshape(B, S, H, HEAD_K)
+    v = (xv @ p["wv"]).reshape(B, S, H, HEAD_K)
+    g = jax.nn.silu(xg @ p["wg"])
+    ww = (p["w_base"] + (xw.astype(jnp.float32) @ p["w_lora_a"])
+          @ p["w_lora_b"])                                  # (B,S,d)
+    logw = -jnp.exp(ww)                                     # < 0
+    logw = jnp.clip(logw, LOG_W_MIN, -1e-4).reshape(B, S, H, HEAD_K)
+    s0 = state["s"] if state is not None else \
+        jnp.zeros((B, H, HEAD_K, HEAD_K), jnp.float32)
+    if WKV_IMPL == "kernel_stub" and state is None:
+        # Stand-in for the Pallas wkv6 kernel (kernels/wkv6.py): Mosaic
+        # doesn't lower on the CPU dry-run host, so the kernel's cost is
+        # added analytically by repro.launch.perf. Keeps I/O shapes honest.
+        y = ((r + k + v) * jax.nn.sigmoid(logw)).astype(jnp.float32)
+        s_fin = s0
+    else:
+        y, s_fin = wkv6_chunked(r, k, v, logw, p["u"], s0)
+    # per-head groupnorm
+    y = y.reshape(B, S, H, HEAD_K).astype(jnp.float32)
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (y.reshape(B, S, d) * p["ln_w"] + p["ln_b"]).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1, :], "s": s_fin}
+    return out, new_state
+
+
+def channel_mix(p, cfg, x, *, state=None):
+    B, S, d = x.shape
+    prev = state if state is not None else jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, prev)
+    mu = p["mu"]
+    xk = _ddlerp(x, xs, mu[0].astype(x.dtype))
+    xr = _ddlerp(x, xs, mu[1].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+    return out, (x[:, -1, :] if state is not None else None)
+
+
+def _block(p, cfg, x, state):
+    st_t = state["tmix"] if state is not None else None
+    st_c = state["cmix"] if state is not None else None
+    o, new_t = time_mix(p["tmix"], cfg, layers.rms_norm(x, p["norm1"],
+                                                        cfg.norm_eps), state=st_t)
+    x = constrain(x + o, ("batch", "seq", "embed"))
+    o, new_c = channel_mix(p["cmix"], cfg, layers.rms_norm(x, p["norm2"],
+                                                           cfg.norm_eps), state=st_c)
+    x = constrain(x + o, ("batch", "seq", "embed"))
+    new_state = {"tmix": new_t, "cmix": new_c} if state is not None else None
+    return x, new_state
+
+
+def forward_hidden(params, cfg, tokens, *, caches=None, cache_index=None,
+                   embed_rows=None):
+    if embed_rows is not None:
+        x = embed_rows.astype(cfg.activation_dtype)
+    else:
+        x = embedding_ops.lookup(params["embed"]["table"], tokens)
+    x = layers.rms_norm(x, params["norm_in"], cfg.norm_eps)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(carry, xs):
+        x = carry
+        bp, st = xs
+        fn = _block
+        if cfg.remat:
+            fn = jax.checkpoint(_block, static_argnums=(1,),
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        x, new_st = fn(bp, cfg, x, st)
+        return x, new_st
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches, jnp.zeros((), jnp.float32)
+
+
+def lm_loss(params, cfg, batch):
+    hidden, _, _ = forward_hidden(params, cfg, batch["tokens"],
+                                  embed_rows=batch.get("embed_rows"))
+    loss, count = layers.chunked_softmax_xent(
+        hidden, params["lm_head"], batch["labels"], chunk=cfg.loss_chunk)
+    return loss / jnp.maximum(count, 1.0)
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int):
+    """Recurrent state — O(1) in sequence length (the ssm advantage)."""
+    d = cfg.d_model
+    H = d // HEAD_K
+    entry = {
+        "tmix": {"shift": jnp.zeros((batch, d), cfg.activation_dtype),
+                 "s": jnp.zeros((batch, H, HEAD_K, HEAD_K), jnp.float32)},
+        "cmix": jnp.zeros((batch, d), cfg.activation_dtype),
+    }
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), entry)
+
+
+def prefill(params, cfg, tokens, caches, **kw):
+    hidden, caches, _ = forward_hidden(params, cfg, tokens, caches=caches)
+    logits = hidden[:, -1] @ params["lm_head"]
+    return logits.astype(jnp.float32), caches
+
+
+def decode_step(params, cfg, tokens, pos, caches, **kw):
+    hidden, caches, _ = forward_hidden(params, cfg, tokens, caches=caches,
+                                       cache_index=pos)
+    logits = hidden[:, -1] @ params["lm_head"]
+    return logits.astype(jnp.float32), caches

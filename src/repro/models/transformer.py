@@ -1,0 +1,253 @@
+"""Generic decoder-only LM stack.
+
+Covers: tinyllama, qwen3-0.6b, llama3.2-3b, granite-20b (dense);
+qwen3-moe-235b, arctic-480b (MoE); jamba (mamba+attn interleave, MoE);
+qwen2-vl (M-RoPE + stub vision embeds merged into the token stream).
+
+Homogeneous stacks (all layers identical structure) use scan-over-layers with
+stacked params — essential to keep 94-layer HLO compile times sane in the
+dry-run. Heterogeneous stacks (jamba) scan over the repeating period group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding_ops
+from repro.distributed.sharding import constrain
+from repro.models import layers, mamba, moe
+
+
+def _is_homogeneous(cfg) -> bool:
+    return (len(set(cfg.layer_types)) == 1 and len(set(cfg.ffn_types)) == 1
+            and cfg.arch_type in ("transformer", "qwen2vl"))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg, layer_type: str, ffn_type: str):
+    ks = jax.random.split(key, 4)
+    dt = cfg.activation_dtype
+    p: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dt),
+                         "norm2": jnp.ones((cfg.d_model,), dt)}
+    if layer_type == "attn":
+        p["attn"] = layers.init_attention(ks[0], cfg)
+    else:
+        p["mamba"] = mamba.init_mamba(ks[0], cfg)
+    if ffn_type == "moe":
+        p["moe"] = moe.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg)
+    return p
+
+
+def init_lm(key, cfg):
+    ks = jax.random.split(key, 4)
+    dt = cfg.activation_dtype
+    table = (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+             * 0.02).astype(dt)
+    params: dict[str, Any] = {"embed": {"table": table},
+                              "final_norm": jnp.ones((cfg.d_model,), dt)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(ks[1], cfg.d_model,
+                                              cfg.vocab_size, dt)
+    lt, ft = cfg.layer_types, cfg.ffn_types
+    if _is_homogeneous(cfg):
+        lkeys = jax.random.split(ks[2], cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_block(k, cfg, lt[0], ft[0]))(lkeys)
+    else:
+        period = cfg.attn_layer_period if cfg.arch_type == "jamba" else 1
+        if cfg.arch_type == "jamba" and cfg.num_layers % period == 0:
+            # stacked groups: params for one period, stacked num_groups times
+            ngroups = cfg.num_layers // period
+            gkeys = jax.random.split(ks[2], ngroups)
+
+            def init_group(k):
+                bkeys = jax.random.split(k, period)
+                return [_init_block(bkeys[i], cfg, lt[i], ft[i])
+                        for i in range(period)]
+            params["groups"] = jax.vmap(init_group)(gkeys)
+        else:
+            lkeys = jax.random.split(ks[2], cfg.num_layers)
+            params["layers"] = [_init_block(lkeys[i], cfg, lt[i], ft[i])
+                                for i in range(cfg.num_layers)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(p, cfg, layer_type, ffn_type, x, positions, positions3,
+               cache=None, cache_index=None):
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if layer_type == "attn":
+        o, new_cache = layers.attention_fwd(
+            p["attn"], cfg, h, positions, causal=True, cache=cache,
+            cache_index=cache_index, positions3=positions3)
+    else:
+        o, new_cache = mamba.mamba_fwd(p["mamba"], cfg, h, state=cache)
+    x = x + o
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if ffn_type == "moe":
+        o, aux = moe.moe_fwd(p["moe"], cfg, h)
+    else:
+        o = layers.mlp_fwd(p["mlp"], cfg, h)
+    x = x + o
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (hidden states)
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(params, cfg, tokens, *, positions=None, positions3=None,
+                   vision_embeds=None, caches=None, cache_index=None,
+                   embed_rows=None):
+    """tokens: (B, S) -> hidden (B, S, d). Returns (hidden, new_caches, aux).
+
+    embed_rows: optional pre-gathered (B, S, d) embedding rows — the relaxed
+    embedding lookup path (rows prefetched during the previous batch).
+    """
+    B, S = tokens.shape
+    if embed_rows is not None:
+        x = embed_rows.astype(cfg.activation_dtype)
+    else:
+        x = embedding_ops.lookup(params["embed"]["table"], tokens)
+    if vision_embeds is not None:
+        # stub modality merge: patch embeddings replace the first Sv slots
+        sv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, sv:]], axis=1)
+    x = constrain(x, ("batch", "seq", "embed"))
+    if positions is None:
+        base = cache_index if cache_index is not None else 0
+        positions = base + jnp.arange(S)
+    lt, ft = cfg.layer_types, cfg.ffn_types
+    total_aux = jnp.zeros((), jnp.float32)
+
+    block = _block_fwd
+    if cfg.remat:
+        block = jax.checkpoint(block, static_argnums=(1, 2, 3),
+                               policy=jax.checkpoint_policies.nothing_saveable)
+
+    if _is_homogeneous(cfg) and "blocks" in params:
+        def body(carry, xs):
+            x, total_aux = carry
+            bp, cache_l = xs
+            x, new_cache, aux = block(bp, cfg, lt[0], ft[0], x, positions,
+                                      positions3, cache_l, cache_index)
+            return (x, total_aux + aux), new_cache
+        (x, total_aux), new_caches = jax.lax.scan(
+            body, (x, total_aux), (params["blocks"], caches))
+    elif "groups" in params:
+        period = cfg.attn_layer_period
+
+        def gbody(carry, xs):
+            x, total_aux = carry
+            gp, gcache = xs
+            new_gcache = []
+            for i in range(period):
+                ci = gcache[i] if gcache is not None else None
+                x, nc, aux = block(gp[i], cfg, lt[i], ft[i], x, positions,
+                                   positions3, ci, cache_index)
+                new_gcache.append(nc)
+                total_aux = total_aux + aux
+            return (x, total_aux), new_gcache
+        (x, total_aux), new_caches = jax.lax.scan(
+            gbody, (x, total_aux), (params["groups"], caches))
+    else:
+        new_caches = []
+        for i, lp in enumerate(params["layers"]):
+            ci = caches[i] if caches is not None else None
+            x, nc, aux = block(lp, cfg, lt[i], ft[i], x, positions,
+                               positions3, ci, cache_index)
+            new_caches.append(nc)
+            total_aux = total_aux + aux
+        if caches is None:
+            new_caches = None
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches, total_aux
+
+
+def head_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Training loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg, batch):
+    """batch: tokens (B,S), labels (B,S) [, vision_embeds, positions3,
+    embed_rows (relaxed-lookup path)]."""
+    hidden, _, aux = forward_hidden(
+        params, cfg, batch["tokens"],
+        positions3=batch.get("positions3"),
+        vision_embeds=batch.get("vision_embeds"),
+        embed_rows=batch.get("embed_rows"))
+    w = head_matrix(params, cfg)
+    loss, count = layers.chunked_softmax_xent(
+        hidden, w, batch["labels"],
+        chunk=cfg.loss_chunk, mask=batch.get("loss_mask", None))
+    return loss / jnp.maximum(count, 1.0) + 0.01 * aux
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int):
+    """Stacked caches matching the scan structure of forward_hidden."""
+    hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    dt = cfg.activation_dtype
+
+    def attn_entry():
+        return {"k": jnp.zeros((batch, max_seq, nkv, hd), dt),
+                "v": jnp.zeros((batch, max_seq, nkv, hd), dt)}
+
+    lt = cfg.layer_types
+    if _is_homogeneous(cfg):
+        e = attn_entry()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), e)
+    if cfg.arch_type == "jamba":
+        period = cfg.attn_layer_period
+        ngroups = cfg.num_layers // period
+        group = []
+        for i in range(period):
+            if lt[i] == "attn":
+                e = attn_entry()
+            else:
+                e = mamba.init_mamba_state(cfg, batch)
+            group.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (ngroups,) + a.shape), e))
+        return group
+    return [attn_entry() if t == "attn" else mamba.init_mamba_state(cfg, batch)
+            for t in lt]
+
+
+def prefill(params, cfg, tokens, caches, **kw):
+    """Fill caches with S tokens; return (last-token logits, caches)."""
+    hidden, caches, _ = forward_hidden(params, cfg, tokens, caches=caches,
+                                       cache_index=0, **kw)
+    logits = hidden[:, -1] @ head_matrix(params, cfg)
+    return logits.astype(jnp.float32), caches
+
+
+def decode_step(params, cfg, tokens, pos, caches, **kw):
+    """tokens: (B, 1); pos: scalar index of the new token. -> (logits, caches)."""
+    hidden, caches, _ = forward_hidden(params, cfg, tokens, caches=caches,
+                                       cache_index=pos, **kw)
+    logits = hidden[:, -1] @ head_matrix(params, cfg)
+    return logits.astype(jnp.float32), caches

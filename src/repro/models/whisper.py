@@ -1,0 +1,170 @@
+"""Whisper-base backbone (encoder-decoder). Audio frontend is a STUB:
+``input_specs`` provides precomputed frame embeddings (B, S_frames, d) — the
+conv1d+mel stack is out of scope per the assignment. The transformer backbone
+(encoder self-attn, decoder self+cross-attn, pre-LN, GeLU FFN, learned/sine
+positions) is real.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding_ops
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+
+def _init_enc_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    dt = cfg.activation_dtype
+    return {"ln1_w": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+            "ln2_w": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+            "attn": layers.init_attention(ks[0], cfg),
+            "mlp": layers.init_mlp(ks[1], cfg)}
+
+
+def _init_dec_block(key, cfg):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    dt = cfg.activation_dtype
+    return {"ln1_w": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+            "ln2_w": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+            "ln3_w": jnp.ones((d,), dt), "ln3_b": jnp.zeros((d,), dt),
+            "attn": layers.init_attention(ks[0], cfg),
+            "xattn": layers.init_attention(ks[1], cfg),
+            "mlp": layers.init_mlp(ks[2], cfg)}
+
+
+def init_lm(key, cfg):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    dt = cfg.activation_dtype
+    table = (jax.random.normal(ks[0], (cfg.vocab_size, d), jnp.float32)
+             * 0.02).astype(dt)
+    ekeys = jax.random.split(ks[1], cfg.encoder_layers)
+    dkeys = jax.random.split(ks[2], cfg.num_layers)
+    return {
+        "embed": {"table": table},
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(ekeys),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dkeys),
+        "enc_ln_w": jnp.ones((d,), dt), "enc_ln_b": jnp.zeros((d,), dt),
+        "dec_ln_w": jnp.ones((d,), dt), "dec_ln_b": jnp.zeros((d,), dt),
+        # whisper ties the decoder output head to the token embedding
+    }
+
+
+def _ln(x, w, b, eps):
+    return layers.layer_norm(x, w, b, eps)
+
+
+def encode(params, cfg, frames):
+    """frames: (B, Sf, d) precomputed frame embeddings (stub frontend)."""
+    B, Sf, d = frames.shape
+    x = frames.astype(cfg.activation_dtype)
+    x = x + layers.sinusoidal_positions(Sf, d).astype(x.dtype)[None]
+    x = constrain(x, ("batch", "seq", "embed"))
+    pos = jnp.arange(Sf)
+
+    def body(x, bp):
+        h = _ln(x, bp["ln1_w"], bp["ln1_b"], cfg.norm_eps)
+        o, _ = layers.attention_fwd(bp["attn"], cfg, h, pos, causal=False)
+        x = constrain(x + o, ("batch", "seq", "embed"))
+        h = _ln(x, bp["ln2_w"], bp["ln2_b"], cfg.norm_eps)
+        x = constrain(x + layers.mlp_fwd(bp["mlp"], cfg, h),
+                      ("batch", "seq", "embed"))
+        return x, None
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return _ln(x, params["enc_ln_w"], params["enc_ln_b"], cfg.norm_eps)
+
+
+def cross_kv(params, cfg, enc_out):
+    """Precompute decoder cross-attention K/V per layer (stacked)."""
+    hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    B, Sf, _ = enc_out.shape
+
+    def per_layer(bp):
+        k = (enc_out @ bp["xattn"]["wk"]).reshape(B, Sf, nkv, hd)
+        v = (enc_out @ bp["xattn"]["wv"]).reshape(B, Sf, nkv, hd)
+        return k, v
+
+    return jax.vmap(per_layer)(params["dec_blocks"])
+
+
+def decode_hidden(params, cfg, tokens, xkv, *, caches=None, cache_index=None,
+                  embed_rows=None):
+    B, S = tokens.shape
+    d = cfg.d_model
+    if embed_rows is not None:
+        x = embed_rows.astype(cfg.activation_dtype)
+    else:
+        x = embedding_ops.lookup(params["embed"]["table"], tokens)
+    base = cache_index if cache_index is not None else 0
+    pos = base + jnp.arange(S)
+    pe = layers.sinusoidal_positions(65536, d).astype(x.dtype)  # static table
+    x = x + jnp.take(pe, pos, axis=0)[None]
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(carry, xs):
+        x = carry
+        bp, (xk, xv), cache_l = xs
+        h = _ln(x, bp["ln1_w"], bp["ln1_b"], cfg.norm_eps)
+        o, new_cache = layers.attention_fwd(bp["attn"], cfg, h, pos,
+                                            causal=True, cache=cache_l,
+                                            cache_index=cache_index)
+        x = constrain(x + o, ("batch", "seq", "embed"))
+        h = _ln(x, bp["ln2_w"], bp["ln2_b"], cfg.norm_eps)
+        o, _ = layers.attention_fwd(bp["xattn"], cfg, h, pos, causal=False,
+                                    cross_kv=(xk, xv))
+        x = constrain(x + o, ("batch", "seq", "embed"))
+        h = _ln(x, bp["ln3_w"], bp["ln3_b"], cfg.norm_eps)
+        x = constrain(x + layers.mlp_fwd(bp["mlp"], cfg, h),
+                      ("batch", "seq", "embed"))
+        return x, new_cache
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    x, new_caches = jax.lax.scan(body_fn, x,
+                                 (params["dec_blocks"], xkv, caches))
+    x = _ln(x, params["dec_ln_w"], params["dec_ln_b"], cfg.norm_eps)
+    return x, new_caches
+
+
+def lm_loss(params, cfg, batch):
+    """batch: frames (B,Sf,d), tokens (B,S), labels (B,S)."""
+    enc = encode(params, cfg, batch["frames"])
+    xkv = cross_kv(params, cfg, enc)
+    hidden, _ = decode_hidden(params, cfg, batch["tokens"], xkv,
+                              embed_rows=batch.get("embed_rows"))
+    w = params["embed"]["table"].T  # tied head
+    loss, count = layers.chunked_softmax_xent(
+        hidden, w, batch["labels"], chunk=cfg.loss_chunk)
+    return loss / jnp.maximum(count, 1.0)
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int):
+    hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    dt = cfg.activation_dtype
+    e = {"k": jnp.zeros((batch, max_seq, nkv, hd), dt),
+         "v": jnp.zeros((batch, max_seq, nkv, hd), dt)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), e)
+
+
+def prefill(params, cfg, tokens, caches, *, frames):
+    enc = encode(params, cfg, frames)
+    xkv = cross_kv(params, cfg, enc)
+    hidden, caches = decode_hidden(params, cfg, tokens, xkv, caches=caches,
+                                   cache_index=0)
+    logits = hidden[:, -1] @ params["embed"]["table"].T
+    return logits.astype(jnp.float32), caches
+
+
+def decode_step(params, cfg, tokens, pos, caches, *, xkv):
+    hidden, caches = decode_hidden(params, cfg, tokens, xkv, caches=caches,
+                                   cache_index=pos)
+    logits = hidden[:, -1] @ params["embed"]["table"].T
+    return logits.astype(jnp.float32), caches

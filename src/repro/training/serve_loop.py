@@ -1,0 +1,67 @@
+"""Serving steps: prefill (fill KV caches / recurrent state) and decode
+(one new token against a seq_len-deep cache). These are what the ``decode_*``
+and ``long_*`` dry-run cells lower.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import get_api
+from repro.models import whisper as whisper_mod
+
+
+def make_serve_fns(cfg):
+    api = get_api(cfg)
+
+    def prefill_step(params, batch, caches):
+        """tokens (B, S) -> (next-token logits, filled caches)."""
+        kw = {}
+        if cfg.arch_type == "whisper":
+            kw["frames"] = batch["frames"]
+        if cfg.arch_type == "qwen2vl":
+            kw["vision_embeds"] = batch.get("vision_embeds")
+            kw["positions3"] = batch.get("positions3")
+        return api.prefill(params, cfg, batch["tokens"], caches, **kw)
+
+    def decode_step(params, tokens, pos, caches, extras=None):
+        """tokens (B, 1), pos scalar: one token with the cache at depth pos."""
+        kw = dict(extras or {})
+        return api.decode_step(params, cfg, tokens, pos, caches, **kw)
+
+    def init_cache(batch: int, max_seq: int):
+        return api.init_cache(cfg, batch, max_seq)
+
+    return prefill_step, decode_step, init_cache
+
+
+def serve_extras(cfg, params, batch):
+    """Precomputable per-request state outside the decode loop (whisper's
+    cross-attention K/V)."""
+    if cfg.arch_type == "whisper":
+        enc = whisper_mod.encode(params, cfg, batch["frames"])
+        return {"xkv": whisper_mod.cross_kv(params, cfg, enc)}
+    return {}
+
+
+def greedy_generate(cfg, params, prompt_tokens, num_new: int, *,
+                    max_seq: int | None = None, extras=None):
+    """Host loop: prefill then decode num_new tokens greedily."""
+    prefill_step, decode_step, init_cache = make_serve_fns(cfg)
+    B, S = prompt_tokens.shape
+    max_seq = max_seq or (S + num_new)
+    caches = init_cache(B, max_seq)
+    batch = {"tokens": prompt_tokens}
+    if extras:
+        batch.update(extras)
+    logits, caches = jax.jit(prefill_step)(params, batch, caches)
+    ex = serve_extras(cfg, params, batch)
+    dec = jax.jit(decode_step)
+    out = [jnp.argmax(logits, axis=-1)]
+    for t in range(num_new - 1):
+        tok = out[-1][:, None]
+        logits, caches = dec(params, tok, jnp.asarray(S + t), caches, ex)
+        out.append(jnp.argmax(logits, axis=-1))
+    return jnp.stack(out, axis=1)

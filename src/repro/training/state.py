@@ -1,0 +1,37 @@
+"""TrainState pytree: params split into dense tier / embedding pool tier."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def split_params(params: dict) -> tuple[dict, dict]:
+    """(dense_tree, embed_tree). The 'embed' subtree is the pool tier."""
+    dense = {k: v for k, v in params.items() if k != "embed"}
+    return dense, params.get("embed", {})
+
+
+def merge_params(dense: dict, embed: dict) -> dict:
+    out = dict(dense)
+    if embed:
+        out["embed"] = embed
+    return out
+
+
+def make_state(params: dict, dense_opt, embed_opt) -> dict:
+    dense, embed = split_params(params)
+    return {
+        "dense": dense,
+        "embed": embed,
+        "opt_dense": dense_opt.init(dense),
+        "opt_embed": embed_opt.init(embed),
+        "step": jnp.zeros((), jnp.int32),
+        # relaxed-lookup carry: rows prefetched for the NEXT batch
+        "prefetch": None,
+    }
+
+
+def params_of(state: dict) -> dict:
+    return merge_params(state["dense"], state["embed"])

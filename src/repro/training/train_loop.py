@@ -1,0 +1,156 @@
+"""Training steps: strict (dependent) and relaxed (paper) schedules.
+
+strict_step:
+    lookup_N -> fwd/bwd_N -> update_dense -> update_pool
+    (batch N+1's lookup must wait for update_pool — the RAW dependency)
+
+relaxed_step (TrainingCXL):
+    uses rows prefetched at step N-1; inside step N it
+      * runs fwd/bwd on the carried rows,
+      * updates the pool,
+      * prefetches batch N+1's rows from the PRE-update table + the
+        commutative correction gather(U, idx_next)
+    so no gather ever waits on a scatter: XLA can schedule the two prefetch
+    gathers (and their psum, under the sharded pool) in parallel with the
+    backward pass. The undo-log content for the batch-aware checkpoint —
+    (idx_N, pre-update rows) — falls out of the same carry for free.
+
+Both step functions are pure jit-able pytree->pytree maps; the checkpoint
+manager hooks observe their outputs from the host side.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import relaxed as rx
+from repro.models.registry import get_api
+from repro.optim import optimizers as opt
+from repro.training import state as st
+
+
+def _loss_with_rows(api, cfg):
+    def f(dense, embed, rows, batch):
+        params = st.merge_params(dense, embed)
+        b = dict(batch)
+        if rows is not None:
+            b["embed_rows"] = rows
+        return api.loss(params, cfg, b)
+    return f
+
+
+def make_step_fns(cfg, train_cfg):
+    """Returns (init_fn, strict_step, relaxed_step, warmup_fn)."""
+    api = get_api(cfg)
+    dense_opt = opt.make_optimizer(train_cfg.optimizer, train_cfg.learning_rate,
+                                   train_cfg)
+    embed_opt = opt.make_optimizer(train_cfg.embed_optimizer,
+                                   train_cfg.embed_learning_rate)
+    loss_fn = _loss_with_rows(api, cfg)
+
+    def init_fn(key):
+        params = api.init(key, cfg)
+        return st.make_state(params, dense_opt, embed_opt)
+
+    # -- strict ------------------------------------------------------------
+    def strict_step(state, batch):
+        def full_loss(dense, embed):
+            return loss_fn(dense, embed, None, batch)
+
+        loss, grads = jax.value_and_grad(full_loss, argnums=(0, 1))(
+            state["dense"], state["embed"])
+        g_dense, g_embed = grads
+        if train_cfg.grad_clip:
+            g_dense, gnorm = opt.global_norm_clip(g_dense, train_cfg.grad_clip)
+        else:
+            gnorm = jnp.zeros(())
+        upd_d, od = dense_opt.update(g_dense, state["opt_dense"], state["dense"])
+        dense = jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u)
+                             .astype(p.dtype), state["dense"], upd_d)
+        upd_e, oe = embed_opt.update(g_embed, state["opt_embed"], state["embed"])
+        embed = rx.apply_embed_update(state["embed"], upd_e)
+        new_state = {**state, "dense": dense, "embed": embed,
+                     "opt_dense": od, "opt_embed": oe,
+                     "step": state["step"] + 1, "prefetch": state["prefetch"]}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    # -- relaxed -----------------------------------------------------------
+    def warmup(state, batch0):
+        """Fill the prefetch carry for step 0 (no previous step to overlap)."""
+        rows = rx.lookup_rows(state["embed"], cfg, batch0)
+        return {**state, "prefetch": {"rows": rows}}
+
+    def relaxed_step(state, batch, next_batch):
+        rows_in = state["prefetch"]["rows"]
+
+        loss, grads = jax.value_and_grad(
+            lambda d, e, r: loss_fn(d, e, r, batch), argnums=(0, 1, 2),
+        )(state["dense"], state["embed"], rows_in)
+        g_dense, g_embed_direct, g_rows = grads
+
+        # adjoint of the lookup: dense table-shaped grad (sparse content)
+        g_pool = rx.scatter_rows_grad(state["embed"], cfg, batch, g_rows)
+        # tied heads / direct table uses contribute densely
+        g_embed = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                               g_pool, g_embed_direct)
+
+        if train_cfg.grad_clip:
+            g_dense, gnorm = opt.global_norm_clip(g_dense, train_cfg.grad_clip)
+        else:
+            gnorm = jnp.zeros(())
+        upd_d, od = dense_opt.update(g_dense, state["opt_dense"], state["dense"])
+        dense = jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u)
+                             .astype(p.dtype), state["dense"], upd_d)
+
+        upd_e, oe = embed_opt.update(g_embed, state["opt_embed"], state["embed"])
+        upd_e = rx.constrain_pool(upd_e)
+        embed = rx.apply_embed_update(state["embed"], upd_e)
+
+        # relaxed prefetch: stale gather (pre-update pool) + correction.
+        # No data dependency on `embed` — the scatter never blocks it.
+        rows_next = rx.prefetch_corrected(state["embed"], upd_e, cfg, next_batch)
+
+        new_state = {**state, "dense": dense, "embed": embed,
+                     "opt_dense": od, "opt_embed": oe,
+                     "step": state["step"] + 1,
+                     "prefetch": {"rows": rows_next}}
+        # undo-log content for the batch-aware checkpoint: the pre-update rows
+        # of exactly the indices this batch touched (known in advance).
+        ckpt_feed = {"touched": rx.touched_indices(cfg, batch),
+                     "old_rows": rows_in, "delta": upd_e}
+        return new_state, {"loss": loss, "grad_norm": gnorm,
+                           "ckpt_feed": ckpt_feed}
+
+    return init_fn, strict_step, relaxed_step, warmup
+
+
+def train(cfg, train_cfg, batches, num_steps: int, *, relaxed: bool = True,
+          jit: bool = True, state=None, start_step: int = 0,
+          ckpt_manager=None, on_metrics: Optional[Callable] = None):
+    """Host-side loop (examples / tests). Returns (state, losses)."""
+    init_fn, strict_step, relaxed_step, warmup = make_step_fns(cfg, train_cfg)
+    if state is None:
+        state = init_fn(jax.random.PRNGKey(train_cfg.seed))
+    step_strict = jax.jit(strict_step) if jit else strict_step
+    step_relaxed = jax.jit(relaxed_step) if jit else relaxed_step
+    losses = []
+    if relaxed and state.get("prefetch") is None:
+        state = (jax.jit(warmup) if jit else warmup)(
+            state, batches.next(start_step))
+    for n in range(start_step, start_step + num_steps):
+        batch = batches.next(n)
+        if relaxed:
+            state, metrics = step_relaxed(state, batch, batches.next(n + 1))
+        else:
+            state, metrics = step_strict(state, batch)
+        losses.append(float(metrics["loss"]))
+        if ckpt_manager is not None:
+            ckpt_manager.on_step(n, state, metrics.get("ckpt_feed"))
+        if on_metrics is not None:
+            on_metrics(n, metrics)
+    if ckpt_manager is not None:
+        ckpt_manager.flush()
+    return state, losses

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# tests see the real device count (the 512-device override is dry-run only)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_finite(x, name="x"):
+    import jax.numpy as jnp
+    assert bool(jnp.isfinite(x).all()), f"{name} contains non-finite values"

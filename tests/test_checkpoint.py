@@ -1,0 +1,163 @@
+"""Failure-tolerance tests: undo-log semantics, torn writes, CRC corruption,
+resume exactness, relaxed dense/embedding gap, GC, writer deadline."""
+import os
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import CheckpointConfig, TrainConfig
+from repro.core.checkpoint import recovery, store, undo_log
+from repro.core.checkpoint.manager import CheckpointManager
+from repro.data.synthetic import make_batches
+from repro.training import train_loop
+
+
+def setup_run(tmp, arch="tinyllama-1.1b", dense_interval=1):
+    cc = CheckpointConfig(directory=tmp, dense_interval=dense_interval)
+    tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
+    b = get_arch(arch, smoke=True)
+    data = make_batches(b.model, 4, 16, seed=3)
+    return b, tc, cc, data
+
+
+def test_resume_exact(tmp_path):
+    tmp = str(tmp_path / "ck")
+    b, tc, cc, data = setup_run(tmp)
+    _, full = train_loop.train(b.model, tc, data, 8, relaxed=True)
+
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+    train_loop.train(b.model, tc, data, 5, relaxed=True, state=st0,
+                     ckpt_manager=mgr)
+    mgr.flush()
+
+    rec = recovery.recover(tmp)
+    assert rec.mirror_step == 4 and rec.dense_step == 4 and rec.gap == 0
+    fresh = init_fn(jax.random.PRNGKey(tc.seed))
+    st, resume = recovery.resume_train_state(rec, fresh)
+    _, tail = train_loop.train(b.model, tc, data, 3, relaxed=True, state=st,
+                               start_step=resume)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(list(full[:5]) + tail
+                                          if False else full),
+                               rtol=0, atol=0)  # sanity on full itself
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[5:]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_torn_write_rollback(tmp_path):
+    tmp = str(tmp_path / "ck")
+    b, tc, cc, data = setup_run(tmp)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+    train_loop.train(b.model, tc, data, 4, relaxed=True, state=st0,
+                     ckpt_manager=mgr)
+    mgr.flush()
+
+    man = store.read_json(os.path.join(tmp, "MANIFEST.json"))
+    step = man["mirror_step"]
+    idx, old_rows, _ = undo_log.read_log(tmp, step)
+    V, d = b.model.vocab_size, b.model.d_model
+    mm = np.memmap(os.path.join(tmp, "mirror.dat"), dtype=np.float32,
+                   mode="r+", shape=(V, d))
+    mm[idx] = 7e8                        # torn write garbage
+    man["mirror_step"] = step - 1        # manifest: apply never completed
+    store.write_json_atomic(os.path.join(tmp, "MANIFEST.json"), man)
+
+    rec = recovery.recover(tmp)
+    assert rec.rolled_back
+    np.testing.assert_array_equal(rec.embed_rows[idx], old_rows)
+
+
+def test_crc_detects_corruption(tmp_path):
+    p = str(tmp_path / "a.bin")
+    store.write_array(p, np.arange(100000, dtype=np.float32))
+    with open(p, "r+b") as f:
+        f.seek(4096)
+        f.write(b"\x13\x37")
+    with pytest.raises(store.CorruptError):
+        store.read_array(p)
+
+
+def test_pytree_roundtrip(tmp_path):
+    tree = {"a": np.arange(10.0), "b": [np.ones((3, 4)),
+                                        {"c": np.int32(7)}], "empty": ()}
+    d = str(tmp_path / "snap")
+    store.save_pytree(d, tree, {"step": 3})
+    got, extra = store.load_pytree(d)
+    assert extra["step"] == 3
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_array_equal(got["b"][0], tree["b"][0])
+    assert got["b"][1]["c"] == 7
+    assert got["empty"] == ()
+
+
+def test_uncommitted_dense_snapshot_ignored(tmp_path):
+    d = str(tmp_path / "snap")
+    store.save_pytree(d, {"x": np.ones(4)})
+    os.remove(os.path.join(d, "COMMIT"))
+    with pytest.raises(store.CorruptError):
+        store.load_pytree(d)
+
+
+def test_relaxed_gap_semantics(tmp_path):
+    """dense_interval=3: the dense tier naturally trails the embedding tier
+    by up to 2 steps (paper Fig. 9 relaxation); recovery reports the gap."""
+    tmp = str(tmp_path / "ck")
+    b, tc, cc, data = setup_run(tmp, dense_interval=3)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+    train_loop.train(b.model, tc, data, 5, relaxed=True, state=st0,
+                     ckpt_manager=mgr)
+    mgr.flush()
+    # steps 0..4 ran; snapshots at 0 and 3 (GC keeps 3); mirror at 4
+    rec = recovery.recover(tmp)
+    assert rec.mirror_step == 4
+    assert rec.dense_step == 3
+    assert rec.gap == 1
+    # resume still possible: embeddings exact at 4, dense stale by 1
+    fresh = init_fn(jax.random.PRNGKey(0))
+    st, resume = recovery.resume_train_state(rec, fresh)
+    assert resume == 5
+
+
+def test_undo_log_gc(tmp_path):
+    tmp = str(tmp_path / "ck")
+    cc = CheckpointConfig(directory=tmp, dense_interval=0, max_undo_logs=3)
+    b = get_arch("tinyllama-1.1b", smoke=True)
+    tc = TrainConfig(checkpoint=cc)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+    data = make_batches(b.model, 2, 8, seed=0)
+    train_loop.train(b.model, tc, data, 8, relaxed=True, state=st0,
+                     ckpt_manager=mgr)
+    mgr.flush()
+    steps = undo_log.committed_steps(tmp)
+    assert len(steps) <= 4 and max(steps) == 7
+
+
+def test_writer_deadline_skips_tier_m(tmp_path):
+    tmp = str(tmp_path / "ck")
+    cc = CheckpointConfig(directory=tmp, dense_interval=1,
+                          writer_deadline_s=1e-9)
+    b = get_arch("tinyllama-1.1b", smoke=True)
+    tc = TrainConfig(checkpoint=cc)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+    data = make_batches(b.model, 2, 8, seed=0)
+    train_loop.train(b.model, tc, data, 3, relaxed=True, state=st0,
+                     ckpt_manager=mgr)
+    mgr.flush()
+    # relaxed semantics: tier-M never blocks; with an impossible deadline all
+    # snapshots are skipped but tier-E stays consistent
+    assert mgr.stats["tier_m_skipped"] >= 1
+    rec = recovery.recover(tmp)
+    assert rec.mirror_step == 2

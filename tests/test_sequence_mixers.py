@@ -1,0 +1,114 @@
+"""Chunked sequence mixers vs sequential oracles: wkv6 (rwkv) and SSD
+(mamba) — the chunked matmul forms must match step-by-step recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv6 as rwkv_mod
+
+
+def _wkv_case(rng, B, S, H, K):
+    r, k, v = (jnp.asarray(rng.standard_normal((B, S, H, K))
+                           .astype(np.float32) * 0.5) for _ in range(3))
+    logw = jnp.asarray(-np.exp(rng.standard_normal((B, S, H, K)) * 0.5 - 1)
+                       .astype(np.float32))
+    logw = jnp.clip(logw, rwkv_mod.LOG_W_MIN, -1e-4)
+    u = jnp.asarray(rng.standard_normal((H, K)).astype(np.float32) * 0.3)
+    s0 = jnp.asarray(rng.standard_normal((B, H, K, K)).astype(np.float32) * 0.1)
+    return r, k, v, logw, u, s0
+
+
+@pytest.mark.parametrize("B,S,H,K,chunk", [
+    (2, 64, 2, 64, 16), (1, 48, 1, 64, 16), (2, 33, 2, 64, 16)])
+def test_wkv6_chunked_vs_sequential(rng, B, S, H, K, chunk):
+    r, k, v, logw, u, s0 = _wkv_case(rng, B, S, H, K)
+    y_c, s_c = rwkv_mod.wkv6_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    y_r, s_r = ref.wkv6_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 500), s=st.integers(4, 70))
+def test_property_wkv6(seed, s):
+    rng = np.random.default_rng(seed)
+    r, k, v, logw, u, s0 = _wkv_case(rng, 1, s, 1, 64)
+    y_c, s_c = rwkv_mod.wkv6_chunked(r, k, v, logw, u, s0)
+    y_r, s_r = ref.wkv6_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 64, 2, 64, 16, 16), (1, 40, 1, 64, 8, 16)])
+def test_mamba_ssd_chunked_vs_sequential(rng, B, S, H, P, N, chunk):
+    xh = jnp.asarray(rng.standard_normal((B, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, H)))
+                     .astype(np.float32) * 0.1)
+    a = -jnp.asarray(np.abs(rng.standard_normal((H,))).astype(np.float32) + .1)
+    B_ = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    C_ = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    y_c, h_c = mamba_mod._ssd_chunked(xh, dt, a, B_, C_, chunk)
+    y_r, h_r = ref.mamba_ssd_ref(xh, dt, a, B_, C_)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv_decode_matches_prefill(rng):
+    """Recurrent state handoff: prefill(S) then decode == prefill(S+1)."""
+    from repro.configs import get_arch
+    from repro.models.registry import get_api
+    b = get_arch("rwkv6-3b", smoke=True)
+    cfg = b.model
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 9)).astype(np.int32))
+    caches = api.init_cache(cfg, 2, 16)
+    logits_a, caches = api.prefill(params, cfg, toks[:, :8], caches)
+    logits_b, _ = api.decode_step(params, cfg, toks[:, 8:9], 8, caches)
+    caches2 = api.init_cache(cfg, 2, 16)
+    logits_full, _ = api.prefill(params, cfg, toks, caches2)
+    np.testing.assert_allclose(np.asarray(logits_b), np.asarray(logits_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_transformer_decode_matches_prefill(rng):
+    from repro.configs import get_arch
+    from repro.models.registry import get_api
+    b = get_arch("tinyllama-1.1b", smoke=True)
+    cfg = b.model
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 9)).astype(np.int32))
+    caches = api.init_cache(cfg, 2, 16)
+    logits_a, caches = api.prefill(params, cfg, toks[:, :8], caches)
+    logits_b, _ = api.decode_step(params, cfg, toks[:, 8:9], 8, caches)
+    caches2 = api.init_cache(cfg, 2, 16)
+    logits_full, _ = api.prefill(params, cfg, toks, caches2)
+    np.testing.assert_allclose(np.asarray(logits_b), np.asarray(logits_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_jamba_decode_matches_prefill(rng):
+    from repro.configs import get_arch
+    from repro.models.registry import get_api
+    b = get_arch("jamba-v0.1-52b", smoke=True)
+    cfg = b.model
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 9)).astype(np.int32))
+    caches = api.init_cache(cfg, 2, 16)
+    _, caches = api.prefill(params, cfg, toks[:, :8], caches)
+    logits_b, _ = api.decode_step(params, cfg, toks[:, 8:9], 8, caches)
+    caches2 = api.init_cache(cfg, 2, 16)
+    logits_full, _ = api.prefill(params, cfg, toks, caches2)
+    np.testing.assert_allclose(np.asarray(logits_b), np.asarray(logits_full),
+                               rtol=2e-3, atol=2e-3)

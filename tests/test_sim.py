@@ -1,0 +1,72 @@
+"""Simulator must reproduce the paper's headline claims within tolerance."""
+import numpy as np
+import pytest
+
+from repro.sim.energy import energy_table
+from repro.sim.engine import SYSTEMS, simulate
+from repro.sim.models_rm import RMS
+
+
+@pytest.fixture(scope="module")
+def times():
+    return {rm: {s: simulate(s, w).batch_time for s in SYSTEMS[:-1]}
+            for rm, w in RMS.items()}
+
+
+def test_system_ordering(times):
+    """SSD >> PMEM > PCIe >= CXL-D; CXL fastest (paper Fig. 11)."""
+    for rm, t in times.items():
+        assert t["SSD"] > 3 * t["PMEM"], rm
+        assert t["PMEM"] > t["PCIe"] * 0.99, rm
+        assert t["PCIe"] >= t["CXL-D"] * 0.999, rm
+        assert t["CXL"] == min(t.values()), rm
+
+
+def test_claim_5_2x_speedup(times):
+    avg = np.mean([times[r]["PMEM"] / times[r]["CXL"] for r in RMS])
+    assert 4.2 <= avg <= 6.2, avg      # paper: 5.2x
+
+
+def test_claim_cxl_d_vs_pcie(times):
+    avg = np.mean([1 - times[r]["CXL-D"] / times[r]["PCIe"] for r in RMS])
+    assert 0.10 <= avg <= 0.35, avg    # paper: 23%
+
+
+def test_claim_relaxation_gain(times):
+    avg = np.mean([1 - times[r]["CXL"] / times[r]["CXL-B"] for r in RMS])
+    assert 0.07 <= avg <= 0.25, avg    # paper: 14%
+
+
+def test_claim_energy_76pct():
+    t = energy_table()
+    sav = np.mean([1 - t[r]["CXL"] for r in t])
+    assert 0.66 <= sav <= 0.86, sav    # paper: 76%
+
+
+def test_energy_dram_vs_pmem_direction():
+    """Embedding-intensive RMs: DRAM costs more than PMEM (density/static
+    power); paper Fig. 13 discussion."""
+    t = energy_table()
+    assert t["RM1"]["DRAM"] > 1.0
+    assert t["RM2"]["DRAM"] > 1.0
+
+
+def test_breakdown_fields(times):
+    r = simulate("CXL-B", RMS["RM1"])
+    assert set(r.breakdown) == {"B-MLP", "T-MLP", "Embedding", "Transfer",
+                                "Checkpoint"}
+    assert r.batch_time > 0
+    assert all(seg.end >= seg.start for seg in r.trace)
+
+
+def test_relaxed_checkpoint_hidden():
+    """CXL's exposed checkpoint must be smaller than CXL-D's everywhere and
+    near-fully hidden on MLP-bound RMs (long idle windows)."""
+    for rm, w in RMS.items():
+        d = simulate("CXL-D", w).breakdown["Checkpoint"]
+        c = simulate("CXL", w).breakdown["Checkpoint"]
+        assert c <= d * 0.8 + 1e-9, rm
+    for rm in ("RM3", "RM4"):
+        d = simulate("CXL-D", RMS[rm]).breakdown["Checkpoint"]
+        c = simulate("CXL", RMS[rm]).breakdown["Checkpoint"]
+        assert c <= d * 0.2 + 1e-9, rm

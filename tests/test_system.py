@@ -1,0 +1,147 @@
+"""End-to-end behaviour tests: losses decrease, full train->crash->resume
+cycle, data determinism, gradient compression."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import CheckpointConfig, TrainConfig
+from repro.core.checkpoint import recovery
+from repro.core.checkpoint.manager import CheckpointManager
+from repro.data.lookahead import LookaheadIterator
+from repro.data.synthetic import make_batches
+from repro.training import train_loop
+
+
+def test_dlrm_learns():
+    b = get_arch("dlrm-rm1", smoke=True)
+    tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01)
+    data = make_batches(b.model, 32, 0, seed=0)
+    _, losses = train_loop.train(b.model, tc, data, 30, relaxed=True)
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first, (first, last)
+
+
+def test_lm_learns():
+    b = get_arch("tinyllama-1.1b", smoke=True)
+    tc = TrainConfig(learning_rate=1e-3, embed_learning_rate=0.05)
+    data = make_batches(b.model, 8, 32, seed=0)
+    _, losses = train_loop.train(b.model, tc, data, 25, relaxed=True)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_full_cycle_with_lookahead_and_ckpt(tmp_path):
+    """Train w/ lookahead pipeline + async ckpt, kill, recover, continue —
+    the complete TrainingCXL loop."""
+    tmp = str(tmp_path / "ck")
+    b = get_arch("dlrm-rm2", smoke=True)
+    cc = CheckpointConfig(directory=tmp, dense_interval=2)
+    tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01,
+                     checkpoint=cc)
+    raw = make_batches(b.model, 16, 0, seed=1)
+    data = LookaheadIterator(raw, b.model, depth=2)
+
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+    _, l1 = train_loop.train(b.model, tc, data, 6, relaxed=True, state=st0,
+                             ckpt_manager=mgr)
+    mgr.flush()
+    del mgr  # "crash"
+
+    rec = recovery.recover(tmp)
+    assert rec.mirror_step == 5
+    fresh = init_fn(jax.random.PRNGKey(tc.seed))
+    st, resume = recovery.resume_train_state(rec, fresh)
+    data2 = LookaheadIterator(make_batches(b.model, 16, 0, seed=1), b.model,
+                              depth=2, start_step=resume)
+    _, l2 = train_loop.train(b.model, tc, data2, 4, relaxed=True, state=st,
+                             start_step=resume)
+    assert all(np.isfinite(l2))
+    # uninterrupted reference: dense tier trailed by <=1 step (interval 2)
+    _, ref = train_loop.train(b.model, tc,
+                              make_batches(b.model, 16, 0, seed=1), 10,
+                              relaxed=True)
+    np.testing.assert_allclose(l2, ref[6:], rtol=0.2, atol=0.05)
+
+
+def test_elastic_restore_dtype_and_shape(tmp_path):
+    """Recovery hands back global numpy state that loads into a fresh init
+    of a different topology — shapes/dtypes must line up."""
+    tmp = str(tmp_path / "ck")
+    b = get_arch("tinyllama-1.1b", smoke=True)
+    cc = CheckpointConfig(directory=tmp, dense_interval=1)
+    tc = TrainConfig(checkpoint=cc)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+    train_loop.train(b.model, tc, make_batches(b.model, 2, 8), 2,
+                     relaxed=True, state=st0, ckpt_manager=mgr)
+    mgr.flush()
+    rec = recovery.recover(tmp)
+    fresh = init_fn(jax.random.PRNGKey(42))   # different init
+    st, resume = recovery.resume_train_state(rec, fresh)
+    same = jax.tree.map(lambda a, b: a.shape == b.shape and a.dtype == b.dtype,
+                        st["dense"], fresh["dense"])
+    assert all(jax.tree.leaves(same))
+    assert resume == 2
+
+
+def test_data_determinism():
+    cfg = get_arch("dlrm-rm1", smoke=True).model
+    a = make_batches(cfg, 4, 0, seed=5).next(3)
+    b = make_batches(cfg, 4, 0, seed=5).next(3)
+    np.testing.assert_array_equal(np.asarray(a["sparse"]),
+                                  np.asarray(b["sparse"]))
+
+
+def test_lookahead_window():
+    cfg = get_arch("dlrm-rm1", smoke=True).model
+    it = LookaheadIterator(make_batches(cfg, 2, 0, seed=0), cfg, depth=3)
+    b0 = it.current()
+    p1 = it.peek(1)
+    got = it.advance()
+    np.testing.assert_array_equal(np.asarray(got["sparse"]),
+                                  np.asarray(b0["sparse"]))
+    np.testing.assert_array_equal(np.asarray(it.current()["sparse"]),
+                                  np.asarray(p1["sparse"]))
+
+
+def test_gradient_compression_roundtrip():
+    from repro.distributed import compression
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    q, scale = compression.int8_compress(g)
+    back = compression.int8_decompress(q, scale)
+    err = float(jnp.abs(back - g).max() / jnp.abs(g).max())
+    assert err < 0.02
+
+    idx, vals, shape = compression.topk_compress(g, k=64)
+    back2 = compression.topk_decompress(idx, vals, shape)
+    flat = np.abs(np.asarray(g)).ravel()
+    thresh = np.sort(flat)[-64]
+    mask = flat >= thresh
+    np.testing.assert_allclose(np.asarray(back2).ravel()[mask],
+                               np.asarray(g).ravel()[mask], rtol=1e-6)
+
+
+def test_error_feedback_converges():
+    from repro.distributed import compression
+    ef = compression.ErrorFeedback()
+    params = {"w": jnp.zeros((16, 8))}
+    errors = ef.init(params)
+    rng = np.random.default_rng(1)
+    total_sent = jnp.zeros((16, 8))
+    total_true = jnp.zeros((16, 8))
+    for _ in range(20):
+        g = {"w": jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))}
+        sent, errors = ef.apply(g, errors, k_frac=0.25)
+        total_sent = total_sent + sent["w"]
+        total_true = total_true + g["w"]
+    # error feedback: cumulative sent tracks cumulative truth
+    resid = float(jnp.abs(total_true - total_sent - errors["w"]).max())
+    assert resid < 1e-4
