@@ -1,15 +1,27 @@
-"""Fault-tolerance demo with REAL process death: launches a trainer
-subprocess, SIGKILLs it mid-run (no cleanup, no flush — like a node loss),
-then recovers from the persistent state and finishes training.
+"""Fault-tolerance demo over the emulated CXL/PMEM memory pool.
 
-    PYTHONPATH=src python examples/fault_tolerance_demo.py
+Two drills, selected by the pool backend:
+
+  * ``--pool-backend pmem`` (default): REAL process death. Launches a trainer
+    subprocess checkpointing into a pmem pool image, SIGKILLs it mid-run (no
+    cleanup, no flush — like a node loss), then reopens the pool image from
+    the parent process, recovers, and finishes training.
+  * ``--pool-backend dram``: the pool is volatile across processes, so the
+    drill is in-process: a deterministic fault schedule crashes the writer
+    between undo COMMIT and mirror apply, the device loses its unpersisted
+    cache (power-loss emulation), and recovery rolls back to a consistent
+    step from the surviving battery-backed image.
+
+Both paths finish by printing the pool's traffic/energy counters
+(``repro.pool.metrics``).
+
+    PYTHONPATH=src python examples/fault_tolerance_demo.py [--pool-backend pmem]
 """
+import argparse
 import os
 import shutil
-import signal
 import subprocess
 import sys
-import time
 
 CKPT = "/tmp/repro_ft_demo"
 
@@ -23,7 +35,7 @@ from repro.data.synthetic import make_batches
 from repro.training import train_loop
 
 b = get_arch("dlrm-rm1", smoke=True)
-cc = CheckpointConfig(directory="%s", dense_interval=3)
+cc = CheckpointConfig(directory="%s", dense_interval=3, pool_backend="%s")
 tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01, checkpoint=cc)
 data = make_batches(b.model, 16, 0, seed=11)
 init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
@@ -33,16 +45,15 @@ def report(n, m):
     print(f"child step {n} loss {float(m['loss']):.4f}", flush=True)
 train_loop.train(b.model, tc, data, 1000, relaxed=True, state=st,
                  ckpt_manager=mgr, on_metrics=report)
-""" % CKPT
+"""
 
 
-def main():
-    shutil.rmtree(CKPT, ignore_errors=True)
-    print("== launching trainer subprocess ==")
-    proc = subprocess.Popen([sys.executable, "-c", TRAINER],
-                            stdout=subprocess.PIPE, text=True,
-                            cwd=os.path.dirname(os.path.dirname(
-                                os.path.abspath(__file__))))
+def crash_pmem_subprocess():
+    print("== launching trainer subprocess (pmem pool) ==")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", TRAINER % (CKPT, "pmem")],
+        stdout=subprocess.PIPE, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     # let it make progress, then kill -9 (uncontrolled node failure)
     steps_seen = 0
     for line in proc.stdout:
@@ -53,29 +64,88 @@ def main():
     proc.kill()
     proc.wait()
     print(f"== SIGKILLed trainer after {steps_seen} reported steps ==")
+    return None   # recovery reopens the pool image from disk
+
+
+def crash_dram_inprocess():
+    """Deterministic in-process crash drill on the volatile backend."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.configs.base import CheckpointConfig, TrainConfig
+    from repro.core.checkpoint.manager import CheckpointManager
+    from repro.data.synthetic import make_batches
+    from repro.pool import FaultSchedule, InjectedCrash
+    from repro.training import train_loop
+
+    print("== in-process crash drill (dram pool, injected fault) ==")
+    b = get_arch("dlrm-rm1", smoke=True)
+    cc = CheckpointConfig(directory=CKPT, dense_interval=3,
+                          pool_backend="dram")
+    tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01,
+                     checkpoint=cc)
+    data = make_batches(b.model, 16, 0, seed=11)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st = init_fn(jax.random.PRNGKey(0))
+    faults = FaultSchedule.crash_at("tier_e.between-commit-and-apply",
+                                    occurrence=9)
+    mgr = CheckpointManager(b.model, cc, embed_init=st["embed"],
+                            faults=faults)
+    try:
+        train_loop.train(b.model, tc, data, 1000, relaxed=True, state=st,
+                         ckpt_manager=mgr,
+                         on_metrics=lambda n, m: print(
+                             f"  step {n} loss {float(m['loss']):.4f}"))
+        raise SystemExit("fault never fired?")
+    except InjectedCrash as e:
+        print(f"== {e} ==")
+    mgr.pool.crash()      # power loss: unpersisted cache is gone
+    return mgr.pool
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool-backend", choices=["dram", "pmem"],
+                    default="pmem")
+    args = ap.parse_args()
+    shutil.rmtree(CKPT, ignore_errors=True)
 
     sys.path.insert(0, "src")
+    if args.pool_backend == "pmem":
+        surviving_pool = crash_pmem_subprocess()
+    else:
+        surviving_pool = crash_dram_inprocess()
+
     import jax
+
     from repro.configs import get_arch
     from repro.configs.base import CheckpointConfig, TrainConfig
     from repro.core.checkpoint import recovery
+    from repro.core.checkpoint.manager import CheckpointManager
     from repro.data.synthetic import make_batches
     from repro.training import train_loop
 
-    rec = recovery.recover(CKPT)
+    rec = recovery.recover(CKPT, pool=surviving_pool)
     print(f"== recovered: embeddings@{rec.mirror_step} dense@{rec.dense_step} "
           f"gap={rec.gap} rolled_back={rec.rolled_back} ==")
     assert rec.mirror_step >= 0
 
     b = get_arch("dlrm-rm1", smoke=True)
-    tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01)
+    cc = CheckpointConfig(directory=CKPT, dense_interval=3,
+                          pool_backend=args.pool_backend)
+    tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01,
+                     checkpoint=cc)
     init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
     st, resume = recovery.resume_train_state(rec, init_fn(jax.random.PRNGKey(0)))
+    mgr = CheckpointManager(b.model, cc, pool=rec.pool)
+    mgr.init_mirror(st["embed"], step=rec.mirror_step)
     data = make_batches(b.model, 16, 0, seed=11)
     _, losses = train_loop.train(b.model, tc, data, 10, relaxed=True,
-                                 state=st, start_step=resume)
+                                 state=st, start_step=resume,
+                                 ckpt_manager=mgr)
     print(f"== resumed at step {resume}, 10 more steps, "
           f"final loss {losses[-1]:.4f} ==")
+    print(mgr.pool.metrics.report())
     print("fault-tolerance demo PASSED")
 
 

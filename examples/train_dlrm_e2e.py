@@ -74,7 +74,7 @@ def main():
           f"gap={rec.gap} rolled_back={rec.rolled_back}")
     fresh = init_fn(jax.random.PRNGKey(0))
     state, resume = recovery.resume_train_state(rec, fresh)
-    mgr = CheckpointManager(cfg, tc.checkpoint)
+    mgr = CheckpointManager(cfg, tc.checkpoint, pool=rec.pool)
     mgr.init_mirror(state["embed"], step=rec.mirror_step)
     data2 = LookaheadIterator(make_batches(cfg, args.batch, 0, seed=0), cfg,
                               depth=2, start_step=resume)
@@ -88,6 +88,7 @@ def main():
     print(f"== done: {len(all_losses)} steps in {time.time()-t0:.1f}s; "
           f"loss {np.mean(all_losses[:10]):.4f} -> "
           f"{np.mean(all_losses[-10:]):.4f} ==")
+    print(mgr.pool.metrics.report())
     assert np.mean(all_losses[-10:]) < np.mean(all_losses[:10])
 
 

@@ -216,6 +216,7 @@ class CheckpointConfig:
     async_write: bool = True
     max_undo_logs: int = 64        # ring of undo logs kept before GC
     writer_deadline_s: float = 0.0 # 0 = no deadline (relaxed ckpt "stop" knob)
+    pool_backend: str = "pmem"     # repro.pool backend: "pmem" | "dram"
 
 
 @dataclass(frozen=True)

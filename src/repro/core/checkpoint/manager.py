@@ -1,22 +1,32 @@
-"""Two-tier asynchronous checkpoint manager (the CXL-MEM checkpointing logic).
+"""Two-tier asynchronous checkpoint manager (the CXL-MEM checkpointing logic)
+over the emulated memory pool (``repro.pool``).
+
+All persistent state lives in named pool domains of one ``PoolDevice``:
+
+    embedding-mirror/rows   the data region (host mirror of the table)
+    undo-log/*              the log region (per-step undo ring, COMMIT flags)
+    manifest/manifest       A/B crash-atomic manifest (mirror/dense steps)
+    dense/slot{0,1}         double-buffered dense snapshot blobs
 
 Tier-E (embedding pool, every step — paper: "the embedding log should be
 permanently stored for every batch"):
     1. the *batch-aware* property: touched indices are known from the sparse
-       features before compute finishes; the undo image (old rows) is read
-       from the host mirror — no device traffic;
-    2. write undo log + COMMIT flag;
-    3. apply new row values to the mirror in place (idempotent writes);
-    4. advance the manifest (fsync'd rename).
+       features before compute finishes; the undo image is captured pool-side
+       (``nmp.undo_snapshot`` — no link traffic);
+    2. write undo entry + COMMIT flag (two persist barriers);
+    3. apply new row values to the mirror region (idempotent near-memory
+       row_update + persist);
+    4. advance the manifest (A/B slot write).
+Each stage boundary is a named fault-injection point, so tests can crash
+exactly between COMMIT and apply.
 
 Tier-M (dense params, every K steps — the *relaxed batch-aware checkpoint*):
-    full atomic snapshot of dense params + optimizer state. May trail tier-E
-    by up to K batches (paper Fig. 9: hundreds of batches cost <0.01 %
-    accuracy). An optional writer deadline emulates "MLP logging stops when
-    the top-MLP completes": a snapshot that misses its deadline is skipped,
-    never blocking training.
+    the pytree is serialized to a CRC'd blob and written to the dense slot
+    the manifest does NOT currently point at; the manifest flips to it only
+    after the blob persists. May trail tier-E by up to K batches. An optional
+    writer deadline emulates "MLP logging stops when the top-MLP completes".
 
-All disk work runs on a background writer thread, off the critical path —
+All pool work runs on a background writer thread, off the critical path —
 ``on_step`` only enqueues. ``flush()`` drains (end of training / tests).
 """
 from __future__ import annotations
@@ -30,8 +40,12 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core.checkpoint import store, undo_log
-from repro.training import state as st
+from repro.core.checkpoint import store
+from repro.core.checkpoint.undo_log import UndoRing
+from repro.pool.allocator import JsonRegion, PoolAllocator
+from repro.pool.device import DramPool, PmemPool, PoolDevice
+from repro.pool.faults import FaultSchedule, InjectedCrash
+from repro.pool.nmp import NmpQueue
 
 
 def _table_of(embed: dict) -> tuple[str, Any]:
@@ -53,15 +67,21 @@ def flatten_touched(cfg, touched: np.ndarray) -> np.ndarray:
 
 
 class CheckpointManager:
-    def __init__(self, cfg, ckpt_cfg, *, embed_init: Optional[dict] = None):
+    def __init__(self, cfg, ckpt_cfg, *, embed_init: Optional[dict] = None,
+                 pool: Optional[PoolDevice] = None,
+                 faults: Optional[FaultSchedule] = None):
         self.cfg = cfg
         self.ccfg = ckpt_cfg
         self.root = ckpt_cfg.directory
-        os.makedirs(os.path.join(self.root, "logs"), exist_ok=True)
-        os.makedirs(os.path.join(self.root, "dense"), exist_ok=True)
-        self.manifest_path = os.path.join(self.root, "MANIFEST.json")
-        self.mirror: dict[str, np.ndarray] = {}
-        self.mirror_acc: Optional[np.ndarray] = None
+        os.makedirs(self.root, exist_ok=True)
+        self.pool = pool
+        self.faults = faults
+        if pool is not None and faults is not None and pool.faults is None:
+            pool.faults = faults
+        self._alloc: Optional[PoolAllocator] = None
+        self.ring: Optional[UndoRing] = None
+        self.manifest: Optional[JsonRegion] = None
+        self.nmp: Optional[NmpQueue] = None
         self._q: queue.Queue = queue.Queue(maxsize=8)
         self._err: Optional[BaseException] = None
         self._worker = threading.Thread(target=self._run, daemon=True)
@@ -71,7 +91,36 @@ class CheckpointManager:
         if embed_init is not None:
             self.init_mirror(embed_init)
 
-    # -- data region -------------------------------------------------------
+    # -- pool plumbing -------------------------------------------------------
+    def _open_pool(self, capacity_hint: int):
+        if self.pool is None:
+            backend = getattr(self.ccfg, "pool_backend", "pmem")
+            if backend == "pmem":
+                self.pool = PmemPool(os.path.join(self.root, "pool.img"),
+                                     capacity_hint, faults=self.faults)
+            else:
+                self.pool = DramPool(capacity_hint, faults=self.faults)
+            store.write_json_atomic(os.path.join(self.root, "POOL.json"),
+                                    {"backend": backend})
+        self._alloc = PoolAllocator(self.pool)
+        self.manifest = JsonRegion.create(self._alloc.domain("manifest"),
+                                          "manifest")
+        self.ring = UndoRing(self._alloc, self.ccfg.max_undo_logs)
+        self.nmp = NmpQueue(self.pool)
+        self.dense_dom = self._alloc.domain("dense")
+
+    def _hit(self, point: str):
+        """Manager-level fault point (between pipeline stages)."""
+        if self.faults is not None:
+            if self.faults.hit(point) == "crash-after":
+                raise InjectedCrash(point, self.faults.counts[point])
+
+    @property
+    def mirror_rows(self) -> np.ndarray:
+        """Writable view of the data region (cache side)."""
+        return self.mirror_region.view_array()
+
+    # -- data region ---------------------------------------------------------
     def init_mirror(self, embed: dict, step: int = -1):
         """Materialise the persistent 'data region' from the initial pool."""
         name, tab = _table_of(embed)
@@ -79,21 +128,30 @@ class CheckpointManager:
         self.table_name = name
         self.table_shape = arr.shape
         flat = arr.reshape(-1, arr.shape[-1])
-        self.mirror_path = os.path.join(self.root, "mirror.dat")
-        mm = np.memmap(self.mirror_path, dtype=np.float32, mode="w+",
-                       shape=flat.shape)
-        mm[:] = flat
-        mm.flush()
-        self.mirror["rows"] = mm
-        store.write_json_atomic(self.manifest_path, {
-            "mirror_step": step, "dense_step": -1,
-            "table_name": name, "table_shape": list(arr.shape)})
+        if self._alloc is None:
+            self._open_pool(2 * flat.nbytes + (1 << 20))
+        self.mirror_region = self._alloc.domain("embedding-mirror").alloc(
+            "rows", shape=flat.shape, dtype="float32")
+        self.mirror_region.write_array(flat, tag="mirror-load")
+        self.mirror_region.persist(point="mirror-load")
+        man = self.manifest.read() or {"dense_step": -1, "dense_slot": 0,
+                                       "dense_len": 0}
+        man.update(mirror_step=step, table_name=name,
+                   table_shape=list(arr.shape),
+                   max_undo_logs=self.ccfg.max_undo_logs)
+        self.manifest.write(man, point="manifest-init")
 
     # -- hooks ---------------------------------------------------------------
+    def _raise_writer_err(self):
+        if self._err is not None:
+            err = self._err
+            if isinstance(err, InjectedCrash):
+                raise err
+            raise RuntimeError("checkpoint writer failed") from err
+
     def on_step(self, step: int, state: dict, feed: Optional[dict]):
         """Called by the train loop after step N. Non-blocking."""
-        if self._err is not None:
-            raise RuntimeError("checkpoint writer failed") from self._err
+        self._raise_writer_err()
         if feed is None:   # strict mode: derive touched rows from the batch
             return
         idx = flatten_touched(self.cfg, jax.device_get(feed["touched"]))
@@ -113,14 +171,22 @@ class CheckpointManager:
 
     def flush(self):
         self._q.join()
-        if self._err is not None:
-            raise RuntimeError("checkpoint writer failed") from self._err
+        self._raise_writer_err()
+
+    def close(self):
+        try:
+            self.flush()
+        finally:
+            if self.pool is not None:
+                self.pool.close()
 
     # -- writer thread -------------------------------------------------------
     def _run(self):
         while True:
             item = self._q.get()
             try:
+                if self._err is not None:
+                    continue           # crashed: the machine is down
                 if item[0] == "tier_e":
                     self._do_tier_e(*item[1:])
                 else:
@@ -131,15 +197,20 @@ class CheckpointManager:
                 self._q.task_done()
 
     def _do_tier_e(self, step: int, idx: np.ndarray, new_rows: np.ndarray):
-        mm = self.mirror["rows"]
-        old_rows = np.array(mm[idx])              # undo image from the mirror
-        undo_log.write_log(self.root, step, idx, old_rows)   # 1-2: log+COMMIT
-        mm[idx] = new_rows                         # 3: in-place apply
-        mm.flush()
-        man = store.read_json(self.manifest_path)
-        man["mirror_step"] = step                  # 4: persistent flag
-        store.write_json_atomic(self.manifest_path, man)
-        undo_log.gc(self.root, step - self.ccfg.max_undo_logs)
+        # 1: undo image captured pool-side (batch-aware, no link bytes)
+        old_rows = self.nmp.undo_snapshot(self.mirror_region, idx)
+        # 2: log entry + COMMIT flag (undo-payload / undo-commit barriers)
+        self.ring.append(step, idx, old_rows)
+        self._hit("tier_e.between-commit-and-apply")
+        # 3: in-place idempotent apply (near-memory row update + persist)
+        self.nmp.row_update(self.mirror_region, idx, new_rows,
+                            point="mirror-apply")
+        self._hit("tier_e.between-apply-and-manifest")
+        # 4: persistent step flag
+        man = self.manifest.read()
+        man["mirror_step"] = step
+        self.manifest.write(man, point="manifest-advance")
+        self.ring.gc(step - self.ccfg.max_undo_logs)
         self.stats["tier_e"] += 1
         self.stats["bytes_e"] += idx.nbytes + new_rows.nbytes
 
@@ -148,20 +219,20 @@ class CheckpointManager:
                 and time.monotonic() - t_enq > self.ccfg.writer_deadline_s):
             self.stats["tier_m_skipped"] += 1      # relaxed ckpt: never block
             return
-        d = os.path.join(self.root, "dense", f"step_{step:08d}")
-        store.save_pytree(d, dense_np, {"step": step})
-        man = store.read_json(self.manifest_path)
-        prev = man.get("dense_step", -1)
-        man["dense_step"] = step
-        store.write_json_atomic(self.manifest_path, man)
-        if prev >= 0 and prev != step:             # paper step 4: GC old ckpt
-            import shutil
-            shutil.rmtree(os.path.join(self.root, "dense",
-                                       f"step_{prev:08d}"),
-                          ignore_errors=True)
+        blob = store.serialize_tree(dense_np, {"step": step})
+        man = self.manifest.read()
+        slot = 1 - man.get("dense_slot", 1)        # write the spare slot
+        cap = max(len(blob), 1 << 12)
+        region = self.dense_dom.get(f"slot{slot}")
+        if region is None or region.nbytes < len(blob):
+            region = self.dense_dom.alloc(
+                f"slot{slot}", shape=(int(cap * 1.5),), dtype="uint8")
+        self.pool.write(region.off, blob, tag="dense")
+        self.pool.persist(region.off, len(blob), point="dense-blob")
+        man.update(dense_step=step, dense_slot=slot, dense_len=len(blob))
+        self.manifest.write(man, point="manifest-dense")
         self.stats["tier_m"] += 1
-        self.stats["bytes_m"] += sum(a.nbytes for a in
-                                     jax.tree.leaves(dense_np))
+        self.stats["bytes_m"] += len(blob)
 
 
 def jnp_take(flat_tab, idx: np.ndarray):

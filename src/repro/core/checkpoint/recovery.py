@@ -1,16 +1,18 @@
-"""Recovery + elastic restart.
+"""Recovery + elastic restart from the emulated memory pool.
 
 On restart after a failure:
-  1. read the manifest (atomic — always a consistent snapshot);
-  2. if an undo log exists for step > manifest.mirror_step with a COMMIT
-     flag, the mirror apply may have been interrupted mid-write: roll the
-     logged rows back (paper: "even if a power failure occurs during an
-     embedding update, training can be resumed from that batch if the
-     persistent flag is set");
-  3. load the last committed dense snapshot (possibly trailing by up to K
-     steps — the relaxed gap, bounded-accuracy-impact per paper Fig. 9a);
+  1. reopen the pool (pmem: the mmap'd image survives process death; dram:
+     the caller passes the surviving in-process device) and read the A/B
+     manifest — always a consistent snapshot;
+  2. if the undo ring holds a COMMITted entry for step > manifest.mirror_step,
+     the mirror apply may have been interrupted mid-write: roll the logged
+     rows back (paper: "even if a power failure occurs during an embedding
+     update, training can be resumed from that batch if the persistent flag
+     is set"); rollback is an idempotent near-memory row_update;
+  3. load the last committed dense snapshot blob (possibly trailing by up to
+     K steps — the relaxed gap, bounded-accuracy-impact per paper Fig. 9a);
   4. hand back numpy state; the caller ``jax.device_put``s it under ANY mesh
-     (elastic restart: the on-disk layout is mesh-agnostic global rows).
+     (elastic restart: the pool layout is mesh-agnostic global rows).
 """
 from __future__ import annotations
 
@@ -20,7 +22,11 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.checkpoint import store, undo_log
+from repro.core.checkpoint import store
+from repro.core.checkpoint.undo_log import UndoRing
+from repro.pool.allocator import JsonRegion, PoolAllocator
+from repro.pool.device import PmemPool, PoolDevice, PoolError
+from repro.pool.nmp import NmpQueue
 
 
 @dataclass
@@ -33,46 +39,69 @@ class RecoveredState:
     dense_step: int                 # dense tier consistent at this step
     rolled_back: bool               # an interrupted apply was undone
     gap: int                        # relaxed staleness: mirror_step - dense_step
+    pool: Optional[PoolDevice] = None   # reopened device (metrics, reuse)
 
     def embed_params(self) -> dict:
         return {self.table_name:
                 self.embed_rows.reshape(self.table_shape)}
 
 
-def recover(root: str) -> RecoveredState:
-    man = store.read_json(os.path.join(root, "MANIFEST.json"))
-    shape = tuple(man["table_shape"])
-    flat_shape = (int(np.prod(shape[:-1])), shape[-1])
-    mm = np.memmap(os.path.join(root, "mirror.dat"), dtype=np.float32,
-                   mode="r+", shape=flat_shape)
+def open_pool(root: str,
+              pool: Optional[PoolDevice] = None) -> PoolDevice:
+    """Reopen the checkpoint pool for `root`. A surviving in-process device
+    (dram backend, or an already-open pmem handle) takes precedence."""
+    if pool is not None:
+        return pool
+    info = store.read_json(os.path.join(root, "POOL.json"))
+    if info["backend"] != "pmem":
+        raise PoolError(
+            f"pool backend {info['backend']!r} is volatile across processes; "
+            "pass the surviving PoolDevice to recover(root, pool=...)")
+    return PmemPool.open(os.path.join(root, "pool.img"))
+
+
+def recover(root: str, pool: Optional[PoolDevice] = None) -> RecoveredState:
+    dev = open_pool(root, pool)
+    alloc = PoolAllocator(dev)
+    man = JsonRegion.create(alloc.domain("manifest"), "manifest").read()
+    if man is None:
+        raise store.CorruptError(f"{root}: no valid manifest in pool")
+    mirror = alloc.domain("embedding-mirror").get("rows")
+    if mirror is None:
+        raise store.CorruptError(f"{root}: no embedding mirror region")
     mirror_step = man["mirror_step"]
+    shape = tuple(man["table_shape"])
 
     # step 2: roll back committed-but-unapplied logs (newest first)
+    ring = UndoRing(alloc, man.get("max_undo_logs", 64))
+    nmp = NmpQueue(dev)
     rolled = False
-    for step in sorted(undo_log.committed_steps(root), reverse=True):
+    for step in sorted(ring.committed_steps(), reverse=True):
         if step > mirror_step:
-            entry = undo_log.read_log(root, step)
+            entry = ring.read(step)
             if entry is not None:
                 idx, old_rows, _ = entry
-                mm[idx] = old_rows
+                nmp.row_update(mirror, idx, old_rows, point="rollback")
                 rolled = True
-    if rolled:
-        mm.flush()
 
     dense = None
     dense_step = man.get("dense_step", -1)
     if dense_step >= 0:
-        d = os.path.join(root, "dense", f"step_{dense_step:08d}")
+        region = alloc.domain("dense").get(f"slot{man['dense_slot']}")
         try:
-            dense, _ = store.load_pytree(d)
+            if region is None:
+                raise store.CorruptError("dense slot region missing")
+            blob = bytes(dev.read(region.off, man["dense_len"], tag="dense"))
+            dense, _ = store.deserialize_tree(blob)
         except store.CorruptError:
             dense, dense_step = None, -1
 
     return RecoveredState(
-        embed_rows=np.array(mm), table_name=man["table_name"],
+        embed_rows=np.array(mirror.view_array()), table_name=man["table_name"],
         table_shape=shape, dense=dense, mirror_step=mirror_step,
         dense_step=dense_step, rolled_back=rolled,
-        gap=mirror_step - dense_step if dense_step >= 0 else -1)
+        gap=mirror_step - dense_step if dense_step >= 0 else -1,
+        pool=dev)
 
 
 def resume_train_state(rec: RecoveredState, init_state: dict) -> tuple[dict, int]:

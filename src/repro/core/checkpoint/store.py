@@ -27,42 +27,106 @@ def _fsync_file(f):
     os.fsync(f.fileno())
 
 
+def fsync_dir(path: str):
+    """fsync a directory so a just-published rename itself is durable.
+
+    ``os.replace`` makes the swap atomic but the *directory entry* lives in
+    the parent dir's data; without this a crash after the rename can roll the
+    namespace back to the old entry (the classic lost-rename bug)."""
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def write_array(path: str, arr: np.ndarray):
     """Chunked binary write: header(json) + [len|crc|payload]*."""
     tmp = path + ".tmp"
-    header = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
-    raw = np.ascontiguousarray(arr).tobytes()
     with open(tmp, "wb") as f:
-        hj = json.dumps(header).encode()
-        f.write(_MAGIC + struct.pack("<I", len(hj)) + hj)
-        for off in range(0, max(len(raw), 1), CHUNK):
-            chunk = raw[off:off + CHUNK]
-            f.write(struct.pack("<II", len(chunk), zlib.crc32(chunk)))
-            f.write(chunk)
+        f.write(serialize_array(arr))
         _fsync_file(f)
     os.replace(tmp, path)  # atomic publish
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
+
+
+def serialize_array(arr: np.ndarray) -> bytes:
+    """CRC-chunked wire form of one array (file and pool-region payloads
+    share this format, so a pool blob is readable by the same decoder)."""
+    header = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
+    raw = np.ascontiguousarray(arr).tobytes()
+    hj = json.dumps(header).encode()
+    out = [_MAGIC, struct.pack("<I", len(hj)), hj]
+    for off in range(0, max(len(raw), 1), CHUNK):
+        chunk = raw[off:off + CHUNK]
+        out.append(struct.pack("<II", len(chunk), zlib.crc32(chunk)))
+        out.append(chunk)
+    return b"".join(out)
 
 
 def read_array(path: str) -> np.ndarray:
     with open(path, "rb") as f:
-        magic = f.read(4)
-        if magic != _MAGIC:
-            raise CorruptError(f"{path}: bad magic")
-        (hlen,) = struct.unpack("<I", f.read(4))
-        header = json.loads(f.read(hlen))
-        total = int(np.prod(header["shape"])) * np.dtype(header["dtype"]).itemsize
-        buf = bytearray()
-        while len(buf) < total:
-            hdr = f.read(8)
-            if len(hdr) < 8:
-                raise CorruptError(f"{path}: truncated")
-            clen, crc = struct.unpack("<II", hdr)
-            chunk = f.read(clen)
-            if len(chunk) != clen or zlib.crc32(chunk) != crc:
-                raise CorruptError(f"{path}: chunk CRC mismatch")
-            buf.extend(chunk)
-    return np.frombuffer(bytes(buf), dtype=header["dtype"]) \
+        arr, _ = deserialize_array(f.read(), name=path)
+    return arr
+
+
+def deserialize_array(buf: bytes, off: int = 0,
+                      name: str = "<blob>") -> tuple[np.ndarray, int]:
+    """Decode one serialize_array record at `off`; returns (arr, next_off)."""
+    if buf[off:off + 4] != _MAGIC:
+        raise CorruptError(f"{name}: bad magic")
+    (hlen,) = struct.unpack_from("<I", buf, off + 4)
+    header = json.loads(buf[off + 8:off + 8 + hlen])
+    off += 8 + hlen
+    total = int(np.prod(header["shape"])) * np.dtype(header["dtype"]).itemsize
+    # mirror the writer exactly: a 0-byte array still emits one (empty)
+    # chunk record, which must be consumed to keep blob records aligned
+    n_records = max(1, -(-total // CHUNK))
+    out = bytearray()
+    for _ in range(n_records):
+        if off + 8 > len(buf):
+            raise CorruptError(f"{name}: truncated")
+        clen, crc = struct.unpack_from("<II", buf, off)
+        chunk = buf[off + 8:off + 8 + clen]
+        if len(chunk) != clen or zlib.crc32(chunk) != crc:
+            raise CorruptError(f"{name}: chunk CRC mismatch")
+        out.extend(chunk)
+        off += 8 + clen
+    if len(out) != total:
+        raise CorruptError(f"{name}: truncated")
+    arr = np.frombuffer(bytes(out), dtype=header["dtype"]) \
         .reshape(header["shape"])
+    return arr, off
+
+
+_TREE_MAGIC = b"RPTR"
+
+
+def serialize_tree(tree: Any, extra_meta: dict | None = None) -> bytes:
+    """Whole-pytree blob (for pool-resident dense snapshots): a CRC'd key
+    directory followed by per-array serialize_array records."""
+    flat = _flatten(tree)
+    entries = [serialize_array(arr) for arr in flat.values()]
+    meta = {"keys": list(flat.keys()), "lens": [len(e) for e in entries],
+            "extra": extra_meta or {}}
+    mj = json.dumps(meta).encode()
+    head = _TREE_MAGIC + struct.pack("<II", len(mj), zlib.crc32(mj)) + mj
+    return head + b"".join(entries)
+
+
+def deserialize_tree(buf: bytes) -> tuple[Any, dict]:
+    if buf[:4] != _TREE_MAGIC:
+        raise CorruptError("tree blob: bad magic")
+    mlen, mcrc = struct.unpack_from("<II", buf, 4)
+    mj = buf[12:12 + mlen]
+    if len(mj) != mlen or zlib.crc32(mj) != mcrc:
+        raise CorruptError("tree blob: meta CRC mismatch")
+    meta = json.loads(mj)
+    off = 12 + mlen
+    flat = {}
+    for key in meta["keys"]:
+        flat[key], off = deserialize_array(buf, off, name=key)
+    return _unflatten(flat), meta.get("extra", {})
 
 
 def _flatten(tree: Any, prefix="") -> dict[str, np.ndarray]:
@@ -127,9 +191,11 @@ def save_pytree(dirpath: str, tree: Any, extra_meta: dict | None = None):
         shutil.rmtree(old, ignore_errors=True)
         os.rename(dirpath, old)        # previous snapshot stays valid until...
         os.rename(tmp, dirpath)        # ...the new one is fully published
+        fsync_dir(os.path.dirname(os.path.abspath(dirpath)))
         shutil.rmtree(old, ignore_errors=True)
     else:
         os.rename(tmp, dirpath)
+        fsync_dir(os.path.dirname(os.path.abspath(dirpath)))
 
 
 def is_committed(dirpath: str) -> bool:
@@ -152,6 +218,7 @@ def write_json_atomic(path: str, obj: dict):
         json.dump(obj, f)
         _fsync_file(f)
     os.replace(tmp, path)
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
 
 
 def read_json(path: str) -> dict:

@@ -1,80 +1,171 @@
-"""Per-step sparse undo logs (paper Fig. 6/7: the log region).
+"""Per-step sparse undo logs in the pool's *log region* (paper Fig. 6/7).
 
-Entry layout for step N:
-    <dir>/logs/step_<N>/idx.bin        unique touched row ids
-    <dir>/logs/step_<N>/old_rows.bin   pre-update row values (the undo image)
-    <dir>/logs/step_<N>/old_acc.bin    optional optimizer-row image
-    <dir>/logs/step_<N>/COMMIT         persistent flag (paper step 3)
+The ring lives in the ``undo-log`` persistence domain of a ``PoolDevice``:
 
-The writer logs BEFORE the mirror is touched; recovery rolls the mirror back
-with these images when the apply did not complete (manifest step < log step).
-GC keeps the last ``max_logs`` committed entries (paper step 4 deletes the
-old checkpoint once both tiers are durable).
+    meta (JsonRegion)   {gen, nslots, slot_bytes}
+    ring<gen> (Region)  nslots fixed-size slots
+
+Slot layout for step N (slot = N mod nslots):
+
+    header  step i64 | n i64 | d i64 | has_acc i64 | payload-crc u32 | commit u32
+    payload idx int64[n] | old_rows f32[n,d] | (old_acc f32[n,d])
+
+The writer persists the payload first (``undo-payload`` barrier), then sets
+the COMMIT word and persists it separately (``undo-commit`` — the paper's
+persistent flag, step 2). Recovery trusts a slot only if the step matches,
+COMMIT is set, and the payload CRC verifies — a torn payload or a dropped
+commit flush both invalidate the entry, falling back to the previous
+consistent state. GC clears COMMIT words once both tiers are durable
+(paper step 4); the ring naturally overwrites the oldest entry.
 """
 from __future__ import annotations
 
-import os
-import shutil
+import struct
+import zlib
+from typing import Optional
 
 import numpy as np
 
-from repro.core.checkpoint import store
+from repro.pool.allocator import Domain, JsonRegion, PoolAllocator, Region
+from repro.pool.device import PoolDevice, PoolError
+
+_HDR = struct.Struct("<qqqqII")     # step, n, d, has_acc, crc, commit
+_COMMIT_OFF = _HDR.size - 4
+_ALIGN = 64
+
+DOMAIN = "undo-log"
 
 
-def log_dir(root: str, step: int) -> str:
-    return os.path.join(root, "logs", f"step_{step:08d}")
+class UndoRing:
+    def __init__(self, alloc: PoolAllocator, max_logs: int):
+        self.alloc = alloc
+        self.device: PoolDevice = alloc.device
+        self.domain: Domain = alloc.domain(DOMAIN)
+        self.nslots = max(2, int(max_logs) + 1)
+        self.meta = JsonRegion.create(self.domain, "meta", nbytes=4 << 10)
+        m = self.meta.read()
+        self.ring: Optional[Region] = None
+        if m is not None:
+            self.nslots = m["nslots"]
+            self.slot_bytes = m["slot_bytes"]
+            self.gen = m["gen"]
+            self.ring = self.domain.get(f"ring{self.gen}")
+        else:
+            self.slot_bytes = 0
+            self.gen = -1
+
+    # -- layout --------------------------------------------------------------
+    def _make_ring(self, need: int):
+        self.gen += 1
+        self.slot_bytes = -(-int(need * 1.5) // _ALIGN) * _ALIGN
+        self.ring = self.domain.alloc(
+            f"ring{self.gen}", shape=(self.nslots * self.slot_bytes,),
+            dtype="uint8")
+        self.meta.write({"gen": self.gen, "nslots": self.nslots,
+                         "slot_bytes": self.slot_bytes}, point="undo-meta")
+
+    def _slot_off(self, step: int) -> int:
+        return self.ring.off + (step % self.nslots) * self.slot_bytes
+
+    @staticmethod
+    def _payload(idx: np.ndarray, old_rows: np.ndarray,
+                 old_acc: Optional[np.ndarray]) -> bytes:
+        parts = [np.ascontiguousarray(idx, np.int64).tobytes(),
+                 np.ascontiguousarray(old_rows, np.float32).tobytes()]
+        if old_acc is not None:
+            parts.append(np.ascontiguousarray(old_acc, np.float32).tobytes())
+        return b"".join(parts)
+
+    # -- write path ----------------------------------------------------------
+    def append(self, step: int, idx: np.ndarray, old_rows: np.ndarray,
+               old_acc: Optional[np.ndarray] = None):
+        idx = np.asarray(idx).reshape(-1)
+        old_rows = np.asarray(old_rows, np.float32).reshape(idx.size, -1)
+        payload = self._payload(idx, old_rows, old_acc)
+        need = _HDR.size + len(payload)
+        if self.ring is None:
+            self._make_ring(need)
+        elif need > self.slot_bytes:
+            self._grow(need)
+        off = self._slot_off(step)
+        hdr = _HDR.pack(step, idx.size, old_rows.shape[-1],
+                        int(old_acc is not None), zlib.crc32(payload), 0)
+        self.device.write(off, hdr + payload, tag="undo")
+        self.device.persist(off, self.slot_bytes, point="undo-payload")
+        # paper step 2: the persistent flag, its own barrier
+        self.device.write(off + _COMMIT_OFF,
+                          struct.pack("<I", 1), tag="undo")
+        self.device.persist(off + _COMMIT_OFF, 4, point="undo-commit")
+
+    def _grow(self, need: int):
+        """Entry outgrew the slot: allocate a bigger ring and carry over the
+        still-committed entries (old ring space is leaked — emulator).
+        Entries whose payload CRC fails (torn before the crash) are dropped,
+        same as recovery does."""
+        entries = [(s, e) for s in self.committed_steps()
+                   if (e := self.read(s)) is not None]
+        self._make_ring(need)
+        for step, (idx, rows, acc) in entries:
+            self.append(step, idx, rows, acc)
+
+    # -- read path -----------------------------------------------------------
+    def _read_header(self, step_slot: int):
+        """Cheap header-only probe (no payload copy / CRC) — used by the
+        per-step GC and the committed scan; ``read`` verifies the CRC."""
+        if self.ring is None:
+            return None
+        off = self.ring.off + step_slot * self.slot_bytes
+        raw = bytes(self.device.view(off, _HDR.size))
+        step, n, d, has_acc, crc, commit = _HDR.unpack(raw)
+        if commit != 1 or n < 0 or d <= 0:
+            return None
+        end = _HDR.size + n * 8 + n * d * 4 * (2 if has_acc else 1)
+        if end > self.slot_bytes:
+            return None
+        return step, n, d, has_acc, crc, end
+
+    def read(self, step: int):
+        hdr = self._read_header(step % self.nslots) if self.ring else None
+        if hdr is None or hdr[0] != step:
+            return None
+        _, n, d, has_acc, crc, end = hdr
+        off = self.ring.off + (step % self.nslots) * self.slot_bytes
+        payload = bytes(self.device.view(off + _HDR.size, end - _HDR.size))
+        if zlib.crc32(payload) != crc:
+            return None
+        idx = np.frombuffer(payload, np.int64, n)
+        rows = np.frombuffer(payload, np.float32, n * d,
+                             offset=n * 8).reshape(n, d)
+        acc = None
+        if has_acc:
+            acc = np.frombuffer(payload, np.float32, n * d,
+                                offset=n * 8 + n * d * 4).reshape(n, d)
+        return idx, rows, acc
+
+    def committed_steps(self) -> list[int]:
+        if self.ring is None:
+            return []
+        out = []
+        for i in range(self.nslots):
+            hdr = self._read_header(i)
+            if hdr is not None:
+                out.append(hdr[0])
+        return sorted(out)
+
+    def gc(self, keep_from: int):
+        """Invalidate committed entries older than keep_from (both tiers
+        durable — paper step 4)."""
+        if self.ring is None:
+            return
+        for i in range(self.nslots):
+            hdr = self._read_header(i)
+            if hdr is not None and hdr[0] < keep_from:
+                off = self.ring.off + i * self.slot_bytes
+                self.device.write(off + _COMMIT_OFF,
+                                  struct.pack("<I", 0), tag="undo")
+                self.device.persist(off + _COMMIT_OFF, 4, point="undo-gc")
 
 
-def write_log(root: str, step: int, idx: np.ndarray, old_rows: np.ndarray,
-              old_acc: np.ndarray | None = None):
-    d = log_dir(root, step)
-    tmp = d + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
-    store.write_array(os.path.join(tmp, "idx.bin"), idx)
-    store.write_array(os.path.join(tmp, "old_rows.bin"), old_rows)
-    if old_acc is not None:
-        store.write_array(os.path.join(tmp, "old_acc.bin"), old_acc)
-    with open(os.path.join(tmp, "COMMIT"), "w") as f:
-        f.write("ok")
-        f.flush()
-        os.fsync(f.fileno())
-    if os.path.exists(d):
-        shutil.rmtree(d)
-    os.rename(tmp, d)
-
-
-def read_log(root: str, step: int):
-    d = log_dir(root, step)
-    if not os.path.exists(os.path.join(d, "COMMIT")):
-        return None
-    idx = store.read_array(os.path.join(d, "idx.bin"))
-    old = store.read_array(os.path.join(d, "old_rows.bin"))
-    accp = os.path.join(d, "old_acc.bin")
-    acc = store.read_array(accp) if os.path.exists(accp) else None
-    return idx, old, acc
-
-
-def committed_steps(root: str) -> list[int]:
-    base = os.path.join(root, "logs")
-    if not os.path.isdir(base):
-        return []
-    out = []
-    for name in os.listdir(base):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(base, name, "COMMIT")):
-                out.append(int(name.split("_")[1]))
-    return sorted(out)
-
-
-def gc(root: str, keep_from: int):
-    """Delete committed logs older than ``keep_from`` (both tiers durable)."""
-    base = os.path.join(root, "logs")
-    if not os.path.isdir(base):
-        return
-    for name in list(os.listdir(base)):
-        try:
-            step = int(name.split("_")[1].split(".")[0])
-        except (IndexError, ValueError):
-            continue
-        if step < keep_from:
-            shutil.rmtree(os.path.join(base, name), ignore_errors=True)
+def open_ring(device: PoolDevice, max_logs: int = 64) -> UndoRing:
+    """Recovery-time accessor: attach to an existing undo domain."""
+    return UndoRing(PoolAllocator(device), max_logs)

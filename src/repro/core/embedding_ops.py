@@ -9,13 +9,20 @@ via ``psum``. Raw rows never move. The backward pass of the same ``shard_map``
 is automatically the near-data *update*: every shard scatter-adds gradients
 into its own rows only.
 
-Three strategies (hillclimb knobs — see EXPERIMENTS.md §Perf):
+Four strategies (hillclimb knobs — see EXPERIMENTS.md §Perf):
   * ``near_data``    — local masked gather + psum of results (paper-faithful).
                        Link bytes = tokens x d. Optimal when tokens << vocab
                        (decode, DLRM bags).
   * ``table_gather`` — replicate the table (all-gather rows) then gather
                        locally. Link bytes = vocab_local x d x (tp-1). Optimal
                        when tokens >> vocab (big-batch training).
+  * ``pool``         — route the lookup through an attached
+                       ``repro.pool.EmbeddingPoolMirror``: the host mirror
+                       lives in an emulated Dram/Pmem ``PoolDevice`` and the
+                       gather (bag lookups: the reduction too) executes as a
+                       near-memory op with per-byte traffic accounting.
+                       Forward-path only (serving / eval / traffic studies);
+                       updates go pool-side via ``mirror.apply_grad``.
   * ``auto``         — picks by comparing the two byte counts at trace time.
 
 Outside a sharding context everything degrades to a plain ``take`` so models
@@ -29,11 +36,36 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding
 
 _state = threading.local()
+_pool_mirror = None   # module-global EmbeddingPoolMirror (host-side object)
+
+
+def attach_pool(mirror):
+    """Install the pool mirror that backs the ``pool`` lookup strategy."""
+    global _pool_mirror
+    _pool_mirror = mirror
+
+
+def detach_pool():
+    global _pool_mirror
+    _pool_mirror = None
+
+
+def pool_mirror():
+    return _pool_mirror
+
+
+def _pool_call(cb, out_shape, out_dtype, ids):
+    """Run a host-side pool op; under jit, via pure_callback."""
+    res = jax.ShapeDtypeStruct(out_shape, out_dtype)
+    if isinstance(ids, jax.core.Tracer):
+        return jax.pure_callback(cb, res, ids)
+    return jnp.asarray(cb(np.asarray(ids)), dtype=out_dtype)
 
 
 @contextlib.contextmanager
@@ -75,6 +107,13 @@ def lookup(table, ids, *, mode: Optional[str] = None):
     """Pool lookup. table: (V, d); ids: int array -> ids.shape + (d,)."""
     ctx = sharding.current()
     mode = mode or current_mode()
+    if mode == "pool":
+        if _pool_mirror is None:
+            raise RuntimeError("lookup(mode='pool') needs attach_pool(...)")
+        mir = _pool_mirror
+        return _pool_call(lambda i: mir.lookup(i).astype(table.dtype),
+                          tuple(ids.shape) + (table.shape[-1],),
+                          table.dtype, ids)
     if ctx is None:
         return jnp.take(table, ids, axis=0)
     tp_ax = ctx.rules.get("vocab")
@@ -125,6 +164,13 @@ def bag_lookup(tables, ids, *, mode: Optional[str] = None, combine: str = "sum")
     ctx = sharding.current()
     mode = mode or current_mode()
     T, R, d = tables.shape
+    if mode == "pool":
+        if _pool_mirror is None:
+            raise RuntimeError("bag_lookup(mode='pool') needs attach_pool(...)")
+        mir = _pool_mirror
+        return _pool_call(
+            lambda i: mir.bag_lookup(i, combine).astype(tables.dtype),
+            (ids.shape[0], T, d), tables.dtype, ids)
     if ctx is None:
         rows = jnp.take(tables.reshape(T * R, d),
                         (ids + jnp.arange(T)[None, :, None] * R).reshape(-1),

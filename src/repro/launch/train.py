@@ -33,17 +33,24 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--strict", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--pool-backend", choices=["dram", "pmem"],
+                    default="pmem",
+                    help="emulated memory-pool backend for checkpoints")
     ap.add_argument("--dense-interval", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--embed-lr", type=float, default=0.05)
     args = ap.parse_args()
+    if args.resume and args.pool_backend == "dram":
+        ap.error("--resume needs a pool that survives process death; "
+                 "the dram backend is volatile — use --pool-backend pmem")
 
     bundle = get_arch(args.arch, smoke=args.smoke)
     cfg = bundle.model
     ckpt = CheckpointConfig(enabled=bool(args.ckpt_dir),
                             directory=args.ckpt_dir or "/tmp/repro_ckpt",
-                            dense_interval=args.dense_interval)
+                            dense_interval=args.dense_interval,
+                            pool_backend=args.pool_backend)
     tc = TrainConfig(learning_rate=args.lr, embed_learning_rate=args.embed_lr,
                      checkpoint=ckpt)
     raw = make_batches(cfg, args.batch, args.seq, seed=0)
@@ -60,7 +67,7 @@ def main():
             print(f"[train] resumed at step {start} "
                   f"(embed@{rec.mirror_step}, dense@{rec.dense_step}, "
                   f"gap={rec.gap}, rolled_back={rec.rolled_back})")
-            mgr = CheckpointManager(cfg, ckpt)
+            mgr = CheckpointManager(cfg, ckpt, pool=rec.pool)
             mgr.init_mirror(state["embed"], step=rec.mirror_step)
         else:
             mgr = CheckpointManager(cfg, ckpt, embed_init=state["embed"])
@@ -78,6 +85,7 @@ def main():
     print(f"[train] done: {len(losses)} steps, final loss {losses[-1]:.4f}")
     if mgr:
         print(f"[train] checkpoint stats: {mgr.stats}")
+        print(mgr.pool.metrics.report())
 
 
 if __name__ == "__main__":

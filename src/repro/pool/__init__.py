@@ -1,0 +1,24 @@
+"""repro.pool — emulated CXL/PMEM disaggregated memory pool.
+
+Layering (bottom up):
+  device.py    byte-addressable backends (DramPool / PmemPool) with explicit
+               persist barriers, crash semantics, and Table-2 accounting
+  allocator.py named persistence domains, crash-atomic directory, JsonRegion
+  nmp.py       near-memory ops (gather / bag-reduce / scatter-add / row
+               update / undo snapshot) + EmbeddingPoolMirror
+  faults.py    deterministic crash / torn-write / dropped-flush injection
+  metrics.py   traffic + energy counters (feeds benchmarks/fig13_energy.py)
+"""
+from repro.pool.allocator import JsonRegion, PoolAllocator, Region
+from repro.pool.device import (BACKENDS, DramPool, PmemPool, PoolDevice,
+                               PoolError, make_pool)
+from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
+from repro.pool.metrics import PoolMetrics
+from repro.pool.nmp import EmbeddingPoolMirror, NmpQueue
+
+__all__ = [
+    "BACKENDS", "DramPool", "EmbeddingPoolMirror", "FaultEvent",
+    "FaultSchedule", "InjectedCrash", "JsonRegion", "NmpQueue", "PmemPool",
+    "PoolAllocator", "PoolDevice", "PoolError", "PoolMetrics", "Region",
+    "make_pool",
+]

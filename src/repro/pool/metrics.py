@@ -1,0 +1,132 @@
+"""Traffic / energy accounting for the emulated memory pool.
+
+Every ``PoolDevice`` access and every near-memory op records (bytes, modeled
+seconds) under an op kind, split into *media* traffic (bytes moved inside the
+pool — DRAM/PMEM array accesses, undo snapshots, persist flushes) and *link*
+traffic (bytes that actually cross the CXL/PCIe link to the host — indices in,
+reduced vectors out). The asymmetry between the two is the paper's headline
+saving: near-memory gather/reduce keeps raw rows off the link.
+
+Energy follows the Fig. 13 model in ``sim/devices.POWER``: access energy =
+device read/write power x modeled busy time, plus NDP-logic energy for
+near-memory compute, plus link energy per busy second. ``energy()`` returns
+joules per term so ``benchmarks/fig13_energy.py`` can print measured rows next
+to the analytic ones.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.sim import devices as dv
+
+LINK_W = 5.0  # matches sim/energy.py link term
+
+
+@dataclass
+class OpStat:
+    ops: int = 0
+    nbytes: int = 0
+    time_s: float = 0.0
+
+    def add(self, nbytes: int, time_s: float):
+        self.ops += 1
+        self.nbytes += int(nbytes)
+        self.time_s += float(time_s)
+
+
+@dataclass
+class PoolMetrics:
+    """Per-pool counters. Op kinds are free-form tags; conventional ones:
+    read / write / persist (device layer), gather / bag_gather / scatter_add /
+    row_update / undo_snapshot (nmp layer), link_in / link_out (host link).
+    """
+    device_name: str = "dram"
+    media: dict = field(default_factory=dict)     # kind -> OpStat
+    link: dict = field(default_factory=dict)      # kind -> OpStat
+    ndp_time_s: float = 0.0                       # near-memory compute busy
+    dropped_flushes: int = 0
+    torn_writes: int = 0
+    crashes: int = 0
+
+    def reset(self):
+        """Zero the traffic counters (fault/crash tallies are kept) — e.g.
+        to measure steady-state batches without the one-time mirror load."""
+        self.media.clear()
+        self.link.clear()
+        self.ndp_time_s = 0.0
+
+    def record(self, kind: str, nbytes: int, time_s: float):
+        self.media.setdefault(kind, OpStat()).add(nbytes, time_s)
+
+    def record_link(self, kind: str, nbytes: int,
+                    link: dv.Link = dv.CXL_LINK):
+        self.link.setdefault(kind, OpStat()).add(nbytes, nbytes / link.bw)
+
+    def record_ndp(self, flops: float):
+        self.ndp_time_s += flops / dv.NDP_LOGIC.flops
+
+    # -- aggregates ----------------------------------------------------------
+    def media_bytes(self, *kinds) -> int:
+        src = kinds or self.media.keys()
+        return sum(self.media[k].nbytes for k in src if k in self.media)
+
+    def link_bytes(self) -> int:
+        return sum(s.nbytes for s in self.link.values())
+
+    def media_time(self) -> float:
+        return sum(s.time_s for s in self.media.values())
+
+    def link_time(self) -> float:
+        return sum(s.time_s for s in self.link.values())
+
+    def energy(self) -> dict:
+        """Joules by term, Fig. 13 power model, busy-time based."""
+        P = dv.POWER
+        if self.device_name == "pmem":
+            read_t = sum(s.time_s for k, s in self.media.items()
+                         if k in ("read", "gather", "bag_gather",
+                                  "undo_snapshot"))
+            write_t = self.media_time() - read_t
+            e_mem = P["pmem_read_w"] * read_t + P["pmem_write_w"] * write_t
+        else:
+            e_mem = P["dram_access_w"] * self.media_time()
+        e = {
+            "mem": e_mem,
+            "ndp": P["ndp_logic_w"] * self.ndp_time_s,
+            "link": LINK_W * self.link_time(),
+        }
+        e["total"] = sum(e.values())
+        return e
+
+    def snapshot(self) -> dict:
+        return {
+            "device": self.device_name,
+            "media": {k: vars(s) for k, s in self.media.items()},
+            "link": {k: vars(s) for k, s in self.link.items()},
+            "media_bytes": self.media_bytes(),
+            "link_bytes": self.link_bytes(),
+            "media_time_s": self.media_time(),
+            "link_time_s": self.link_time(),
+            "ndp_time_s": self.ndp_time_s,
+            "dropped_flushes": self.dropped_flushes,
+            "torn_writes": self.torn_writes,
+            "crashes": self.crashes,
+            "energy_j": self.energy(),
+        }
+
+    def report(self) -> str:
+        lines = [f"pool[{self.device_name}] traffic/energy:"]
+        for side, table in (("media", self.media), ("link", self.link)):
+            for kind in sorted(table):
+                s = table[kind]
+                lines.append(f"  {side:5s} {kind:14s} ops={s.ops:<7d} "
+                             f"bytes={s.nbytes:<12d} t={s.time_s * 1e3:.3f}ms")
+        e = self.energy()
+        lines.append(f"  link/media byte ratio: "
+                     f"{self.link_bytes() / max(1, self.media_bytes()):.4f}")
+        lines.append("  energy[J]: " + "  ".join(
+            f"{k}={v:.6f}" for k, v in e.items()))
+        if self.dropped_flushes or self.torn_writes or self.crashes:
+            lines.append(f"  faults: dropped={self.dropped_flushes} "
+                         f"torn={self.torn_writes} crashes={self.crashes}")
+        return "\n".join(lines)

@@ -1,0 +1,189 @@
+"""Near-memory op queue — the CXL-MEM *computing logic*.
+
+Ops execute against region cache views inside the pool device, so only the
+operands (indices, gradients) and the *results* (gathered or bag-reduced
+vectors) cross the host link; raw rows and undo images never do. Each op
+charges three meters on the device's ``PoolMetrics``:
+
+  * media traffic at Table-2 random-access latency/bandwidth,
+  * NDP-logic busy time for reductions (the adder array),
+  * link traffic for whatever enters/leaves the pool.
+
+Ops are enqueued and run at ``drain()`` (or eagerly via the convenience
+wrappers) — the queue models the submission window the checkpoint logic uses
+to hide pool work inside the GPU's MLP phase.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.pool.allocator import Region
+from repro.pool.device import PoolDevice
+
+
+class NmpQueue:
+    def __init__(self, device: PoolDevice):
+        self.device = device
+        self._pending: list = []
+
+    # -- queue machinery -----------------------------------------------------
+    def submit(self, fn, *args, **kw):
+        self._pending.append((fn, args, kw))
+
+    def drain(self) -> list:
+        out = [fn(*args, **kw) for fn, args, kw in self._pending]
+        self._pending = []
+        return out
+
+    # -- helpers -------------------------------------------------------------
+    def _rows_meta(self, region: Region):
+        view = region.view_array()
+        flat = view.reshape(-1, view.shape[-1])
+        row_bytes = flat.shape[-1] * flat.dtype.itemsize
+        return flat, row_bytes
+
+    def _mark_rows_dirty(self, region: Region, flat: np.ndarray,
+                         idx: np.ndarray, row_bytes: int):
+        idx = np.unique(idx)                 # sorted unique rows
+        if idx.size == 0:
+            return
+        # coalesce consecutive rows into ranges (vectorized — per-row marks
+        # are far too slow for DLRM-sized touch sets)
+        breaks = np.nonzero(np.diff(idx) > 1)[0]
+        starts = idx[np.concatenate(([0], breaks + 1))].tolist()
+        ends = idx[np.concatenate((breaks, [idx.size - 1]))].tolist()
+        for s, e in zip(starts, ends):
+            region.mark_dirty(int(s) * row_bytes,
+                              int(e - s + 1) * row_bytes)
+
+    # -- ops -----------------------------------------------------------------
+    def gather(self, region: Region, idx) -> np.ndarray:
+        """rows[idx] -> host. Link carries idx in and raw rows out."""
+        idx = np.asarray(idx)
+        flat, row_bytes = self._rows_meta(region)
+        out = flat[idx.reshape(-1)].reshape(*idx.shape, flat.shape[-1]).copy()
+        m = self.device.metrics
+        m.record("gather", idx.size * row_bytes,
+                 self.device.profile.t_random_read(idx.size, row_bytes))
+        m.record_link("link_in", idx.nbytes)
+        m.record_link("link_out", out.nbytes)
+        return out
+
+    def bag_gather(self, region: Region, idx, combine: str = "sum",
+                   offsets: Optional[np.ndarray] = None) -> np.ndarray:
+        """Reduce rows[idx] over the last idx axis pool-side; only the
+        reduced (..., d) vectors cross the link — the headline saving."""
+        idx = np.asarray(idx)
+        if offsets is not None:
+            idx = idx + offsets
+        flat, row_bytes = self._rows_meta(region)
+        rows = flat[idx.reshape(-1)].reshape(*idx.shape, flat.shape[-1])
+        red = rows.sum(axis=-2) if combine == "sum" else rows.mean(axis=-2)
+        red = np.ascontiguousarray(red)
+        m = self.device.metrics
+        m.record("bag_gather", idx.size * row_bytes,
+                 self.device.profile.t_random_read(idx.size, row_bytes))
+        m.record_ndp(idx.size * flat.shape[-1])          # adder array
+        m.record_link("link_in", idx.nbytes)
+        m.record_link("link_out", red.nbytes)
+        return red
+
+    def row_update(self, region: Region, idx, rows,
+                   point: Optional[str] = None):
+        """rows -> pool at idx (the embedding apply). Idempotent writes."""
+        idx = np.asarray(idx).reshape(-1)
+        rows = np.asarray(rows)
+        flat, row_bytes = self._rows_meta(region)
+        flat[idx] = rows.reshape(idx.size, -1)
+        self._mark_rows_dirty(region, flat, idx, row_bytes)
+        m = self.device.metrics
+        m.record("row_update", idx.size * row_bytes,
+                 self.device.profile.t_random_write(idx.size, row_bytes))
+        m.record_link("link_in", idx.nbytes + rows.nbytes)
+        if point is not None:
+            region.persist(point=point)
+
+    def scatter_add(self, region: Region, idx, delta,
+                    point: Optional[str] = None):
+        """Accumulate gradient rows pool-side (read-modify-write)."""
+        idx = np.asarray(idx).reshape(-1)
+        delta = np.asarray(delta)
+        flat, row_bytes = self._rows_meta(region)
+        np.add.at(flat, idx, delta.reshape(idx.size, -1).astype(flat.dtype))
+        self._mark_rows_dirty(region, flat, idx, row_bytes)
+        m = self.device.metrics
+        t = (self.device.profile.t_random_read(idx.size, row_bytes)
+             + self.device.profile.t_random_write(idx.size, row_bytes))
+        m.record("scatter_add", 2 * idx.size * row_bytes, t)
+        m.record_ndp(idx.size * flat.shape[-1])
+        m.record_link("link_in", idx.nbytes + delta.nbytes)
+        if point is not None:
+            region.persist(point=point)
+
+    def undo_snapshot(self, region: Region, idx) -> np.ndarray:
+        """Capture the pre-update image of rows[idx] *inside the pool* (no
+        link traffic — the paper's batch-aware undo capture)."""
+        idx = np.asarray(idx).reshape(-1)
+        flat, row_bytes = self._rows_meta(region)
+        old = np.array(flat[idx])
+        self.device.metrics.record(
+            "undo_snapshot", idx.size * row_bytes,
+            self.device.profile.t_random_read(idx.size, row_bytes))
+        return old
+
+
+class EmbeddingPoolMirror:
+    """Host-visible handle to an embedding table living in a pool domain —
+    the substrate behind ``embedding_ops``' ``pool`` lookup strategy.
+
+    ``table`` may be (V, d) or stacked DLRM (T, R, d); bag lookups on the
+    stacked form add per-table row offsets pool-side.
+    """
+
+    DOMAIN = "embedding-ops"
+
+    def __init__(self, device: PoolDevice, table: np.ndarray,
+                 name: str = "table"):
+        from repro.pool.allocator import PoolAllocator
+        self.device = device
+        self.alloc = PoolAllocator(device)
+        table = np.asarray(table, dtype=np.float32)
+        self.region = self.alloc.domain(self.DOMAIN).alloc(
+            name, shape=table.shape, dtype="float32")
+        self.region.write_array(table, tag="mirror-load")
+        self.region.persist(point="mirror-load")
+        self.nmp = NmpQueue(device)
+
+    @property
+    def shape(self):
+        return self.region.shape
+
+    @property
+    def metrics(self):
+        return self.device.metrics
+
+    def sync_from(self, table: np.ndarray):
+        self.region.write_array(np.asarray(table, np.float32),
+                                tag="mirror-load")
+        self.region.persist(point="mirror-load")
+
+    def lookup(self, ids: np.ndarray) -> np.ndarray:
+        return self.nmp.gather(self.region, np.asarray(ids))
+
+    def bag_lookup(self, ids: np.ndarray, combine: str = "sum") -> np.ndarray:
+        ids = np.asarray(ids)
+        if len(self.region.shape) == 3:           # stacked DLRM tables
+            T, R, _ = self.region.shape
+            off = (np.arange(T)[None, :, None] * R).astype(ids.dtype)
+            return self.nmp.bag_gather(self.region, ids, combine,
+                                       offsets=off)
+        return self.nmp.bag_gather(self.region, ids, combine)
+
+    def apply_grad(self, idx: np.ndarray, grad_rows: np.ndarray,
+                   lr: float = 1.0):
+        """Near-memory SGD update: rows[idx] -= lr * grad."""
+        self.nmp.scatter_add(self.region, idx,
+                             -lr * np.asarray(grad_rows, np.float32),
+                             point="mirror-apply")

@@ -43,6 +43,60 @@ GPU_STAGE_OVERHEAD = 1e-3 # kernel launch / optimizer / framework per phase
 MLP_LOG_FRACTION = 0.125  # undo-tier MLP log is differential/quantised
                           # (Check-N-Run-style), ~8x smaller than raw fp32
 
+# Optional measured overrides (bytes/s) fed from repro.pool counters — see
+# calibrate_from_pool(). Keyed by device name ("dram"/"pmem") plus "_link".
+_POOL_CAL: dict = {}
+
+
+def calibrate_from_pool(metrics) -> dict:
+    """Replace the analytic bulk-transfer bandwidths for one device (and the
+    host link) with effective rates measured by a ``repro.pool`` run.
+
+    `metrics` is a ``repro.pool.PoolMetrics``. Persist traffic calibrates the
+    checkpoint *write* path, gather/read traffic the undo-read path, and link
+    counters the transfer segments. Returns the calibration dict applied."""
+    cal: dict = {}
+    w = metrics.media.get("persist")
+    if w is not None and w.time_s > 0:
+        cal["write_bps"] = w.nbytes / w.time_s
+    r_bytes = r_time = 0.0
+    for kind in ("read", "gather", "bag_gather", "undo_snapshot"):
+        s = metrics.media.get(kind)
+        if s is not None:
+            r_bytes += s.nbytes
+            r_time += s.time_s
+    if r_time > 0:
+        cal["read_bps"] = r_bytes / r_time
+    _POOL_CAL[metrics.device_name] = cal
+    if metrics.link_time() > 0:
+        # pool link counters model the CXL link; calibrate only that link so
+        # PCIe-based baseline systems keep their analytic bandwidth
+        _POOL_CAL["_link:" + dv.CXL_LINK.name] = {
+            "bps": metrics.link_bytes() / metrics.link_time()}
+    return cal
+
+
+def clear_pool_calibration():
+    _POOL_CAL.clear()
+
+
+def _bulk_write_t(dev, nbytes: int) -> float:
+    cal = _POOL_CAL.get(dev.name, {})
+    if "write_bps" in cal:
+        return nbytes / cal["write_bps"] + dev.write_lat
+    return dev.t_bulk_write(nbytes)
+
+
+def _bulk_read_t(dev, nbytes: int) -> float:
+    cal = _POOL_CAL.get(dev.name, {})
+    if "read_bps" in cal:
+        return nbytes / cal["read_bps"] + dev.read_lat
+    return dev.t_bulk_read(nbytes)
+
+
+def _link_bw(link) -> float:
+    return _POOL_CAL.get("_link:" + link.name, {}).get("bps", link.bw)
+
 
 @dataclass
 class Segment:
@@ -103,7 +157,7 @@ def _stage_times(system: str, w: RMWorkload):
         else dv.PCIE4_X16
     nbytes = w.reduced_bytes if (near or system in ("SSD", "PMEM", "DRAM")) \
         else w.raw_bytes
-    t_link = 2 * nbytes / link.bw
+    t_link = 2 * nbytes / _link_bw(link)
     t_sw = 0.0 if system.startswith("CXL") or system == "DRAM" \
         else N_SYNCS * link.sw_overhead
 
@@ -121,8 +175,8 @@ def _stage_times(system: str, w: RMWorkload):
         t_ckpt_emb = t_ckpt_mlp = 0.0          # no persistence at all
     elif system in ("SSD", "PMEM", "PCIe", "CXL-D"):
         # redo log: write updated rows + full MLP params to the device
-        t_ckpt_emb = dev.t_bulk_write(row_bytes)
-        t_ckpt_mlp = dev.t_bulk_write(w.mlp_param_bytes)
+        t_ckpt_emb = _bulk_write_t(dev, row_bytes)
+        t_ckpt_mlp = _bulk_write_t(dev, w.mlp_param_bytes)
         if system in ("SSD", "PMEM", "PCIe"):
             # MLP params must cross the link from the GPU, synchronised by
             # host software; CXL-D's checkpointing logic instead pulls them
@@ -133,9 +187,10 @@ def _stage_times(system: str, w: RMWorkload):
     else:
         # undo log: read old rows (data region) + write to log region;
         # MLP log is differential/quantised (MLP_LOG_FRACTION)
-        t_ckpt_emb = dev.t_bulk_read(row_bytes) + dev.t_bulk_write(row_bytes)
-        t_ckpt_mlp = dev.t_bulk_write(
-            int(w.mlp_param_bytes * MLP_LOG_FRACTION))
+        t_ckpt_emb = (_bulk_read_t(dev, row_bytes)
+                      + _bulk_write_t(dev, row_bytes))
+        t_ckpt_mlp = _bulk_write_t(
+            dev, int(w.mlp_param_bytes * MLP_LOG_FRACTION))
         if system == "CXL":
             t_ckpt_mlp /= MLP_LOG_SPREAD       # relaxed: amortised over K
 

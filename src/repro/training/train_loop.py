@@ -129,11 +129,28 @@ def make_step_fns(cfg, train_cfg):
 
 def train(cfg, train_cfg, batches, num_steps: int, *, relaxed: bool = True,
           jit: bool = True, state=None, start_step: int = 0,
-          ckpt_manager=None, on_metrics: Optional[Callable] = None):
-    """Host-side loop (examples / tests). Returns (state, losses)."""
+          ckpt_manager=None, on_metrics: Optional[Callable] = None,
+          checkpoint_dir: Optional[str] = None,
+          pool_backend: Optional[str] = None):
+    """Host-side loop (examples / tests). Returns (state, losses).
+
+    ``checkpoint_dir``/``pool_backend`` build a two-tier CheckpointManager
+    internally (over the dram or pmem emulated pool) when the caller did not
+    pass ``ckpt_manager``; the manager is flushed before returning.
+    """
     init_fn, strict_step, relaxed_step, warmup = make_step_fns(cfg, train_cfg)
     if state is None:
         state = init_fn(jax.random.PRNGKey(train_cfg.seed))
+    own_manager = False
+    if ckpt_manager is None and checkpoint_dir:
+        import dataclasses
+
+        from repro.core.checkpoint.manager import CheckpointManager
+        cc = dataclasses.replace(
+            train_cfg.checkpoint, directory=checkpoint_dir,
+            **({"pool_backend": pool_backend} if pool_backend else {}))
+        ckpt_manager = CheckpointManager(cfg, cc, embed_init=state["embed"])
+        own_manager = True
     step_strict = jax.jit(strict_step) if jit else strict_step
     step_relaxed = jax.jit(relaxed_step) if jit else relaxed_step
     losses = []
@@ -153,4 +170,6 @@ def train(cfg, train_cfg, batches, num_steps: int, *, relaxed: bool = True,
             on_metrics(n, metrics)
     if ckpt_manager is not None:
         ckpt_manager.flush()
+        if own_manager:
+            ckpt_manager.close()   # release the pool fd/mmap we opened
     return state, losses

@@ -1,7 +1,7 @@
-"""Failure-tolerance tests: undo-log semantics, torn writes, CRC corruption,
-resume exactness, relaxed dense/embedding gap, GC, writer deadline."""
+"""Failure-tolerance tests over the emulated memory pool: undo-ring
+semantics, fault-injected crashes (between COMMIT and apply), torn mirror
+writes, resume exactness, relaxed dense/embedding gap, GC, writer deadline."""
 import os
-import shutil
 
 import jax
 import numpy as np
@@ -9,18 +9,33 @@ import pytest
 
 from repro.configs import get_arch
 from repro.configs.base import CheckpointConfig, TrainConfig
-from repro.core.checkpoint import recovery, store, undo_log
+from repro.core.checkpoint import recovery, store
 from repro.core.checkpoint.manager import CheckpointManager
 from repro.data.synthetic import make_batches
+from repro.pool import FaultSchedule, InjectedCrash, PoolAllocator
 from repro.training import train_loop
 
+BACKENDS = ["dram", "pmem"]
 
-def setup_run(tmp, arch="tinyllama-1.1b", dense_interval=1):
-    cc = CheckpointConfig(directory=tmp, dense_interval=dense_interval)
+
+def setup_run(tmp, arch="tinyllama-1.1b", dense_interval=1, backend="pmem"):
+    cc = CheckpointConfig(directory=tmp, dense_interval=dense_interval,
+                          pool_backend=backend)
     tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
     b = get_arch(arch, smoke=True)
     data = make_batches(b.model, 4, 16, seed=3)
     return b, tc, cc, data
+
+
+def run_with_manager(b, tc, cc, data, steps, faults=None):
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"],
+                            faults=faults)
+    train_loop.train(b.model, tc, data, steps, relaxed=True, state=st0,
+                     ckpt_manager=mgr)
+    mgr.flush()
+    return mgr
 
 
 def test_resume_exact(tmp_path):
@@ -28,50 +43,90 @@ def test_resume_exact(tmp_path):
     b, tc, cc, data = setup_run(tmp)
     _, full = train_loop.train(b.model, tc, data, 8, relaxed=True)
 
-    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
-    st0 = init_fn(jax.random.PRNGKey(tc.seed))
-    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
-    train_loop.train(b.model, tc, data, 5, relaxed=True, state=st0,
-                     ckpt_manager=mgr)
-    mgr.flush()
+    run_with_manager(b, tc, cc, data, 5).pool.close()
 
     rec = recovery.recover(tmp)
     assert rec.mirror_step == 4 and rec.dense_step == 4 and rec.gap == 0
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
     fresh = init_fn(jax.random.PRNGKey(tc.seed))
     st, resume = recovery.resume_train_state(rec, fresh)
     _, tail = train_loop.train(b.model, tc, data, 3, relaxed=True, state=st,
                                start_step=resume)
-    np.testing.assert_allclose(np.asarray(full),
-                               np.asarray(list(full[:5]) + tail
-                                          if False else full),
-                               rtol=0, atol=0)  # sanity on full itself
     np.testing.assert_allclose(np.asarray(tail), np.asarray(full[5:]),
                                rtol=1e-6, atol=1e-6)
 
 
-def test_torn_write_rollback(tmp_path):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_crash_between_commit_and_apply(tmp_path, backend):
+    """The paper's key failure scenario: power loss after the undo log's
+    COMMIT flag persisted but before the mirror apply. Recovery must roll
+    back to a bit-identical consistent state, and resuming must reproduce
+    the uninterrupted run (idempotent re-apply)."""
     tmp = str(tmp_path / "ck")
-    b, tc, cc, data = setup_run(tmp)
+    b, tc, cc, data = setup_run(tmp, backend=backend)
+    _, full = train_loop.train(b.model, tc, data, 6, relaxed=True)
+
+    # reference mirror: a clean run stopped after steps 0..2
+    ref_tmp = str(tmp_path / "ref")
+    _, _, ccr, _ = setup_run(ref_tmp, backend=backend)
+    mref = run_with_manager(b, tc, ccr, data, 3)
+    ref_rows = np.array(mref.mirror_rows)
+
+    # faulted run: crash exactly between COMMIT and apply of step 3
+    faults = FaultSchedule.crash_at("tier_e.between-commit-and-apply",
+                                    occurrence=4)
     init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
-    st0 = init_fn(jax.random.PRNGKey(0))
-    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
-    train_loop.train(b.model, tc, data, 4, relaxed=True, state=st0,
-                     ckpt_manager=mgr)
-    mgr.flush()
+    st0 = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"],
+                            faults=faults)
+    with pytest.raises(InjectedCrash):
+        train_loop.train(b.model, tc, data, 6, relaxed=True, state=st0,
+                         ckpt_manager=mgr)
 
-    man = store.read_json(os.path.join(tmp, "MANIFEST.json"))
-    step = man["mirror_step"]
-    idx, old_rows, _ = undo_log.read_log(tmp, step)
-    V, d = b.model.vocab_size, b.model.d_model
-    mm = np.memmap(os.path.join(tmp, "mirror.dat"), dtype=np.float32,
-                   mode="r+", shape=(V, d))
-    mm[idx] = 7e8                        # torn write garbage
-    man["mirror_step"] = step - 1        # manifest: apply never completed
-    store.write_json_atomic(os.path.join(tmp, "MANIFEST.json"), man)
+    if backend == "dram":
+        mgr.pool.crash()                   # power loss: cache dropped
+        rec = recovery.recover(tmp, pool=mgr.pool)
+    else:
+        mgr.pool.close()                   # process death: reopen from disk
+        rec = recovery.recover(tmp)
+    assert rec.mirror_step == 2
+    np.testing.assert_array_equal(rec.embed_rows, ref_rows)  # bit-identical
 
-    rec = recovery.recover(tmp)
+    # idempotent re-apply: resume reproduces the uninterrupted run exactly
+    fresh = init_fn(jax.random.PRNGKey(tc.seed))
+    st, resume = recovery.resume_train_state(rec, fresh)
+    assert resume == 3
+    _, tail = train_loop.train(b.model, tc, data, 3, relaxed=True, state=st,
+                               start_step=resume)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[3:]),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_torn_mirror_apply_rolls_back(tmp_path, backend):
+    """A torn persist mid-apply leaves garbage in some mirror rows; the
+    COMMITted undo entry must restore them bit-exactly."""
+    tmp = str(tmp_path / "ck")
+    b, tc, cc, data = setup_run(tmp, backend=backend)
+
+    ref_tmp = str(tmp_path / "ref")
+    _, _, ccr, _ = setup_run(ref_tmp, backend=backend)
+    mref = run_with_manager(b, tc, ccr, data, 2)
+    ref_rows = np.array(mref.mirror_rows)
+
+    faults = FaultSchedule.torn_at("mirror-apply", occurrence=3)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"],
+                            faults=faults)
+    with pytest.raises(InjectedCrash):
+        train_loop.train(b.model, tc, data, 6, relaxed=True, state=st0,
+                         ckpt_manager=mgr)
+    mgr.pool.crash()
+    rec = recovery.recover(tmp, pool=mgr.pool)
     assert rec.rolled_back
-    np.testing.assert_array_equal(rec.embed_rows[idx], old_rows)
+    assert rec.mirror_step == 1
+    np.testing.assert_array_equal(rec.embed_rows, ref_rows)
 
 
 def test_crc_detects_corruption(tmp_path):
@@ -97,6 +152,23 @@ def test_pytree_roundtrip(tmp_path):
     assert got["empty"] == ()
 
 
+def test_tree_blob_roundtrip_and_crc():
+    # the empty tuple flattens to a 0-byte leaf — its (empty) chunk record
+    # must not misalign the records that follow it in the blob
+    tree = {"a": np.arange(6.0).reshape(2, 3), "b": {"c": np.int64(5)},
+            "empty": (), "z": np.zeros((0,), np.float32)}
+    blob = store.serialize_tree(tree, {"step": 9})
+    got, extra = store.deserialize_tree(blob)
+    assert extra["step"] == 9
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    assert got["b"]["c"] == 5
+    assert got["empty"] == () and got["z"].size == 0
+    bad = bytearray(blob)
+    bad[-3] ^= 0xFF
+    with pytest.raises(store.CorruptError):
+        store.deserialize_tree(bytes(bad))
+
+
 def test_uncommitted_dense_snapshot_ignored(tmp_path):
     d = str(tmp_path / "snap")
     store.save_pytree(d, {"x": np.ones(4)})
@@ -105,23 +177,34 @@ def test_uncommitted_dense_snapshot_ignored(tmp_path):
         store.load_pytree(d)
 
 
+def test_corrupt_dense_blob_falls_back(tmp_path):
+    """A corrupted in-pool dense snapshot degrades to dense=None (the mirror
+    tier stays authoritative) instead of failing recovery."""
+    tmp = str(tmp_path / "ck")
+    b, tc, cc, data = setup_run(tmp)
+    mgr = run_with_manager(b, tc, cc, data, 3)
+    region = mgr.dense_dom.get(f"slot{mgr.manifest.read()['dense_slot']}")
+    buf = mgr.pool.view(region.off, 64)
+    buf[20:30] ^= 0xFF                       # corrupt the durable blob
+    mgr.pool.mark_dirty(region.off, 64)
+    mgr.pool.persist(point="corruption")
+    rec = recovery.recover(tmp, pool=mgr.pool)
+    assert rec.dense is None and rec.dense_step == -1
+    assert rec.mirror_step == 2              # embedding tier unaffected
+
+
 def test_relaxed_gap_semantics(tmp_path):
     """dense_interval=3: the dense tier naturally trails the embedding tier
     by up to 2 steps (paper Fig. 9 relaxation); recovery reports the gap."""
     tmp = str(tmp_path / "ck")
     b, tc, cc, data = setup_run(tmp, dense_interval=3)
-    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
-    st0 = init_fn(jax.random.PRNGKey(0))
-    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
-    train_loop.train(b.model, tc, data, 5, relaxed=True, state=st0,
-                     ckpt_manager=mgr)
-    mgr.flush()
-    # steps 0..4 ran; snapshots at 0 and 3 (GC keeps 3); mirror at 4
+    run_with_manager(b, tc, cc, data, 5).pool.close()
+    # steps 0..4 ran; snapshots at 0 and 3 (slot flip keeps 3); mirror at 4
     rec = recovery.recover(tmp)
     assert rec.mirror_step == 4
     assert rec.dense_step == 3
     assert rec.gap == 1
-    # resume still possible: embeddings exact at 4, dense stale by 1
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
     fresh = init_fn(jax.random.PRNGKey(0))
     st, resume = recovery.resume_train_state(rec, fresh)
     assert resume == 5
@@ -132,14 +215,9 @@ def test_undo_log_gc(tmp_path):
     cc = CheckpointConfig(directory=tmp, dense_interval=0, max_undo_logs=3)
     b = get_arch("tinyllama-1.1b", smoke=True)
     tc = TrainConfig(checkpoint=cc)
-    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
-    st0 = init_fn(jax.random.PRNGKey(0))
-    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
     data = make_batches(b.model, 2, 8, seed=0)
-    train_loop.train(b.model, tc, data, 8, relaxed=True, state=st0,
-                     ckpt_manager=mgr)
-    mgr.flush()
-    steps = undo_log.committed_steps(tmp)
+    mgr = run_with_manager(b, tc, cc, data, 8)
+    steps = mgr.ring.committed_steps()
     assert len(steps) <= 4 and max(steps) == 7
 
 
@@ -149,15 +227,10 @@ def test_writer_deadline_skips_tier_m(tmp_path):
                           writer_deadline_s=1e-9)
     b = get_arch("tinyllama-1.1b", smoke=True)
     tc = TrainConfig(checkpoint=cc)
-    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
-    st0 = init_fn(jax.random.PRNGKey(0))
-    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
     data = make_batches(b.model, 2, 8, seed=0)
-    train_loop.train(b.model, tc, data, 3, relaxed=True, state=st0,
-                     ckpt_manager=mgr)
-    mgr.flush()
+    mgr = run_with_manager(b, tc, cc, data, 3)
     # relaxed semantics: tier-M never blocks; with an impossible deadline all
     # snapshots are skipped but tier-E stays consistent
     assert mgr.stats["tier_m_skipped"] >= 1
-    rec = recovery.recover(tmp)
+    rec = recovery.recover(tmp, pool=mgr.pool)
     assert rec.mirror_step == 2

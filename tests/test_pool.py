@@ -1,0 +1,340 @@
+"""repro.pool: device persistence/crash semantics, allocator directory
+recovery, near-memory ops + traffic accounting, deterministic fault
+injection, the embedding_ops `pool` strategy, and sim-engine calibration."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.checkpoint.undo_log import UndoRing
+from repro.pool import (DramPool, EmbeddingPoolMirror, FaultSchedule,
+                        InjectedCrash, JsonRegion, NmpQueue, PmemPool,
+                        PoolAllocator, PoolError, make_pool)
+
+BACKENDS = ["dram", "pmem"]
+
+
+def mkpool(backend, tmp_path, capacity=1 << 18, faults=None):
+    if backend == "dram":
+        return DramPool(capacity, faults=faults)
+    return PmemPool(str(tmp_path / "pool.img"), capacity, faults=faults)
+
+
+# -- device ------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_persist_survives_crash_unpersisted_lost(backend, tmp_path, rng):
+    dev = mkpool(backend, tmp_path)
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("x", shape=(16, 4), dtype="float32")
+    v1 = rng.standard_normal((16, 4)).astype(np.float32)
+    r.write_array(v1)
+    r.persist(point="p")
+    v2 = v1 * 2
+    r.write_array(v2)                       # never persisted
+    np.testing.assert_array_equal(r.read_array(), v2)   # cache is coherent
+    dev.crash()
+    np.testing.assert_array_equal(r.read_array(), v1)   # durable image only
+    assert dev.metrics.crashes == 1
+
+
+def test_pmem_reopen_across_handles(tmp_path, rng):
+    path = str(tmp_path / "pool.img")
+    dev = PmemPool(path, 1 << 18)
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("x", shape=(8,), dtype="float32")
+    v = rng.standard_normal(8).astype(np.float32)
+    r.write_array(v)
+    r.persist(point="p")
+    dev.close()
+    dev2 = PmemPool.open(path)              # like a power-cycled module
+    r2 = PoolAllocator(dev2).domain("d").get("x")
+    assert r2 is not None and r2.off == r.off
+    np.testing.assert_array_equal(r2.read_array(), v)
+
+
+def test_pool_grows_on_demand(tmp_path):
+    dev = mkpool("pmem", tmp_path, capacity=1 << 17)
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("big", shape=(1 << 20,), dtype="uint8")
+    assert dev.capacity >= r.off + r.nbytes
+    assert os.path.getsize(str(tmp_path / "pool.img")) == dev.capacity
+
+
+def test_make_pool_validates():
+    with pytest.raises(PoolError):
+        make_pool("nvme")
+    with pytest.raises(PoolError):
+        make_pool("pmem")                   # needs a path
+
+
+# -- allocator ---------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_directory_survives_crash_mid_update(backend, tmp_path):
+    # crash during the superblock persist of a *new* alloc: the previous
+    # directory (A/B slot) must still be readable and list older regions.
+    dev = mkpool(backend, tmp_path)
+    a = PoolAllocator(dev)
+    a.domain("d").alloc("first", shape=(4,), dtype="float32")
+    dev.faults = FaultSchedule.torn_at("superblock", occurrence=1)
+    with pytest.raises(InjectedCrash):
+        a.domain("d").alloc("second", shape=(4,), dtype="float32")
+    dev.faults = None
+    dev.crash()
+    a2 = PoolAllocator(dev)
+    assert a2.domain("d").get("first") is not None
+
+
+def test_json_region_ab_update(tmp_path):
+    dev = mkpool("dram", tmp_path)
+    a = PoolAllocator(dev)
+    jr = JsonRegion.create(a.domain("meta"), "m", nbytes=4 << 10)
+    assert jr.read() is None
+    jr.write({"step": 1})
+    jr.write({"step": 2})
+    assert jr.read() == {"step": 2}
+    # a torn write of step 3 must leave step 2 readable after crash
+    dev.faults = FaultSchedule.torn_at("manifest", occurrence=1)
+    with pytest.raises(InjectedCrash):
+        jr.write({"step": 3})
+    dev.faults = None
+    dev.crash()
+    assert jr.read() == {"step": 2}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_two_allocators_share_one_directory(backend, tmp_path):
+    """Several live allocator handles over one device (manager + embedding
+    mirror + recovery) must hand out disjoint regions, not stale-offset
+    overlaps."""
+    dev = mkpool(backend, tmp_path)
+    a1 = PoolAllocator(dev)
+    a2 = PoolAllocator(dev)
+    r1 = a1.domain("d").alloc("x", shape=(64,), dtype="float32")
+    r2 = a2.domain("d").alloc("y", shape=(64,), dtype="float32")
+    r3 = a1.domain("d").alloc("z", shape=(64,), dtype="float32")
+    offs = sorted([(r.off, r.off + r.nbytes) for r in (r1, r2, r3)])
+    for (s1, e1), (s2, _) in zip(offs, offs[1:]):
+        assert e1 <= s2, f"overlapping regions: {offs}"
+    assert a2.domain("d").get("z").off == r3.off    # visible via re-sync
+
+
+# -- near-memory ops ---------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_nmp_ops_match_numpy(backend, tmp_path, rng):
+    dev = mkpool(backend, tmp_path)
+    a = PoolAllocator(dev)
+    tab = rng.standard_normal((32, 8)).astype(np.float32)
+    r = a.domain("emb").alloc("t", shape=tab.shape, dtype="float32")
+    r.write_array(tab)
+    q = NmpQueue(dev)
+    idx = np.array([3, 31, 0, 3])
+    np.testing.assert_array_equal(q.gather(r, idx), tab[idx])
+
+    bags = rng.integers(0, 32, (5, 4))
+    np.testing.assert_allclose(q.bag_gather(r, bags), tab[bags].sum(1),
+                               rtol=1e-6)
+    np.testing.assert_allclose(q.bag_gather(r, bags, combine="mean"),
+                               tab[bags].mean(1), rtol=1e-6)
+
+    old = q.undo_snapshot(r, np.array([1, 2]))
+    np.testing.assert_array_equal(old, tab[[1, 2]])
+
+    q.row_update(r, np.array([1, 2]), np.ones((2, 8), np.float32),
+                 point="apply")
+    dev.crash()                             # row_update persisted
+    np.testing.assert_array_equal(r.read_array()[[1, 2]],
+                                  np.ones((2, 8), np.float32))
+
+    before = r.read_array().copy()
+    q.scatter_add(r, np.array([0, 0, 5]), np.ones((3, 8), np.float32))
+    exp = before.copy()
+    np.add.at(exp, [0, 0, 5], np.ones((3, 8), np.float32))
+    np.testing.assert_allclose(r.read_array(), exp, rtol=1e-6)
+
+
+def test_nmp_accounting_link_vs_media(tmp_path, rng):
+    """Bag lookups must move full rows inside the pool but only reduced
+    vectors (plus indices) over the link — the paper's traffic claim."""
+    dev = mkpool("dram", tmp_path)
+    a = PoolAllocator(dev)
+    tab = rng.standard_normal((1024, 32)).astype(np.float32)
+    r = a.domain("emb").alloc("t", shape=tab.shape, dtype="float32")
+    r.write_array(tab)
+    dev.metrics.media.clear()
+    dev.metrics.link.clear()
+    q = NmpQueue(dev)
+    bags = rng.integers(0, 1024, (64, 16))          # 16 rows reduced per bag
+    out = q.bag_gather(r, bags)
+    rows_bytes = bags.size * 32 * 4
+    assert dev.metrics.media_bytes("bag_gather") == rows_bytes
+    assert dev.metrics.link.get("link_out").nbytes == out.nbytes
+    assert out.nbytes * 16 == rows_bytes            # 16x link saving
+    assert dev.metrics.ndp_time_s > 0               # reduction ran on NDP
+
+
+# -- fault schedules ---------------------------------------------------------
+
+def test_fault_schedule_deterministic_occurrence(tmp_path):
+    fs = FaultSchedule.crash_at("p", occurrence=3)
+    assert fs.hit("p") == "ok" and fs.hit("p") == "ok"
+    with pytest.raises(InjectedCrash):
+        fs.hit("p")
+    assert fs.hit("p") == "ok"              # fires exactly once
+
+    fs2 = FaultSchedule.seeded(0, ("a", "b"))
+    fs3 = FaultSchedule.seeded(0, ("a", "b"))
+    assert [e.occurrence for e in fs2.events] == \
+        [e.occurrence for e in fs3.events]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_dropped_flush_loses_data_silently(backend, tmp_path):
+    dev = mkpool(backend, tmp_path,
+                 faults=FaultSchedule.drop_at("apply", occurrence=1))
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("x", shape=(4,), dtype="float32")
+    r.write_array(np.ones(4, np.float32))
+    r.persist(point="init")
+    r.write_array(np.full(4, 9.0, np.float32))
+    r.persist(point="apply")                # dropped: no error raised
+    assert dev.metrics.dropped_flushes == 1
+    dev.crash()
+    np.testing.assert_array_equal(r.read_array(), np.ones(4, np.float32))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_torn_write_is_partial(backend, tmp_path):
+    dev = mkpool(backend, tmp_path, faults=FaultSchedule.torn_at("apply"))
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("x", shape=(1024,), dtype="float32")
+    r.write_array(np.zeros(1024, np.float32))
+    r.persist(point="init")
+    r.write_array(np.full(1024, 3.0, np.float32))
+    with pytest.raises(InjectedCrash):
+        r.persist(point="apply")
+    dev.crash()
+    v = r.read_array()
+    assert (v == 3.0).any() and (v == 0.0).any()
+    assert dev.metrics.torn_writes == 1
+
+
+# -- undo ring over a pool domain -------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_undo_ring_commit_crc_and_gc(backend, tmp_path, rng):
+    dev = mkpool(backend, tmp_path)
+    ring = UndoRing(PoolAllocator(dev), max_logs=3)
+    for step in range(6):
+        ring.append(step, np.arange(4) + step,
+                    rng.standard_normal((4, 8)).astype(np.float32))
+    assert ring.committed_steps() == [2, 3, 4, 5]   # ring capacity max_logs+1
+    idx, rows, acc = ring.read(5)
+    np.testing.assert_array_equal(idx, np.arange(4) + 5)
+    assert acc is None
+    ring.gc(keep_from=4)
+    assert ring.committed_steps() == [4, 5]
+    # committed entries survive crash; a torn payload invalidates the entry
+    dev.crash()
+    ring2 = UndoRing(PoolAllocator(dev), max_logs=3)
+    assert ring2.committed_steps() == [4, 5]
+
+
+def test_undo_ring_grows_slots(tmp_path, rng):
+    dev = mkpool("dram", tmp_path)
+    ring = UndoRing(PoolAllocator(dev), max_logs=2)
+    ring.append(0, np.arange(2), np.ones((2, 4), np.float32))
+    big_idx = np.arange(512)
+    ring.append(1, big_idx, np.ones((512, 4), np.float32))  # outgrows slot
+    assert ring.committed_steps() == [0, 1]
+    idx, rows, _ = ring.read(1)
+    np.testing.assert_array_equal(idx, big_idx)
+
+
+# -- embedding_ops pool strategy --------------------------------------------
+
+def test_embedding_ops_pool_mode(tmp_path, rng):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import embedding_ops as eo
+
+    tab = rng.standard_normal((64, 8)).astype(np.float32)
+    dev = mkpool("dram", tmp_path)
+    eo.attach_pool(EmbeddingPoolMirror(dev, tab))
+    try:
+        ids = np.array([[1, 5], [63, 0]])
+        out = eo.lookup(jnp.asarray(tab), jnp.asarray(ids), mode="pool")
+        np.testing.assert_allclose(np.asarray(out), tab[ids], rtol=1e-6)
+        # works under jit via pure_callback
+        outj = jax.jit(lambda t, i: eo.lookup(t, i, mode="pool"))(
+            jnp.asarray(tab), jnp.asarray(ids))
+        np.testing.assert_allclose(np.asarray(outj), tab[ids], rtol=1e-6)
+        assert dev.metrics.link_bytes() > 0
+    finally:
+        eo.detach_pool()
+    with pytest.raises(RuntimeError):
+        eo.lookup(jnp.asarray(tab), jnp.asarray(ids), mode="pool")
+
+
+def test_embedding_ops_pool_bag_and_update(tmp_path, rng):
+    import jax.numpy as jnp
+
+    from repro.core import embedding_ops as eo
+
+    tabs = rng.standard_normal((4, 16, 8)).astype(np.float32)
+    dev = mkpool("dram", tmp_path)
+    mir = EmbeddingPoolMirror(dev, tabs)
+    eo.attach_pool(mir)
+    try:
+        ids = rng.integers(0, 16, (3, 4, 5))
+        bag = eo.bag_lookup(jnp.asarray(tabs), jnp.asarray(ids), mode="pool")
+        flat = (ids + np.arange(4)[None, :, None] * 16).reshape(-1)
+        ref = tabs.reshape(64, 8)[flat].reshape(3, 4, 5, 8).sum(2)
+        np.testing.assert_allclose(np.asarray(bag), ref, rtol=1e-5)
+        # near-memory update applies grads pool-side
+        grad = np.ones((2, 8), np.float32)
+        before = mir.region.read_array().reshape(64, 8)[[0, 1]].copy()
+        mir.apply_grad(np.array([0, 1]), grad, lr=0.5)
+        after = mir.region.read_array().reshape(64, 8)[[0, 1]]
+        np.testing.assert_allclose(after, before - 0.5 * grad, rtol=1e-6)
+    finally:
+        eo.detach_pool()
+
+
+# -- metrics / sim calibration ----------------------------------------------
+
+def test_metrics_energy_and_snapshot(tmp_path, rng):
+    dev = mkpool("pmem", tmp_path)
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("x", shape=(256, 16), dtype="float32")
+    r.write_array(rng.standard_normal((256, 16)).astype(np.float32))
+    r.persist(point="p")
+    q = NmpQueue(dev)
+    q.bag_gather(r, rng.integers(0, 256, (8, 4)))
+    snap = dev.metrics.snapshot()
+    assert snap["device"] == "pmem"
+    assert snap["energy_j"]["total"] > 0
+    assert snap["media_bytes"] > snap["link_bytes"] > 0
+    assert "bag_gather" in dev.metrics.report()
+
+
+def test_engine_calibration_from_pool_counters(tmp_path, rng):
+    from repro.sim import engine
+    from repro.sim.models_rm import RMS
+
+    dev = mkpool("pmem", tmp_path)
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("x", shape=(4096, 32), dtype="float32")
+    r.write_array(rng.standard_normal((4096, 32)).astype(np.float32))
+    r.persist(point="p")
+    NmpQueue(dev).gather(r, rng.integers(0, 4096, 2048))
+    try:
+        cal = engine.calibrate_from_pool(dev.metrics)
+        assert cal["write_bps"] > 0 and cal["read_bps"] > 0
+        res = engine.simulate("CXL-B", RMS["RM1"])
+        assert res.batch_time > 0 and res.breakdown["Checkpoint"] >= 0
+    finally:
+        engine.clear_pool_calibration()
