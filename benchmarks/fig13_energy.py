@@ -71,8 +71,16 @@ def rows():
     return out
 
 
-def main():
-    for name, val, extra in rows() + measured_rows():
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny measured-rows config (CI bench-smoke)")
+    args = ap.parse_args(argv)
+    measured = (measured_rows(dim=8, n_tables=4, rows_per=256, batch=32,
+                              n_sparse=4)
+                if args.smoke else measured_rows())
+    for name, val, extra in rows() + measured:
         print(f"{name},{val:.4f},{extra}")
 
 

@@ -1,21 +1,29 @@
 """Fault-tolerance demo over the emulated CXL/PMEM memory pool.
 
-Two drills, selected by the pool backend:
+Three drills, selected by the pool backend:
 
-  * ``--pool-backend pmem`` (default): REAL process death. Launches a trainer
-    subprocess checkpointing into a pmem pool image, SIGKILLs it mid-run (no
-    cleanup, no flush — like a node loss), then reopens the pool image from
-    the parent process, recovers, and finishes training.
+  * ``--pool-backend remote`` (default): TRUE disaggregation. Starts a
+    standalone pool-server process (the memory node, pmem-backed), launches a
+    trainer subprocess checkpointing into it over a Unix socket, SIGKILLs the
+    trainer mid-run — the memory node survives, holding every persisted byte
+    — then reconnects from the parent, recovers bit-identically (verified
+    against a clean reference run), and finishes training against the same
+    living server.
+  * ``--pool-backend pmem``: process death without a server. The trainer
+    subprocess is SIGKILLed and recovery reopens the mmap'd pool image from
+    disk, like a power-cycled PMEM module.
   * ``--pool-backend dram``: the pool is volatile across processes, so the
     drill is in-process: a deterministic fault schedule crashes the writer
     between undo COMMIT and mirror apply, the device loses its unpersisted
     cache (power-loss emulation), and recovery rolls back to a consistent
     step from the surviving battery-backed image.
 
-Both paths finish by printing the pool's traffic/energy counters
-(``repro.pool.metrics``).
+All paths finish by printing the pool's traffic/energy counters
+(``repro.pool.metrics``; the remote path prints the *tenant's* counters as
+attributed by the server).
 
-    PYTHONPATH=src python examples/fault_tolerance_demo.py [--pool-backend pmem]
+    PYTHONPATH=src python examples/fault_tolerance_demo.py \
+        [--pool-backend remote|pmem|dram]
 """
 import argparse
 import os
@@ -24,6 +32,7 @@ import subprocess
 import sys
 
 CKPT = "/tmp/repro_ft_demo"
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 TRAINER = r"""
 import sys, jax
@@ -35,7 +44,9 @@ from repro.data.synthetic import make_batches
 from repro.training import train_loop
 
 b = get_arch("dlrm-rm1", smoke=True)
-cc = CheckpointConfig(directory="%s", dense_interval=3, pool_backend="%s")
+cc = CheckpointConfig(directory=%(ckpt)r, dense_interval=3,
+                      pool_backend=%(backend)r, pool_addr=%(addr)r,
+                      pool_tenant="trainer")
 tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01, checkpoint=cc)
 data = make_batches(b.model, 16, 0, seed=11)
 init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
@@ -48,23 +59,47 @@ train_loop.train(b.model, tc, data, 1000, relaxed=True, state=st,
 """
 
 
-def crash_pmem_subprocess():
-    print("== launching trainer subprocess (pmem pool) ==")
+def run_trainer_until_kill(backend: str, addr: str = "", min_steps: int = 12):
     proc = subprocess.Popen(
-        [sys.executable, "-c", TRAINER % (CKPT, "pmem")],
-        stdout=subprocess.PIPE, text=True,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    # let it make progress, then kill -9 (uncontrolled node failure)
+        [sys.executable, "-c",
+         TRAINER % {"ckpt": CKPT, "backend": backend, "addr": addr}],
+        stdout=subprocess.PIPE, text=True, cwd=REPO)
     steps_seen = 0
     for line in proc.stdout:
         print(" ", line.strip())
         steps_seen += 1
-        if steps_seen >= 12:
+        if steps_seen >= min_steps:
             break
-    proc.kill()
+    proc.kill()                      # kill -9: no cleanup, no flush
     proc.wait()
     print(f"== SIGKILLed trainer after {steps_seen} reported steps ==")
-    return None   # recovery reopens the pool image from disk
+
+
+def crash_pmem_subprocess():
+    print("== launching trainer subprocess (pmem pool) ==")
+    run_trainer_until_kill("pmem")
+    return None, None   # recovery reopens the pool image from disk
+
+
+def crash_remote_subprocess():
+    """The paper's actual topology: pool node and trainer are different
+    processes; the trainer dies, the memory node does not."""
+    os.makedirs(CKPT, exist_ok=True)
+    addr = "unix:" + os.path.join(CKPT, "pool.sock")
+    print(f"== starting pool-server (memory node) at {addr} ==")
+    server = subprocess.Popen(
+        [sys.executable, "-m", "repro.pool.server", "--addr", addr,
+         "--backend", "pmem", "--path", os.path.join(CKPT, "pool.img")],
+        stdout=subprocess.PIPE, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": "src"})
+    line = server.stdout.readline().strip()
+    print(" ", line)
+    assert "listening" in line, f"server failed to start: {line}"
+    print("== launching trainer subprocess (remote pool tenant) ==")
+    run_trainer_until_kill("remote", addr)
+    assert server.poll() is None, "memory node must survive trainer death"
+    print("== memory node still alive ==")
+    return server, addr
 
 
 def crash_dram_inprocess():
@@ -103,20 +138,67 @@ def crash_dram_inprocess():
     return mgr.pool
 
 
+def reference_mirror(rec):
+    """Replay the trainer deterministically (same seed/data, a scratch dram
+    pool) up to the recovered step; the recovered mirror must match
+    bit-for-bit — the kill -9 lost nothing that was persisted."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.configs.base import CheckpointConfig, TrainConfig
+    from repro.core.checkpoint.manager import CheckpointManager
+    from repro.data.synthetic import make_batches
+    from repro.training import train_loop
+
+    b = get_arch("dlrm-rm1", smoke=True)
+    ref_dir = CKPT + ".ref"
+    shutil.rmtree(ref_dir, ignore_errors=True)
+    cc = CheckpointConfig(directory=ref_dir, dense_interval=3,
+                          pool_backend="dram")
+    tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01,
+                     checkpoint=cc)
+    data = make_batches(b.model, 16, 0, seed=11)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st = init_fn(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(b.model, cc, embed_init=st["embed"])
+    train_loop.train(b.model, tc, data, rec.mirror_step + 1, relaxed=True,
+                     state=st, ckpt_manager=mgr)
+    mgr.flush()
+    rows = np.array(mgr.mirror_rows)
+    mgr.close()
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--pool-backend", choices=["dram", "pmem"],
-                    default="pmem")
+    ap.add_argument("--pool-backend", choices=["dram", "pmem", "remote"],
+                    default="remote")
     args = ap.parse_args()
     shutil.rmtree(CKPT, ignore_errors=True)
 
     sys.path.insert(0, "src")
-    if args.pool_backend == "pmem":
-        surviving_pool = crash_pmem_subprocess()
-    else:
-        surviving_pool = crash_dram_inprocess()
+    server = None
+    surviving_pool = None
+    try:
+        if args.pool_backend == "pmem":
+            surviving_pool, _ = crash_pmem_subprocess()
+        elif args.pool_backend == "remote":
+            server, _ = crash_remote_subprocess()
+        else:
+            surviving_pool = crash_dram_inprocess()
+        run_recovery(args, surviving_pool)
+    finally:
+        if server is not None:     # never leak the memory node on failure
+            server.terminate()
+            server.wait()
+            print("== memory node shut down ==")
+    print("fault-tolerance demo PASSED")
 
+
+def run_recovery(args, surviving_pool):
     import jax
+    import numpy as np
 
     from repro.configs import get_arch
     from repro.configs.base import CheckpointConfig, TrainConfig
@@ -130,9 +212,16 @@ def main():
           f"gap={rec.gap} rolled_back={rec.rolled_back} ==")
     assert rec.mirror_step >= 0
 
+    if args.pool_backend == "remote":
+        np.testing.assert_array_equal(rec.embed_rows, reference_mirror(rec))
+        print(f"== recovered mirror is BIT-IDENTICAL to a clean replay "
+              f"through step {rec.mirror_step} ==")
+
     b = get_arch("dlrm-rm1", smoke=True)
     cc = CheckpointConfig(directory=CKPT, dense_interval=3,
-                          pool_backend=args.pool_backend)
+                          pool_backend=args.pool_backend,
+                          pool_addr=getattr(rec.pool, "addr", ""),
+                          pool_tenant="trainer")
     tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01,
                      checkpoint=cc)
     init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
@@ -146,7 +235,6 @@ def main():
     print(f"== resumed at step {resume}, 10 more steps, "
           f"final loss {losses[-1]:.4f} ==")
     print(mgr.pool.metrics.report())
-    print("fault-tolerance demo PASSED")
 
 
 if __name__ == "__main__":

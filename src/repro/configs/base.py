@@ -216,7 +216,10 @@ class CheckpointConfig:
     async_write: bool = True
     max_undo_logs: int = 64        # ring of undo logs kept before GC
     writer_deadline_s: float = 0.0 # 0 = no deadline (relaxed ckpt "stop" knob)
-    pool_backend: str = "pmem"     # repro.pool backend: "pmem" | "dram"
+    pool_backend: str = "pmem"     # repro.pool backend: pmem | dram | remote
+    pool_addr: str = ""            # remote backend: unix:/path or tcp:host:port
+    pool_tenant: str = "default"   # remote backend: tenant namespace on the node
+    pool_quota: int = 0            # remote backend: byte quota (0 = unlimited)
 
 
 @dataclass(frozen=True)

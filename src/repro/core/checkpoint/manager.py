@@ -43,7 +43,7 @@ import numpy as np
 from repro.core.checkpoint import store
 from repro.core.checkpoint.undo_log import UndoRing
 from repro.pool.allocator import JsonRegion, PoolAllocator
-from repro.pool.device import DramPool, PmemPool, PoolDevice
+from repro.pool.device import PoolDevice, make_pool
 from repro.pool.faults import FaultSchedule, InjectedCrash
 from repro.pool.nmp import NmpQueue
 
@@ -95,13 +95,20 @@ class CheckpointManager:
     def _open_pool(self, capacity_hint: int):
         if self.pool is None:
             backend = getattr(self.ccfg, "pool_backend", "pmem")
-            if backend == "pmem":
-                self.pool = PmemPool(os.path.join(self.root, "pool.img"),
-                                     capacity_hint, faults=self.faults)
-            else:
-                self.pool = DramPool(capacity_hint, faults=self.faults)
-            store.write_json_atomic(os.path.join(self.root, "POOL.json"),
-                                    {"backend": backend})
+            addr = getattr(self.ccfg, "pool_addr", "")
+            tenant = getattr(self.ccfg, "pool_tenant", "default")
+            self.pool = make_pool(
+                backend, path=os.path.join(self.root, "pool.img"),
+                capacity=capacity_hint, faults=self.faults, addr=addr,
+                tenant=tenant, quota=getattr(self.ccfg, "pool_quota", 0))
+            # POOL.json lets recovery reopen the same node: pmem by image
+            # path, remote by reconnecting to the surviving server under
+            # the same tenant AND quota (a server restart re-registers the
+            # tenant from the reconnect handshake)
+            store.write_json_atomic(
+                os.path.join(self.root, "POOL.json"),
+                {"backend": backend, "addr": addr, "tenant": tenant,
+                 "quota": getattr(self.ccfg, "pool_quota", 0)})
         self._alloc = PoolAllocator(self.pool)
         self.manifest = JsonRegion.create(self._alloc.domain("manifest"),
                                           "manifest")

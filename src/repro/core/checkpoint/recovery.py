@@ -49,10 +49,16 @@ class RecoveredState:
 def open_pool(root: str,
               pool: Optional[PoolDevice] = None) -> PoolDevice:
     """Reopen the checkpoint pool for `root`. A surviving in-process device
-    (dram backend, or an already-open pmem handle) takes precedence."""
+    (dram backend, or an already-open pmem handle) takes precedence. A
+    remote pool is reopened by reconnecting to the memory-node server that
+    outlived the dead trainer, under the same tenant."""
     if pool is not None:
         return pool
     info = store.read_json(os.path.join(root, "POOL.json"))
+    if info["backend"] == "remote":
+        from repro.pool.remote import RemotePool
+        return RemotePool(info["addr"], tenant=info.get("tenant", "default"),
+                          quota=info.get("quota", 0))
     if info["backend"] != "pmem":
         raise PoolError(
             f"pool backend {info['backend']!r} is volatile across processes; "

@@ -33,9 +33,16 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--strict", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--pool-backend", choices=["dram", "pmem"],
+    ap.add_argument("--pool-backend", choices=["dram", "pmem", "remote"],
                     default="pmem",
                     help="emulated memory-pool backend for checkpoints")
+    ap.add_argument("--pool-addr", default="",
+                    help="remote backend: pool-server address "
+                         "(unix:/path or tcp:host:port)")
+    ap.add_argument("--pool-tenant", default="default",
+                    help="remote backend: tenant namespace on the pool node")
+    ap.add_argument("--pool-quota", type=int, default=0,
+                    help="remote backend: byte quota (0 = unlimited)")
     ap.add_argument("--dense-interval", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -43,14 +50,21 @@ def main():
     args = ap.parse_args()
     if args.resume and args.pool_backend == "dram":
         ap.error("--resume needs a pool that survives process death; "
-                 "the dram backend is volatile — use --pool-backend pmem")
+                 "the dram backend is volatile — use --pool-backend "
+                 "pmem or remote")
+    if args.pool_backend == "remote" and not args.pool_addr:
+        ap.error("--pool-backend remote needs --pool-addr "
+                 "(start one: python -m repro.pool.server --addr ...)")
 
     bundle = get_arch(args.arch, smoke=args.smoke)
     cfg = bundle.model
     ckpt = CheckpointConfig(enabled=bool(args.ckpt_dir),
                             directory=args.ckpt_dir or "/tmp/repro_ckpt",
                             dense_interval=args.dense_interval,
-                            pool_backend=args.pool_backend)
+                            pool_backend=args.pool_backend,
+                            pool_addr=args.pool_addr,
+                            pool_tenant=args.pool_tenant,
+                            pool_quota=args.pool_quota)
     tc = TrainConfig(learning_rate=args.lr, embed_learning_rate=args.embed_lr,
                      checkpoint=ckpt)
     raw = make_batches(cfg, args.batch, args.seq, seed=0)

@@ -3,22 +3,41 @@
 Layering (bottom up):
   device.py    byte-addressable backends (DramPool / PmemPool) with explicit
                persist barriers, crash semantics, and Table-2 accounting
-  allocator.py named persistence domains, crash-atomic directory, JsonRegion
+  allocator.py named persistence domains, crash-atomic directory, JsonRegion,
+               multi-tenant namespaces + byte quotas + ownership ranges
   nmp.py       near-memory ops (gather / bag-reduce / scatter-add / row
                update / undo snapshot) + EmbeddingPoolMirror
   faults.py    deterministic crash / torn-write / dropped-flush injection
   metrics.py   traffic + energy counters (feeds benchmarks/fig13_energy.py)
+  remote.py    RemotePool client + length-prefixed wire protocol
+  server.py    standalone memory-node process serving many trainer tenants
 """
 from repro.pool.allocator import JsonRegion, PoolAllocator, Region
 from repro.pool.device import (BACKENDS, DramPool, PmemPool, PoolDevice,
-                               PoolError, make_pool)
+                               PoolError, QuotaExceededError,
+                               TenantIsolationError, make_pool)
 from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
 from repro.pool.metrics import PoolMetrics
 from repro.pool.nmp import EmbeddingPoolMirror, NmpQueue
+from repro.pool.remote import (PoolConnectionError, RemotePool, WireError,
+                               parse_addr)
 
 __all__ = [
     "BACKENDS", "DramPool", "EmbeddingPoolMirror", "FaultEvent",
     "FaultSchedule", "InjectedCrash", "JsonRegion", "NmpQueue", "PmemPool",
-    "PoolAllocator", "PoolDevice", "PoolError", "PoolMetrics", "Region",
-    "make_pool",
+    "PoolAllocator", "PoolConnectionError", "PoolDevice", "PoolError",
+    "PoolMetrics", "QuotaExceededError", "Region",
+    "RemotePool", "TenantIsolationError", "WireError", "make_pool",
+    "parse_addr",
 ]
+# "PoolServer" is importable too, via the lazy __getattr__ below (kept out
+# of __all__ so static checkers don't flag the deferred name)
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.pool.server` doesn't trip runpy's
+    # already-in-sys.modules warning
+    if name == "PoolServer":
+        from repro.pool.server import PoolServer
+        return PoolServer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -20,6 +20,16 @@ slots all live in separate domains of one pool.
 frequently-rewritten metadata (the manifest): each update lands in the slot
 with the older sequence number, so the previous manifest stays readable until
 the new one is fully persisted.
+
+Multi-tenancy: ``PoolAllocator(device, tenant="a", quota=...)`` namespaces
+every domain under ``a::<domain>`` in the shared directory, so several
+trainers can carve disjoint regions out of one memory node. A non-zero quota
+bounds the tenant's total allocated bytes (``QuotaExceededError``), and
+``owned_ranges()`` is the byte-range view the pool server uses to police raw
+reads/writes (``TenantIsolationError`` for anything outside them). With a
+remote device the allocator becomes a thin proxy: alloc/get/regions/free are
+wire ops executed by the server-side (tenant-scoped) allocator, and the
+returned regions read/write through the remote device.
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.pool.device import PoolDevice, PoolError
+from repro.pool.device import PoolDevice, PoolError, QuotaExceededError
 
 _MAGIC = b"RPPL"
 SUPER_SLOT = 32 << 10
@@ -107,20 +117,29 @@ class Domain:
         return self._alloc._alloc(self.name, name, shape, dtype, point)
 
     def get(self, name: str) -> Optional[Region]:
-        self._alloc._sync()
-        ent = self._alloc.directory["domains"].get(self.name, {}).get(name)
-        return self._alloc._region(self.name, name, ent) if ent else None
+        return self._alloc._get(self.name, name)
 
     def regions(self) -> dict[str, Region]:
-        self._alloc._sync()
-        ents = self._alloc.directory["domains"].get(self.name, {})
-        return {n: self._alloc._region(self.name, n, e)
-                for n, e in ents.items()}
+        return self._alloc._regions(self.name)
+
+    def free(self, point: str = "superblock") -> bool:
+        return self._alloc.free_domain(self.name, point=point)
 
 
 class PoolAllocator:
-    def __init__(self, device: PoolDevice):
+    def __init__(self, device: PoolDevice, tenant: Optional[str] = None,
+                 quota: int = 0):
         self.device = device
+        self.tenant = tenant
+        self.quota = int(quota)
+        if getattr(device, "remote", False):
+            # proxy mode: the server's tenant-scoped allocator owns the
+            # directory; every alloc/get/regions/free is a wire op
+            self._proxy = device
+            self.seq = 0
+            self.directory = {"alloc_ptr": DATA_START, "domains": {}}
+            return
+        self._proxy = None
         found = self._read_directory()
         if found is None:
             self.seq = 0
@@ -129,6 +148,9 @@ class PoolAllocator:
             self._write_directory()
         else:
             self.seq, self.directory = found
+
+    def _key(self, dname: str) -> str:
+        return f"{self.tenant}::{dname}" if self.tenant else dname
 
     # -- directory persistence ----------------------------------------------
     def _read_directory(self):
@@ -149,6 +171,8 @@ class PoolAllocator:
         allocator handles over one device (checkpoint manager + embedding
         mirror + recovery) must not hand out overlapping regions from stale
         in-memory copies."""
+        if self._proxy is not None:
+            return
         found = self._read_directory()
         if found is not None and found[0] > self.seq:
             self.seq, self.directory = found
@@ -169,13 +193,24 @@ class PoolAllocator:
 
     def _alloc(self, dname: str, rname: str, shape, dtype: str,
                point: str) -> Region:
-        self._sync()
         shape = tuple(int(s) for s in np.atleast_1d(np.asarray(shape, int)))
+        if self._proxy is not None:
+            ent = self._proxy.alloc_region(dname, rname, shape, dtype, point)
+            return self._region(dname, rname, ent)
+        self._sync()
         nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
-        dom = self.directory["domains"].setdefault(dname, {})
+        dom = self.directory["domains"].setdefault(self._key(dname), {})
         ent = dom.get(rname)
         if ent and ent["dtype"] == dtype and tuple(ent["shape"]) == shape:
             return self._region(dname, rname, ent)   # idempotent reopen
+        if self.tenant and self.quota:
+            # net growth: a reshaped region replaces (leaks) the old entry
+            used = self.tenant_used() - (ent["nbytes"] if ent else 0)
+            if used + nbytes > self.quota:
+                raise QuotaExceededError(
+                    f"tenant {self.tenant!r}: alloc {dname}/{rname} "
+                    f"({nbytes}B) would exceed quota "
+                    f"({used}B used of {self.quota}B)")
         off = -(-self.directory["alloc_ptr"] // _ALIGN) * _ALIGN
         self.device.ensure(off + nbytes)
         dom[rname] = {"off": off, "nbytes": nbytes, "dtype": dtype,
@@ -184,8 +219,68 @@ class PoolAllocator:
         self._write_directory(point)
         return self._region(dname, rname, dom[rname])
 
+    def _get(self, dname: str, rname: str) -> Optional[Region]:
+        if self._proxy is not None:
+            ent = self._proxy.get_region(dname, rname)
+            return self._region(dname, rname, ent) if ent else None
+        self._sync()
+        ent = self.directory["domains"].get(self._key(dname), {}).get(rname)
+        return self._region(dname, rname, ent) if ent else None
+
+    def _regions(self, dname: str) -> dict[str, Region]:
+        if self._proxy is not None:
+            ents = self._proxy.list_regions(dname)
+        else:
+            self._sync()
+            ents = self.directory["domains"].get(self._key(dname), {})
+        return {n: self._region(dname, n, e) for n, e in ents.items()}
+
+    def free_domain(self, dname: str, point: str = "superblock") -> bool:
+        """Drop a domain's directory entries (the data bytes are leaked —
+        emulator; what matters is the tenant can no longer address them)."""
+        if self._proxy is not None:
+            return self._proxy.free_remote_domain(dname, point)
+        self._sync()
+        if self.directory["domains"].pop(self._key(dname), None) is None:
+            return False
+        self._write_directory(point)
+        return True
+
     def domain(self, name: str) -> Domain:
         return Domain(self, name)
+
+    # -- tenancy -------------------------------------------------------------
+    def _tenant_entries(self, tenant: Optional[str] = None):
+        t = tenant if tenant is not None else self.tenant
+        if t is None:
+            for dom in self.directory["domains"].values():
+                yield from dom.values()
+            return
+        pre = f"{t}::"
+        for key, dom in self.directory["domains"].items():
+            if key.startswith(pre):
+                yield from dom.values()
+
+    def tenant_used(self, tenant: Optional[str] = None) -> int:
+        """Bytes currently allocated to `tenant` (quota accounting)."""
+        self._sync()
+        return sum(e["nbytes"] for e in self._tenant_entries(tenant))
+
+    def owned_ranges(self, tenant: Optional[str] = None) -> list[tuple]:
+        """[start, end) byte ranges the tenant may address directly — the
+        server checks every raw read/write/persist/nmp request against these."""
+        self._sync()
+        return [(e["off"], e["off"] + e["nbytes"])
+                for e in self._tenant_entries(tenant)]
+
+    def tenant_domains(self, tenant: Optional[str] = None) -> list[str]:
+        self._sync()
+        t = tenant if tenant is not None else self.tenant
+        if t is None:
+            return list(self.directory["domains"])
+        pre = f"{t}::"
+        return [k[len(pre):] for k in self.directory["domains"] if
+                k.startswith(pre)]
 
 
 class JsonRegion:

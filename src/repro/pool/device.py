@@ -32,7 +32,16 @@ _ALIGN = 64
 
 
 class PoolError(RuntimeError):
-    pass
+    """Base class for every pool-layer failure (all subtypes are typed so
+    callers — and the wire protocol — can tell them apart)."""
+
+
+class QuotaExceededError(PoolError):
+    """A tenant's allocation would exceed its byte quota."""
+
+
+class TenantIsolationError(PoolError):
+    """A tenant addressed bytes (or a domain) it does not own."""
 
 
 class PoolDevice:
@@ -271,17 +280,28 @@ class PmemPool(PoolDevice):
         super().close()
 
 
-BACKENDS = ("dram", "pmem")
+BACKENDS = ("dram", "pmem", "remote")
 
 
 def make_pool(backend: str, *, path: Optional[str] = None,
               capacity: int = 1 << 20,
-              faults: Optional[FaultSchedule] = None) -> PoolDevice:
+              faults: Optional[FaultSchedule] = None,
+              addr: Optional[str] = None, tenant: str = "default",
+              quota: int = 0) -> PoolDevice:
     if backend == "dram":
         return DramPool(capacity, faults)
     if backend == "pmem":
         if not path:
             raise PoolError("pmem backend needs a file path")
         return PmemPool(path, capacity, faults)
+    if backend == "remote":
+        if not addr:
+            raise PoolError("remote backend needs a server addr "
+                            "(unix:/path or tcp:host:port)")
+        from repro.pool.remote import RemotePool
+        dev = RemotePool(addr, tenant=tenant, quota=quota)
+        if faults is not None:
+            dev.faults = faults
+        return dev
     raise PoolError(f"unknown pool backend {backend!r} (want one of "
                     f"{BACKENDS})")

@@ -98,6 +98,23 @@ class PoolMetrics:
         e["total"] = sum(e.values())
         return e
 
+    @classmethod
+    def from_snapshot(cls, snap: dict) -> "PoolMetrics":
+        """Rebuild counters from a ``snapshot()`` dict — how a RemotePool
+        client materialises its server-side (per-tenant) metrics so
+        ``report()``/``energy()``/sim calibration work unchanged."""
+        m = cls(device_name=snap.get("device", "dram"))
+        for side, table in (("media", m.media), ("link", m.link)):
+            for kind, st in (snap.get(side) or {}).items():
+                table[kind] = OpStat(ops=int(st["ops"]),
+                                     nbytes=int(st["nbytes"]),
+                                     time_s=float(st["time_s"]))
+        m.ndp_time_s = float(snap.get("ndp_time_s", 0.0))
+        m.dropped_flushes = int(snap.get("dropped_flushes", 0))
+        m.torn_writes = int(snap.get("torn_writes", 0))
+        m.crashes = int(snap.get("crashes", 0))
+        return m
+
     def snapshot(self) -> dict:
         return {
             "device": self.device_name,

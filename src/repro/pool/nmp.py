@@ -24,8 +24,15 @@ from repro.pool.device import PoolDevice
 
 
 class NmpQueue:
+    """Near-memory op dispatch. Against a local device the ops run in-process
+    on zero-copy cache views; against a ``RemotePool`` each op is shipped as
+    one ``nmp`` wire frame and executes inside the pool-server process (the
+    memory node), which is where near-memory compute belongs — only operands
+    and results cross the client's link."""
+
     def __init__(self, device: PoolDevice):
         self.device = device
+        self._remote = getattr(device, "remote", False)
         self._pending: list = []
 
     # -- queue machinery -----------------------------------------------------
@@ -62,6 +69,8 @@ class NmpQueue:
     def gather(self, region: Region, idx) -> np.ndarray:
         """rows[idx] -> host. Link carries idx in and raw rows out."""
         idx = np.asarray(idx)
+        if self._remote:
+            return self.device.nmp("gather", region, idx=idx)
         flat, row_bytes = self._rows_meta(region)
         out = flat[idx.reshape(-1)].reshape(*idx.shape, flat.shape[-1]).copy()
         m = self.device.metrics
@@ -78,6 +87,9 @@ class NmpQueue:
         idx = np.asarray(idx)
         if offsets is not None:
             idx = idx + offsets
+        if self._remote:
+            return self.device.nmp("bag_gather", region, idx=idx,
+                                   combine=combine)
         flat, row_bytes = self._rows_meta(region)
         rows = flat[idx.reshape(-1)].reshape(*idx.shape, flat.shape[-1])
         red = rows.sum(axis=-2) if combine == "sum" else rows.mean(axis=-2)
@@ -95,6 +107,10 @@ class NmpQueue:
         """rows -> pool at idx (the embedding apply). Idempotent writes."""
         idx = np.asarray(idx).reshape(-1)
         rows = np.asarray(rows)
+        if self._remote:
+            self.device.nmp("row_update", region, idx=idx, rows=rows,
+                            point=point)
+            return
         flat, row_bytes = self._rows_meta(region)
         flat[idx] = rows.reshape(idx.size, -1)
         self._mark_rows_dirty(region, flat, idx, row_bytes)
@@ -110,6 +126,10 @@ class NmpQueue:
         """Accumulate gradient rows pool-side (read-modify-write)."""
         idx = np.asarray(idx).reshape(-1)
         delta = np.asarray(delta)
+        if self._remote:
+            self.device.nmp("scatter_add", region, idx=idx, rows=delta,
+                            point=point)
+            return
         flat, row_bytes = self._rows_meta(region)
         np.add.at(flat, idx, delta.reshape(idx.size, -1).astype(flat.dtype))
         self._mark_rows_dirty(region, flat, idx, row_bytes)
@@ -126,6 +146,8 @@ class NmpQueue:
         """Capture the pre-update image of rows[idx] *inside the pool* (no
         link traffic — the paper's batch-aware undo capture)."""
         idx = np.asarray(idx).reshape(-1)
+        if self._remote:
+            return self.device.nmp("undo_snapshot", region, idx=idx)
         flat, row_bytes = self._rows_meta(region)
         old = np.array(flat[idx])
         self.device.metrics.record(

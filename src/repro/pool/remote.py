@@ -1,0 +1,354 @@
+"""RemotePool — client side of the memory-node wire protocol.
+
+A ``RemotePool`` is a ``PoolDevice`` whose cache, media, allocator directory
+and near-memory logic all live in another process (``repro.pool.server``),
+reached over a Unix or TCP socket. This is the actual disaggregation step:
+several trainer processes share one memory node, and the node — with every
+persisted byte — survives any trainer's death (``kill -9`` included), while a
+trainer survives a pool power-cycle via the normal recovery path.
+
+Wire format (both directions), little-endian:
+
+    u32 total | u32 hdr_len | hdr (UTF-8 JSON) | body (raw bytes)
+
+``total`` counts everything after itself. Requests carry ``{"op": ...}``
+plus op-specific fields; bulk payloads (write data, nmp operands, read
+results) ride in ``body`` so arrays never pass through JSON. Responses carry
+``{"ok": true, ...}`` or ``{"ok": false, "kind": <error class>, ...}`` —
+the client re-raises the matching typed exception (``QuotaExceededError``,
+``TenantIsolationError``, ``WireError``, ``PoolConnectionError``,
+``InjectedCrash``), so protocol-level nastiness surfaces as exceptions, never
+as hangs or silent corruption.
+
+Every connection must ``hello`` first, naming its tenant (and optionally a
+byte quota). All subsequent ops are executed under that tenant's namespace,
+quota, and metrics; raw-offset ops are validated against the tenant's owned
+byte ranges server-side.
+
+Ops: hello, read, write, persist, ensure, crash, alloc, get, regions, free,
+nmp, metrics, set-faults, capacity, close.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import socket
+import struct
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.pool.device import (PoolDevice, PoolError, QuotaExceededError,
+                               TenantIsolationError)
+from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
+from repro.pool.metrics import PoolMetrics
+
+MAX_FRAME = 1 << 30          # anything larger is garbage, not a request
+_LEN = struct.Struct("<I")
+DEFAULT_TIMEOUT = 120.0
+
+
+class WireError(PoolError):
+    """Malformed, truncated, or oversized protocol frame."""
+
+
+class PoolConnectionError(PoolError):
+    """The peer vanished (refused, closed mid-op, or timed out)."""
+
+
+# ---------------------------------------------------------------------------
+# framing (shared by client and server)
+# ---------------------------------------------------------------------------
+
+
+def parse_addr(addr: str):
+    """'unix:/path', 'tcp:host:port', or a bare filesystem path (unix)."""
+    if addr.startswith("unix:"):
+        return ("unix", addr[5:])
+    if addr.startswith("tcp:"):
+        host, _, port = addr[4:].rpartition(":")
+        if not host or not port.isdigit():
+            raise PoolError(f"bad tcp addr {addr!r} (want tcp:host:port)")
+        return ("tcp", (host, int(port)))
+    return ("unix", addr)
+
+
+def format_addr(kind: str, target) -> str:
+    if kind == "unix":
+        return f"unix:{target}"
+    return f"tcp:{target[0]}:{target[1]}"
+
+
+def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool = False):
+    """Read exactly n bytes. Returns None on clean EOF at a frame boundary
+    (only when at_boundary); raises WireError on EOF mid-frame and
+    PoolConnectionError on socket-level failure."""
+    buf = bytearray()
+    while len(buf) < n:
+        try:
+            chunk = sock.recv(n - len(buf))
+        except socket.timeout as e:
+            raise PoolConnectionError("timed out waiting for peer") from e
+        except OSError as e:
+            raise PoolConnectionError(str(e)) from e
+        if not chunk:
+            if at_boundary and not buf:
+                return None
+            raise WireError(f"peer closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return bytes(buf)
+
+
+def send_frame(sock: socket.socket, hdr: dict, body: bytes = b""):
+    hj = json.dumps(hdr).encode()
+    total = 4 + len(hj) + len(body)
+    if total > MAX_FRAME:
+        raise WireError(f"frame too large ({total} bytes)")
+    try:
+        sock.sendall(_LEN.pack(total) + _LEN.pack(len(hj)) + hj + body)
+    except OSError as e:
+        raise PoolConnectionError(str(e)) from e
+
+
+def recv_frame(sock: socket.socket):
+    """Returns (hdr, body), or None on clean EOF between frames."""
+    head = _recv_exact(sock, 4, at_boundary=True)
+    if head is None:
+        return None
+    (total,) = _LEN.unpack(head)
+    if total < 4 or total > MAX_FRAME:
+        raise WireError(f"bad frame length {total}")
+    rest = _recv_exact(sock, total)
+    (hlen,) = _LEN.unpack(rest[:4])
+    if hlen > total - 4:
+        raise WireError(f"header length {hlen} overruns frame ({total})")
+    try:
+        hdr = json.loads(rest[4:4 + hlen].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireError(f"bad frame header: {e}") from e
+    if not isinstance(hdr, dict):
+        raise WireError("frame header is not an object")
+    return hdr, rest[4 + hlen:]
+
+
+_ERROR_TYPES = {
+    "PoolError": PoolError,
+    "WireError": WireError,
+    "PoolConnectionError": PoolConnectionError,
+    "QuotaExceededError": QuotaExceededError,
+    "TenantIsolationError": TenantIsolationError,
+}
+
+
+def error_to_frame(exc: BaseException) -> dict:
+    if isinstance(exc, InjectedCrash):
+        return {"ok": False, "kind": "InjectedCrash", "error": str(exc),
+                "point": exc.point, "occurrence": exc.occurrence}
+    kind = type(exc).__name__ if isinstance(exc, PoolError) else "PoolError"
+    return {"ok": False, "kind": kind,
+            "error": str(exc) or type(exc).__name__}
+
+
+def frame_to_error(hdr: dict) -> BaseException:
+    kind = hdr.get("kind", "PoolError")
+    if kind == "InjectedCrash":
+        return InjectedCrash(hdr.get("point", "?"), hdr.get("occurrence", 0))
+    return _ERROR_TYPES.get(kind, PoolError)(hdr.get("error", "remote error"))
+
+
+def _as_bytes(data) -> bytes:
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        return bytes(data)
+    return np.ascontiguousarray(data).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# client device
+# ---------------------------------------------------------------------------
+
+
+class RemotePool(PoolDevice):
+    """PoolDevice backed by a pool-server process.
+
+    ``view`` returns a *local copy* of the server cache (read-mostly; the ops
+    that mutate views in-process — the nmp layer — execute server-side
+    instead), ``mark_dirty`` is a no-op (the server tracks dirt on write),
+    and ``metrics`` is a freshly-fetched snapshot of this tenant's
+    server-side counters.
+    """
+
+    backend = "remote"
+    remote = True
+
+    def __init__(self, addr: str, tenant: str = "default", quota: int = 0,
+                 timeout: float = DEFAULT_TIMEOUT):
+        self.addr = addr
+        self.tenant = tenant
+        self.closed = False
+        self._faults: Optional[FaultSchedule] = None
+        self._lock = threading.Lock()
+        kind, target = parse_addr(addr)
+        try:
+            if kind == "unix":
+                self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            else:
+                self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            self._sock.settimeout(timeout)
+            self._sock.connect(target)
+        except OSError as e:
+            raise PoolConnectionError(
+                f"cannot reach pool server at {addr}: {e}") from e
+        hdr, _ = self._request({"op": "hello", "tenant": tenant,
+                                "quota": int(quota)})
+        self._capacity = int(hdr["capacity"])
+        self.device_name = hdr.get("device", "remote")
+
+    # -- plumbing ------------------------------------------------------------
+    def _request(self, hdr: dict, body: bytes = b""):
+        with self._lock:
+            if self.closed:
+                raise PoolError("device closed")
+            try:
+                send_frame(self._sock, hdr, body)
+                resp = recv_frame(self._sock)
+            except PoolError:
+                # transport failure mid-exchange: the stream position is
+                # unknown (a late reply could alias the next request's
+                # response — there are no correlation ids), so the
+                # connection is dead from here on
+                self.closed = True
+                self._sock.close()
+                raise
+            if resp is None:
+                self.closed = True
+                self._sock.close()
+                raise PoolConnectionError(
+                    f"pool server at {self.addr} closed the connection "
+                    f"(server restart mid-op?)")
+        rh, rbody = resp
+        if not rh.get("ok"):
+            raise frame_to_error(rh)
+        return rh, rbody
+
+    # -- PoolDevice surface ----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    def ensure(self, nbytes: int):
+        rh, _ = self._request({"op": "ensure", "nbytes": int(nbytes)})
+        self._capacity = int(rh["capacity"])
+
+    def read(self, off: int, nbytes: int, tag: str = "read") -> np.ndarray:
+        _, body = self._request({"op": "read", "off": int(off),
+                                 "nbytes": int(nbytes), "tag": tag})
+        return np.frombuffer(body, dtype=np.uint8)   # read-only by nature
+
+    def view(self, off: int, nbytes: int) -> np.ndarray:
+        # a writable LOCAL copy: mutations do not reach the server (remote
+        # mutation goes through write()/nmp ops); all in-repo view users are
+        # read-only or local-device-only
+        _, body = self._request({"op": "read", "off": int(off),
+                                 "nbytes": int(nbytes), "tag": "view"})
+        return np.frombuffer(body, dtype=np.uint8).copy()
+
+    def write(self, off: int, data, tag: str = "write"):
+        self._request({"op": "write", "off": int(off), "tag": tag},
+                      _as_bytes(data))
+
+    def mark_dirty(self, off: int, nbytes: int):
+        pass                       # the server marks dirt on its own writes
+
+    def persist(self, off: Optional[int] = None,
+                nbytes: Optional[int] = None, point: str = "persist"):
+        self._request({"op": "persist", "off": off, "nbytes": nbytes,
+                       "point": point})
+
+    def crash(self):
+        """Ask the server to power-cycle the device (volatile cache dropped,
+        durable media reloaded) — the memory-node power-loss drill."""
+        self._request({"op": "crash"})
+
+    def close(self):
+        with self._lock:               # never yank the socket mid-request
+            if not self.closed:
+                try:
+                    send_frame(self._sock, {"op": "close"})
+                except PoolError:
+                    pass
+                self.closed = True
+                self._sock.close()
+
+    # -- faults (server-side schedule, set over the wire) ---------------------
+    @property
+    def faults(self) -> Optional[FaultSchedule]:
+        return self._faults
+
+    @faults.setter
+    def faults(self, schedule: Optional[FaultSchedule]):
+        events = ([dataclasses.asdict(e) for e in schedule.events]
+                  if schedule is not None else None)
+        self._request({"op": "set-faults", "events": events})
+        self._faults = schedule
+
+    # -- metrics ---------------------------------------------------------------
+    @property
+    def metrics(self) -> PoolMetrics:
+        """This tenant's server-side counters, as a fresh snapshot object."""
+        rh, _ = self._request({"op": "metrics"})
+        return PoolMetrics.from_snapshot(rh["snapshot"])
+
+    def metrics_snapshot(self, scope: str = "tenant") -> dict:
+        rh, _ = self._request({"op": "metrics", "scope": scope})
+        return rh.get("tenants") if scope == "all" else rh["snapshot"]
+
+    def reset_metrics(self):
+        self._request({"op": "metrics", "reset": True})
+
+    # -- allocator proxy (PoolAllocator routes through these) ------------------
+    def alloc_region(self, domain: str, name: str, shape, dtype: str,
+                     point: str = "superblock") -> dict:
+        rh, _ = self._request({"op": "alloc", "domain": domain, "name": name,
+                               "shape": [int(s) for s in shape],
+                               "dtype": dtype, "point": point})
+        self._capacity = int(rh.get("capacity", self._capacity))
+        return rh["region"]
+
+    def get_region(self, domain: str, name: str) -> Optional[dict]:
+        rh, _ = self._request({"op": "get", "domain": domain, "name": name})
+        return rh["region"]
+
+    def list_regions(self, domain: str) -> dict:
+        rh, _ = self._request({"op": "regions", "domain": domain})
+        return rh["regions"]
+
+    def free_remote_domain(self, domain: str,
+                           point: str = "superblock") -> bool:
+        rh, _ = self._request({"op": "free", "domain": domain,
+                               "point": point})
+        return bool(rh["freed"])
+
+    # -- near-memory ops --------------------------------------------------------
+    def nmp(self, kind: str, region, idx, rows=None, combine: str = "sum",
+            point: Optional[str] = None):
+        """Ship one near-memory op to the server; returns the result array
+        (gather / bag_gather / undo_snapshot) or None (row_update /
+        scatter_add)."""
+        idx = np.ascontiguousarray(np.asarray(idx), dtype=np.int64)
+        hdr = {"op": "nmp", "kind": kind, "combine": combine, "point": point,
+               "region": {"off": region.off, "nbytes": region.nbytes,
+                          "dtype": region.dtype,
+                          "shape": list(region.shape)},
+               "idx_shape": list(idx.shape)}
+        body = idx.tobytes()
+        if rows is not None:
+            rows = np.ascontiguousarray(rows)
+            hdr["rows_dtype"] = str(rows.dtype)
+            hdr["rows_shape"] = list(rows.shape)
+            body += rows.tobytes()
+        rh, rbody = self._request(hdr, body)
+        if rh.get("shape") is None:
+            return None
+        return np.frombuffer(rbody, dtype=rh["dtype"]) \
+            .reshape(rh["shape"]).copy()

@@ -1,0 +1,454 @@
+"""Standalone pool-server process — the emulated CXL memory node.
+
+Owns ONE real backing device (``DramPool`` or ``PmemPool``) plus its
+allocator directory and near-memory logic, and serves the wire protocol from
+``repro.pool.remote`` to any number of trainer processes over a Unix or TCP
+socket. Trainer death (including ``kill -9``) costs the node nothing; node
+death loses only unpersisted cache, exactly like a power-cycled module —
+pmem-backed servers recover their media image on restart.
+
+Multi-tenancy: each connection ``hello``s with a tenant name (and optional
+byte quota). The server keeps one tenant-scoped ``PoolAllocator`` view and
+one ``PoolMetrics`` per tenant:
+
+  * namespaces — tenant A's ``undo-log`` and tenant B's ``undo-log`` are
+    different domains in the shared directory (``A::undo-log``);
+  * quotas — allocations beyond the tenant's byte budget raise
+    ``QuotaExceededError`` (DisaggRec-style capacity pooling);
+  * isolation — every raw read/write/persist/nmp offset range must fall
+    inside a region the tenant owns, else ``TenantIsolationError``. The
+    superblock and other tenants' regions are unaddressable through the
+    data path. The *control plane* (crash / set-faults / ensure /
+    all-tenants metrics) is node-wide by nature — it emulates power events
+    and fault drills, not data access — and can be denied to tenants
+    entirely with ``control_ops=False`` (CLI ``--no-control-ops``) for a
+    production-posture server;
+  * attribution — all device traffic/energy counters recorded while serving
+    a request land in that tenant's ``PoolMetrics``, so link-vs-media bytes
+    and joules are attributable per trainer (``metrics`` op; ``scope=all``
+    for the operator view).
+
+Fault injection stays a memory-node property: schedules set via the CLI or
+the ``set-faults`` op arm the device's persist barriers; an ``InjectedCrash``
+is reported to the requesting client as a typed error while the node keeps
+serving (the trainer, not the pool, decides whether that kills it).
+
+    PYTHONPATH=src python -m repro.pool.server \
+        --addr unix:/tmp/pool.sock --backend pmem --path /tmp/pool.img
+
+Production deployments would put this behind a supervisor; here it is the
+reference memory node for demos, tests, and the CI soak drill.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import os
+import signal
+import socket
+import sys
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.pool.allocator import PoolAllocator, Region
+from repro.pool.device import (DramPool, PmemPool, PoolDevice, PoolError,
+                               TenantIsolationError)
+from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
+from repro.pool.metrics import PoolMetrics
+from repro.pool.nmp import NmpQueue
+from repro.pool.remote import (WireError, error_to_frame, format_addr,
+                               parse_addr, recv_frame, send_frame)
+
+
+class Tenant:
+    def __init__(self, name: str, device: PoolDevice, quota: int):
+        self.name = name
+        self.quota = int(quota)
+        self.metrics = PoolMetrics(device_name=device.profile.name)
+        self.alloc = PoolAllocator(device, tenant=name, quota=quota)
+        self.ranges = None      # owned-ranges cache; None = recompute
+
+    def owned_ranges(self):
+        # the server is the only directory writer and invalidates this on
+        # alloc/free/crash, so the hot read/write/nmp path skips re-parsing
+        # the superblock per request
+        if self.ranges is None:
+            self.ranges = self.alloc.owned_ranges()
+        return self.ranges
+
+
+class PoolServer:
+    def __init__(self, device: PoolDevice, addr: str, default_quota: int = 0,
+                 conn_timeout: Optional[float] = 600.0,
+                 control_ops: bool = True):
+        self.device = device
+        self.default_quota = int(default_quota)
+        self.conn_timeout = conn_timeout
+        self.control_ops = control_ops
+        self.tenants: dict[str, Tenant] = {}
+        self._lock = threading.RLock()       # serialises all device work
+        self._nmp = NmpQueue(device)
+        self._stop = threading.Event()
+        self._conns: set = set()
+        kind, target = parse_addr(addr)
+        if kind == "unix":
+            with contextlib.suppress(OSError):
+                os.unlink(target)
+            self._listener = socket.socket(socket.AF_UNIX,
+                                           socket.SOCK_STREAM)
+        else:
+            self._listener = socket.socket(socket.AF_INET,
+                                           socket.SOCK_STREAM)
+            self._listener.setsockopt(socket.SOL_SOCKET,
+                                      socket.SO_REUSEADDR, 1)
+        self._listener.bind(target)
+        self._listener.listen(32)
+        if kind == "tcp":
+            target = self._listener.getsockname()[:2]   # resolve port 0
+        self.addr = format_addr(kind, target)
+
+    # -- lifecycle ------------------------------------------------------------
+    def serve_forever(self):
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                break                       # listener closed by shutdown()
+            with self._lock:
+                self._conns.add(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def start(self) -> "PoolServer":
+        """Run the accept loop on a daemon thread (in-process servers for
+        tests and demos); returns self."""
+        threading.Thread(target=self.serve_forever, daemon=True).start()
+        return self
+
+    def shutdown(self, close_device: bool = False):
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns, self._conns = list(self._conns), set()
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        if close_device:
+            self.device.close()
+
+    # -- per-connection loop ----------------------------------------------------
+    def _serve_conn(self, conn: socket.socket):
+        if self.conn_timeout:
+            conn.settimeout(self.conn_timeout)
+        tenant: Optional[Tenant] = None
+        try:
+            while not self._stop.is_set():
+                try:
+                    frame = recv_frame(conn)
+                except WireError as e:
+                    # stream is out of sync: report once, then drop the conn
+                    try:
+                        send_frame(conn, error_to_frame(e))
+                    except PoolError:
+                        pass
+                    return
+                except PoolError:
+                    return
+                if frame is None:
+                    return                  # clean EOF
+                hdr, body = frame
+                op = hdr.get("op")
+                if op == "close":
+                    return
+                try:
+                    if op == "hello":
+                        tenant = self._hello(hdr)
+                        rh, rbody = {"capacity": self.device.capacity,
+                                     "device": self.device.profile.name,
+                                     "tenant": tenant.name}, b""
+                    elif tenant is None:
+                        raise TenantIsolationError(
+                            "no tenant identity: send hello first")
+                    else:
+                        rh, rbody = self._dispatch(tenant, op, hdr, body)
+                    rh["ok"] = True
+                    send_frame(conn, rh, rbody)
+                except (PoolError, InjectedCrash) as e:
+                    send_frame(conn, error_to_frame(e))
+                except Exception as e:      # defensive: typed, keep serving
+                    send_frame(conn, error_to_frame(
+                        PoolError(f"{type(e).__name__}: {e}")))
+        except PoolError:
+            pass                            # peer vanished mid-reply
+        finally:
+            with self._lock:
+                self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _hello(self, hdr: dict) -> Tenant:
+        name = str(hdr.get("tenant") or "default")
+        if "::" in name or not name:
+            raise PoolError(f"bad tenant name {name!r}")
+        with self._lock:
+            t = self.tenants.get(name)
+            if t is None:
+                quota = int(hdr.get("quota") or 0) or self.default_quota
+                t = Tenant(name, self.device, quota)
+                self.tenants[name] = t
+        return t
+
+    # -- dispatch ---------------------------------------------------------------
+    def _dispatch(self, tenant: Tenant, op: str, hdr: dict, body: bytes):
+        handler = getattr(self, f"_op_{op.replace('-', '_')}", None)
+        if handler is None:
+            raise WireError(f"unknown op {op!r}")
+        with self._lock:
+            prev = self.device.metrics
+            self.device.metrics = tenant.metrics   # attribute traffic
+            try:
+                return handler(tenant, hdr, body)
+            finally:
+                self.device.metrics = prev
+
+    def _check_owned(self, tenant: Tenant, off, nbytes):
+        off, nbytes = int(off), int(nbytes)
+        if off < 0 or nbytes < 0:
+            raise WireError(f"bad range [{off}, {off + nbytes})")
+        for s, e in tenant.owned_ranges():
+            if s <= off and off + nbytes <= e:
+                return off, nbytes
+        raise TenantIsolationError(
+            f"tenant {tenant.name!r}: access [{off}, {off + nbytes}) is "
+            f"outside its owned regions")
+
+    def _check_control(self, tenant: Tenant, op: str):
+        if not self.control_ops:
+            raise TenantIsolationError(
+                f"tenant {tenant.name!r}: node-wide control op {op!r} is "
+                f"disabled on this server (--no-control-ops)")
+
+    # -- ops ---------------------------------------------------------------------
+    def _op_read(self, tenant, hdr, body):
+        off, nbytes = self._check_owned(tenant, hdr["off"], hdr["nbytes"])
+        arr = self.device.read(off, nbytes, tag=hdr.get("tag", "read"))
+        return {}, bytes(arr)
+
+    def _op_write(self, tenant, hdr, body):
+        off, _ = self._check_owned(tenant, hdr["off"], len(body))
+        self.device.write(off, np.frombuffer(body, dtype=np.uint8),
+                          tag=hdr.get("tag", "write"))
+        return {}, b""
+
+    def _op_persist(self, tenant, hdr, body):
+        off, nbytes = hdr.get("off"), hdr.get("nbytes")
+        point = hdr.get("point", "persist")
+        if off is None:
+            # global barrier: flushes every dirty range (stronger than the
+            # tenant needs, leaks nothing)
+            self.device.persist(point=point)
+        else:
+            if nbytes is None:
+                raise WireError("clipped persist needs nbytes")
+            off, nbytes = self._check_owned(tenant, off, nbytes)
+            self.device.persist(off, nbytes, point=point)
+        return {}, b""
+
+    def _op_ensure(self, tenant, hdr, body):
+        self._check_control(tenant, "ensure")   # unmetered device growth
+        self.device.ensure(int(hdr["nbytes"]))
+        return {"capacity": self.device.capacity}, b""
+
+    def _op_capacity(self, tenant, hdr, body):
+        return {"capacity": self.device.capacity}, b""
+
+    def _op_crash(self, tenant, hdr, body):
+        """Power-cycle the node: volatile cache dropped, media reloaded.
+        Server-side allocator views are rebuilt from the durable directory
+        (their in-memory copies may be ahead of media, like any cache)."""
+        self._check_control(tenant, "crash")
+        self.device.crash()
+        for t in self.tenants.values():
+            t.alloc = PoolAllocator(self.device, tenant=t.name,
+                                    quota=t.quota)
+            t.ranges = None
+        return {}, b""
+
+    def _op_set_faults(self, tenant, hdr, body):
+        self._check_control(tenant, "set-faults")
+        events = hdr.get("events")
+        if events is None:
+            self.device.faults = None
+        else:
+            self.device.faults = FaultSchedule(
+                events=tuple(FaultEvent(**e) for e in events))
+        return {}, b""
+
+    def _op_alloc(self, tenant, hdr, body):
+        region = tenant.alloc.domain(hdr["domain"]).alloc(
+            hdr["name"], shape=tuple(hdr["shape"]), dtype=hdr["dtype"],
+            point=hdr.get("point", "superblock"))
+        tenant.ranges = None
+        return {"region": _entry(region),
+                "capacity": self.device.capacity}, b""
+
+    def _op_get(self, tenant, hdr, body):
+        region = tenant.alloc.domain(hdr["domain"]).get(hdr["name"])
+        return {"region": _entry(region) if region else None}, b""
+
+    def _op_regions(self, tenant, hdr, body):
+        ents = tenant.alloc.domain(hdr["domain"]).regions()
+        return {"regions": {n: _entry(r) for n, r in ents.items()}}, b""
+
+    def _op_free(self, tenant, hdr, body):
+        freed = tenant.alloc.free_domain(
+            hdr["domain"], point=hdr.get("point", "superblock"))
+        tenant.ranges = None
+        return {"freed": freed}, b""
+
+    def _op_metrics(self, tenant, hdr, body):
+        if hdr.get("reset"):
+            tenant.metrics.reset()
+        if hdr.get("scope") == "all":
+            self._check_control(tenant, "metrics:all")  # cross-tenant view
+            return {"tenants": {n: t.metrics.snapshot()
+                                for n, t in self.tenants.items()},
+                    "snapshot": tenant.metrics.snapshot()}, b""
+        return {"snapshot": tenant.metrics.snapshot()}, b""
+
+    def _op_nmp(self, tenant, hdr, body):
+        r = hdr["region"]
+        off, nbytes = self._check_owned(tenant, r["off"], r["nbytes"])
+        region = Region(self.device, "<nmp>", "<nmp>", off, nbytes,
+                        r["dtype"], tuple(r["shape"]))
+        idx_shape = tuple(hdr["idx_shape"])
+        n_idx = int(np.prod(idx_shape)) if idx_shape else 1
+        idx = np.frombuffer(body[:n_idx * 8], dtype=np.int64) \
+            .reshape(idx_shape)
+        rows = None
+        if hdr.get("rows_dtype"):
+            rows = np.frombuffer(body[n_idx * 8:],
+                                 dtype=hdr["rows_dtype"]) \
+                .reshape(hdr["rows_shape"])
+        kind, point = hdr["kind"], hdr.get("point")
+        if kind == "gather":
+            out = self._nmp.gather(region, idx)
+        elif kind == "bag_gather":
+            out = self._nmp.bag_gather(region, idx,
+                                       combine=hdr.get("combine", "sum"))
+        elif kind == "undo_snapshot":
+            out = self._nmp.undo_snapshot(region, idx)
+        elif kind == "row_update":
+            self._nmp.row_update(region, idx, rows, point=point)
+            return {"shape": None}, b""
+        elif kind == "scatter_add":
+            self._nmp.scatter_add(region, idx, rows, point=point)
+            return {"shape": None}, b""
+        else:
+            raise WireError(f"unknown nmp kind {kind!r}")
+        out = np.ascontiguousarray(out)
+        return {"shape": list(out.shape), "dtype": str(out.dtype)}, \
+            out.tobytes()
+
+
+def _entry(region: Region) -> dict:
+    return {"off": region.off, "nbytes": region.nbytes,
+            "dtype": region.dtype, "shape": list(region.shape)}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _parse_fault(spec: str) -> FaultEvent:
+    """kind:point[:occurrence[:phase]] e.g. torn:mirror-apply:3"""
+    parts = spec.split(":")
+    if len(parts) < 2 or parts[0] not in ("crash", "torn", "drop"):
+        raise argparse.ArgumentTypeError(
+            f"bad --fault {spec!r} (want kind:point[:occurrence[:phase]])")
+    occ = int(parts[2]) if len(parts) > 2 else 1
+    phase = parts[3] if len(parts) > 3 else "before"
+    return FaultEvent(parts[0], parts[1], occ, phase)
+
+
+SOAK_POINTS = ("undo-payload", "undo-commit", "mirror-apply",
+               "manifest-advance", "dense-blob", "superblock")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="repro.pool memory-node server")
+    ap.add_argument("--addr", required=True,
+                    help="unix:/path or tcp:host:port (tcp port 0 = ephemeral)")
+    ap.add_argument("--backend", choices=["dram", "pmem"], default="pmem")
+    ap.add_argument("--path", default="",
+                    help="pmem image path (required for --backend pmem)")
+    ap.add_argument("--capacity", type=int, default=1 << 22)
+    ap.add_argument("--default-quota", type=int, default=0,
+                    help="byte quota for tenants that don't request one "
+                         "(0 = unlimited)")
+    ap.add_argument("--no-control-ops", action="store_true",
+                    help="deny node-wide control ops (crash / set-faults / "
+                         "ensure / all-tenant metrics) to tenants")
+    ap.add_argument("--conn-timeout", type=float, default=600.0,
+                    help="per-connection idle timeout in seconds "
+                         "(0 = never drop quiet trainers)")
+    ap.add_argument("--fault", type=_parse_fault, action="append",
+                    default=[], metavar="KIND:POINT[:OCC[:PHASE]]",
+                    help="arm a deterministic fault event (repeatable)")
+    ap.add_argument("--seed-faults", type=int, default=None, metavar="SEED",
+                    help="arm FaultSchedule.seeded(SEED) over the standard "
+                         "persist points (soak drills)")
+    ap.add_argument("--seed-kind", choices=["crash", "torn", "drop"],
+                    default="drop")
+    ap.add_argument("--seed-every", type=int, default=7)
+    args = ap.parse_args(argv)
+
+    faults = None
+    events = tuple(args.fault)
+    if args.seed_faults is not None:
+        faults = FaultSchedule.seeded(args.seed_faults, SOAK_POINTS,
+                                      every=args.seed_every,
+                                      kind=args.seed_kind)
+    if events:
+        extra = FaultSchedule(events=events)
+        faults = faults.chain(extra) if faults else extra
+
+    if args.backend == "pmem":
+        if not args.path:
+            ap.error("--backend pmem needs --path")
+        device = PmemPool(args.path, args.capacity, faults=faults)
+    else:
+        device = DramPool(args.capacity, faults=faults)
+
+    server = PoolServer(device, args.addr,
+                        default_quota=args.default_quota,
+                        control_ops=not args.no_control_ops,
+                        conn_timeout=args.conn_timeout or None)
+    stop = threading.Event()
+
+    def _sig(signum, frame):
+        stop.set()
+        server.shutdown(close_device=True)
+
+    signal.signal(signal.SIGTERM, _sig)
+    signal.signal(signal.SIGINT, _sig)
+    print(f"pool-server listening on {server.addr} "
+          f"(backend={args.backend}, capacity={device.capacity})",
+          flush=True)
+    server.serve_forever()
+    print("pool-server: shut down", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -131,12 +131,15 @@ def train(cfg, train_cfg, batches, num_steps: int, *, relaxed: bool = True,
           jit: bool = True, state=None, start_step: int = 0,
           ckpt_manager=None, on_metrics: Optional[Callable] = None,
           checkpoint_dir: Optional[str] = None,
-          pool_backend: Optional[str] = None):
+          pool_backend: Optional[str] = None,
+          pool_addr: Optional[str] = None,
+          pool_tenant: Optional[str] = None):
     """Host-side loop (examples / tests). Returns (state, losses).
 
     ``checkpoint_dir``/``pool_backend`` build a two-tier CheckpointManager
-    internally (over the dram or pmem emulated pool) when the caller did not
-    pass ``ckpt_manager``; the manager is flushed before returning.
+    internally (over the dram/pmem emulated pool, or a remote memory node
+    at ``pool_addr`` under ``pool_tenant``) when the caller did not pass
+    ``ckpt_manager``; the manager is flushed before returning.
     """
     init_fn, strict_step, relaxed_step, warmup = make_step_fns(cfg, train_cfg)
     if state is None:
@@ -146,9 +149,11 @@ def train(cfg, train_cfg, batches, num_steps: int, *, relaxed: bool = True,
         import dataclasses
 
         from repro.core.checkpoint.manager import CheckpointManager
+        overrides = {"pool_backend": pool_backend, "pool_addr": pool_addr,
+                     "pool_tenant": pool_tenant}
         cc = dataclasses.replace(
             train_cfg.checkpoint, directory=checkpoint_dir,
-            **({"pool_backend": pool_backend} if pool_backend else {}))
+            **{k: v for k, v in overrides.items() if v})
         ckpt_manager = CheckpointManager(cfg, cc, embed_init=state["embed"])
         own_manager = True
     step_strict = jax.jit(strict_step) if jit else strict_step

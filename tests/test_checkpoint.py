@@ -1,6 +1,11 @@
 """Failure-tolerance tests over the emulated memory pool: undo-ring
 semantics, fault-injected crashes (between COMMIT and apply), torn mirror
-writes, resume exactness, relaxed dense/embedding gap, GC, writer deadline."""
+writes, resume exactness, relaxed dense/embedding gap, GC, writer deadline.
+
+Backend-parametrized tests honor REPRO_POOL_BACKENDS (default "dram,pmem");
+CI's pool-backends job adds "remote", which runs the same drills through an
+in-process pool-server (the memory node survives the simulated trainer
+death; POOL.json reconnects recovery to it)."""
 import os
 
 import jax
@@ -12,15 +17,24 @@ from repro.configs.base import CheckpointConfig, TrainConfig
 from repro.core.checkpoint import recovery, store
 from repro.core.checkpoint.manager import CheckpointManager
 from repro.data.synthetic import make_batches
-from repro.pool import FaultSchedule, InjectedCrash, PoolAllocator
+from repro.pool import DramPool, FaultSchedule, InjectedCrash, PoolAllocator
 from repro.training import train_loop
 
-BACKENDS = ["dram", "pmem"]
+BACKENDS = [b.strip() for b in os.environ.get(
+    "REPRO_POOL_BACKENDS", "dram,pmem").split(",") if b.strip()]
+
+_SERVERS = []    # in-process memory nodes; daemon threads, die with pytest
 
 
 def setup_run(tmp, arch="tinyllama-1.1b", dense_interval=1, backend="pmem"):
+    addr = ""
+    if backend == "remote":
+        from repro.pool import PoolServer
+        srv = PoolServer(DramPool(1 << 20), f"unix:{tmp}.sock").start()
+        _SERVERS.append(srv)
+        addr = srv.addr
     cc = CheckpointConfig(directory=tmp, dense_interval=dense_interval,
-                          pool_backend=backend)
+                          pool_backend=backend, pool_addr=addr)
     tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
     b = get_arch(arch, smoke=True)
     data = make_batches(b.model, 4, 16, seed=3)
@@ -86,6 +100,10 @@ def test_crash_between_commit_and_apply(tmp_path, backend):
     if backend == "dram":
         mgr.pool.crash()                   # power loss: cache dropped
         rec = recovery.recover(tmp, pool=mgr.pool)
+    elif backend == "remote":
+        mgr.pool.crash()                   # memory-node power-cycle...
+        mgr.pool.close()                   # ...plus trainer death
+        rec = recovery.recover(tmp)        # reconnect to the living node
     else:
         mgr.pool.close()                   # process death: reopen from disk
         rec = recovery.recover(tmp)

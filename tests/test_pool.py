@@ -1,6 +1,10 @@
 """repro.pool: device persistence/crash semantics, allocator directory
 recovery, near-memory ops + traffic accounting, deterministic fault
-injection, the embedding_ops `pool` strategy, and sim-engine calibration."""
+injection, the embedding_ops `pool` strategy, and sim-engine calibration.
+
+The backend-parametrized tests honor REPRO_POOL_BACKENDS (comma list;
+default "dram,pmem"). CI's pool-backends job adds "remote", running the same
+semantics through an in-process pool-server over a Unix socket."""
 import os
 
 import numpy as np
@@ -9,15 +13,30 @@ import pytest
 from repro.core.checkpoint.undo_log import UndoRing
 from repro.pool import (DramPool, EmbeddingPoolMirror, FaultSchedule,
                         InjectedCrash, JsonRegion, NmpQueue, PmemPool,
-                        PoolAllocator, PoolError, make_pool)
+                        PoolAllocator, PoolError, PoolServer, RemotePool,
+                        make_pool)
 
-BACKENDS = ["dram", "pmem"]
+BACKENDS = [b.strip() for b in os.environ.get(
+    "REPRO_POOL_BACKENDS", "dram,pmem").split(",") if b.strip()]
+
+_SOCK_SEQ = [0]
 
 
 def mkpool(backend, tmp_path, capacity=1 << 18, faults=None):
     if backend == "dram":
         return DramPool(capacity, faults=faults)
-    return PmemPool(str(tmp_path / "pool.img"), capacity, faults=faults)
+    if backend == "pmem":
+        return PmemPool(str(tmp_path / "pool.img"), capacity, faults=faults)
+    if backend == "remote":
+        _SOCK_SEQ[0] += 1
+        srv = PoolServer(DramPool(capacity),
+                         f"unix:{tmp_path}/p{_SOCK_SEQ[0]}.sock").start()
+        dev = RemotePool(srv.addr)
+        dev._test_server = srv     # keep the node alive with the device
+        if faults is not None:
+            dev.faults = faults
+        return dev
+    raise ValueError(f"unknown backend {backend!r}")
 
 
 # -- device ------------------------------------------------------------------

@@ -1,0 +1,337 @@
+"""Remote memory-node backend: wire-protocol correctness and nastiness
+(truncated/oversized frames, server restart mid-op), multi-tenant domains
+(namespaces, quotas, isolation), per-tenant metrics attribution, nmp-over-
+the-wire parity, and checkpoint-manager recovery against a surviving server
+after trainer death."""
+import os
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.pool import (DramPool, FaultSchedule, InjectedCrash, NmpQueue,
+                        PmemPool, PoolAllocator, PoolConnectionError,
+                        PoolError, PoolServer, QuotaExceededError,
+                        RemotePool, TenantIsolationError, WireError,
+                        make_pool)
+from repro.pool.allocator import DATA_START
+from repro.pool.remote import recv_frame, send_frame
+
+
+@pytest.fixture
+def server(tmp_path):
+    srv = PoolServer(DramPool(1 << 18),
+                     f"unix:{tmp_path}/pool.sock").start()
+    yield srv
+    srv.shutdown(close_device=True)
+
+
+def connect(srv, tenant="default", quota=0):
+    return RemotePool(srv.addr, tenant=tenant, quota=quota, timeout=20.0)
+
+
+# -- basic device semantics over the wire ------------------------------------
+
+def test_roundtrip_persist_crash(server, rng):
+    dev = connect(server)
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("x", shape=(16, 4), dtype="float32")
+    v1 = rng.standard_normal((16, 4)).astype(np.float32)
+    r.write_array(v1)
+    r.persist(point="p")
+    r.write_array(v1 * 2)                   # never persisted
+    np.testing.assert_array_equal(r.read_array(), v1 * 2)
+    dev.crash()                             # node power-cycle
+    np.testing.assert_array_equal(r.read_array(), v1)
+    assert dev.metrics.crashes == 1
+    # idempotent reopen via a second connection sees the same region
+    dev2 = connect(server)
+    r2 = PoolAllocator(dev2).domain("d").get("x")
+    assert r2 is not None and r2.off == r.off
+    np.testing.assert_array_equal(r2.read_array(), v1)
+
+
+def test_make_pool_remote(server):
+    dev = make_pool("remote", addr=server.addr, tenant="t")
+    assert dev.backend == "remote" and dev.capacity > 0
+    with pytest.raises(PoolError):
+        make_pool("remote")                 # no addr
+    dev.close()
+    with pytest.raises(PoolError):
+        dev.read(0, 1)                      # closed client device
+
+
+def test_nmp_over_wire_matches_numpy(server, rng):
+    dev = connect(server, tenant="nmp")
+    a = PoolAllocator(dev)
+    tab = rng.standard_normal((32, 8)).astype(np.float32)
+    r = a.domain("emb").alloc("t", shape=tab.shape, dtype="float32")
+    r.write_array(tab)
+    q = NmpQueue(dev)
+    idx = np.array([3, 31, 0, 3])
+    np.testing.assert_array_equal(q.gather(r, idx), tab[idx])
+    bags = rng.integers(0, 32, (5, 4))
+    np.testing.assert_allclose(q.bag_gather(r, bags), tab[bags].sum(1),
+                               rtol=1e-6)
+    old = q.undo_snapshot(r, np.array([1, 2]))
+    np.testing.assert_array_equal(old, tab[[1, 2]])
+    q.row_update(r, np.array([1, 2]), np.ones((2, 8), np.float32),
+                 point="apply")
+    dev.crash()                             # row_update persisted
+    np.testing.assert_array_equal(r.read_array()[[1, 2]],
+                                  np.ones((2, 8), np.float32))
+    before = r.read_array().copy()
+    q.scatter_add(r, np.array([0, 0, 5]), np.ones((3, 8), np.float32))
+    exp = before.copy()
+    np.add.at(exp, [0, 0, 5], np.ones((3, 8), np.float32))
+    np.testing.assert_allclose(r.read_array(), exp, rtol=1e-6)
+    # near-memory accounting happened server-side, attributed to this tenant
+    m = dev.metrics
+    assert m.media_bytes("bag_gather") > 0 and m.ndp_time_s > 0
+    assert m.link_bytes() > 0
+
+
+def test_faults_armed_over_wire(server):
+    dev = connect(server)
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("x", shape=(1024,), dtype="float32")
+    r.write_array(np.zeros(1024, np.float32))
+    r.persist(point="init")
+    dev.faults = FaultSchedule.torn_at("apply", occurrence=1)
+    r.write_array(np.full(1024, 3.0, np.float32))
+    with pytest.raises(InjectedCrash):
+        r.persist(point="apply")
+    dev.faults = None
+    dev.crash()
+    v = r.read_array()
+    assert (v == 3.0).any() and (v == 0.0).any()    # the classic torn write
+    assert dev.metrics.torn_writes == 1
+
+
+# -- multi-tenant domains ----------------------------------------------------
+
+def test_tenant_namespaces_are_disjoint(server, rng):
+    a = connect(server, tenant="a")
+    b = connect(server, tenant="b")
+    ra = PoolAllocator(a).domain("emb").alloc("t", shape=(8,),
+                                              dtype="float32")
+    rb = PoolAllocator(b).domain("emb").alloc("t", shape=(16,),
+                                              dtype="float32")
+    # same domain/name, different tenants -> different regions
+    assert (ra.off, ra.nbytes) != (rb.off, rb.nbytes)
+    va = rng.standard_normal(8).astype(np.float32)
+    vb = rng.standard_normal(16).astype(np.float32)
+    ra.write_array(va)
+    rb.write_array(vb)
+    np.testing.assert_array_equal(ra.read_array(), va)
+    np.testing.assert_array_equal(rb.read_array(), vb)
+    # b's directory view has no sight of a's regions beyond its own
+    assert PoolAllocator(b).domain("emb").get("t").nbytes == rb.nbytes
+
+
+def test_cross_tenant_access_denied(server, rng):
+    a = connect(server, tenant="a")
+    ra = PoolAllocator(a).domain("emb").alloc("t", shape=(64,),
+                                              dtype="float32")
+    ra.write_array(rng.standard_normal(64).astype(np.float32))
+    eve = connect(server, tenant="eve")
+    with pytest.raises(TenantIsolationError):
+        eve.read(ra.off, ra.nbytes)
+    with pytest.raises(TenantIsolationError):
+        eve.write(ra.off, np.zeros(8, np.uint8))
+    with pytest.raises(TenantIsolationError):
+        eve.persist(ra.off, ra.nbytes, point="steal")
+    with pytest.raises(TenantIsolationError):
+        NmpQueue(eve).gather(ra, np.array([0]))
+    with pytest.raises(TenantIsolationError):
+        eve.read(0, 64)                     # the superblock is nobody's
+    # eve's own allocations still work, and freeing her domain frees hers
+    re = PoolAllocator(eve).domain("emb").alloc("t", shape=(4,),
+                                                dtype="float32")
+    assert re.off != ra.off
+    assert PoolAllocator(eve).free_domain("emb")
+    assert PoolAllocator(eve).domain("emb").get("t") is None
+    # a's domain is untouched by eve's free
+    assert PoolAllocator(a).domain("emb").get("t").off == ra.off
+
+
+def test_quota_enforced_and_idempotent(server):
+    dev = connect(server, tenant="q", quota=1 << 12)
+    a = PoolAllocator(dev)
+    r = a.domain("d").alloc("x", shape=(1 << 10,), dtype="uint8")  # 1K of 4K
+    with pytest.raises(QuotaExceededError):
+        a.domain("d").alloc("big", shape=(1 << 13,), dtype="uint8")
+    # idempotent reopen of an existing region never double-counts
+    r2 = a.domain("d").alloc("x", shape=(1 << 10,), dtype="uint8")
+    assert r2.off == r.off
+    a.domain("d").alloc("y", shape=(1 << 10,), dtype="uint8")  # still fits
+
+
+def test_per_tenant_metrics_attribution(server, rng):
+    a = connect(server, tenant="worker-a")
+    b = connect(server, tenant="worker-b")
+    ra = PoolAllocator(a).domain("d").alloc("x", shape=(256,),
+                                            dtype="float32")
+    ra.write_array(rng.standard_normal(256).astype(np.float32))
+    ra.persist(point="p")
+    snaps = a.metrics_snapshot(scope="all")
+    assert snaps["worker-a"]["media_bytes"] > 0
+    assert snaps["worker-b"]["media_bytes"] == 0   # b did nothing
+    assert b.metrics.media_bytes() == 0
+
+
+# -- protocol nastiness ------------------------------------------------------
+
+def _raw_connect(srv):
+    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    s.settimeout(10.0)
+    s.connect(srv.addr[5:])
+    return s
+
+
+def test_oversized_frame_rejected_not_hung(server):
+    s = _raw_connect(server)
+    s.sendall(struct.pack("<I", (1 << 30) + 1))    # absurd length prefix
+    resp = recv_frame(s)
+    assert resp is not None and resp[0]["kind"] == "WireError"
+    s.close()
+    # the server survives and serves new connections
+    assert connect(server).capacity > 0
+
+
+def test_truncated_frame_drops_connection_cleanly(server):
+    s = _raw_connect(server)
+    s.sendall(struct.pack("<I", 64) + b"\x00\x01")  # promise 64, send 2
+    s.close()                                       # EOF mid-frame
+    assert connect(server).capacity > 0             # server unharmed
+
+
+def test_garbage_header_is_typed_error(server):
+    s = _raw_connect(server)
+    body = b"\xde\xad\xbe\xef"
+    s.sendall(struct.pack("<I", 4 + len(body)) + struct.pack("<I", 4) + body)
+    resp = recv_frame(s)
+    assert resp is not None and resp[0]["kind"] == "WireError"
+    s.close()
+
+
+def test_op_before_hello_denied(server):
+    s = _raw_connect(server)
+    send_frame(s, {"op": "read", "off": 0, "nbytes": 8, "tag": "r"})
+    hdr, _ = recv_frame(s)
+    assert hdr["ok"] is False and hdr["kind"] == "TenantIsolationError"
+    s.close()
+
+
+def test_connection_refused_is_typed(tmp_path):
+    with pytest.raises(PoolConnectionError):
+        RemotePool(f"unix:{tmp_path}/nobody.sock", timeout=5.0)
+
+
+def test_server_restart_mid_op(tmp_path, rng):
+    """A dying server surfaces as PoolConnectionError, never a hang; a
+    pmem-backed server that restarts serves the durable state back."""
+    img = str(tmp_path / "pool.img")
+    srv = PoolServer(PmemPool(img, 1 << 18),
+                     f"unix:{tmp_path}/pool.sock").start()
+    dev = connect(srv, tenant="t")
+    r = PoolAllocator(dev).domain("d").alloc("x", shape=(32,),
+                                             dtype="float32")
+    v = rng.standard_normal(32).astype(np.float32)
+    r.write_array(v)
+    r.persist(point="p")
+    srv.shutdown(close_device=True)         # node dies mid-session
+    with pytest.raises(PoolConnectionError):
+        r.read_array()
+    # node restarts over the same durable image
+    srv2 = PoolServer(PmemPool.open(img),
+                      f"unix:{tmp_path}/pool.sock").start()
+    try:
+        dev2 = connect(srv2, tenant="t")
+        r2 = PoolAllocator(dev2).domain("d").get("x")
+        assert r2 is not None
+        np.testing.assert_array_equal(r2.read_array(), v)
+    finally:
+        srv2.shutdown(close_device=True)
+
+
+def test_concurrent_tenants_hammer(server, rng):
+    """Several client threads over one node: no cross-talk, no deadlock."""
+    errs = []
+
+    def work(name):
+        try:
+            dev = connect(server, tenant=name)
+            r = PoolAllocator(dev).domain("d").alloc(
+                "x", shape=(128,), dtype="float32")
+            for i in range(20):
+                v = np.full(128, float(i), np.float32)
+                r.write_array(v)
+                r.persist(point="p")
+                np.testing.assert_array_equal(r.read_array(), v)
+            dev.close()
+        except Exception as e:              # surfaced in the main thread
+            errs.append((name, e))
+
+    threads = [threading.Thread(target=work, args=(f"t{i}",))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errs, errs
+
+
+# -- checkpoint stack against a surviving node --------------------------------
+
+def test_manager_recovery_survives_trainer_death(tmp_path):
+    """The acceptance drill, in-process: a trainer checkpoints into a live
+    pool-server, dies without any cleanup, and a fresh process-equivalent
+    (new connection) recovers bit-identically and resumes exactly."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.configs.base import CheckpointConfig, TrainConfig
+    from repro.core.checkpoint import recovery
+    from repro.core.checkpoint.manager import CheckpointManager
+    from repro.data.synthetic import make_batches
+    from repro.training import train_loop
+
+    srv = PoolServer(PmemPool(str(tmp_path / "pool.img"), 1 << 22),
+                     f"unix:{tmp_path}/pool.sock").start()
+    try:
+        ck = str(tmp_path / "ck")
+        cc = CheckpointConfig(directory=ck, dense_interval=1,
+                              pool_backend="remote", pool_addr=srv.addr,
+                              pool_tenant="trainer")
+        b = get_arch("tinyllama-1.1b", smoke=True)
+        tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
+        data = make_batches(b.model, 4, 16, seed=3)
+        init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+        _, full = train_loop.train(b.model, tc, data, 8, relaxed=True)
+
+        st0 = init_fn(jax.random.PRNGKey(tc.seed))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+        train_loop.train(b.model, tc, data, 5, relaxed=True, state=st0,
+                         ckpt_manager=mgr)
+        mgr.flush()
+        mirror_before = np.array(mgr.mirror_rows)
+        # trainer death: the socket just vanishes, no flush/close handshake
+        mgr.pool._sock.close()
+        mgr.pool.closed = True
+
+        rec = recovery.recover(ck)          # reconnects via POOL.json
+        assert rec.mirror_step == 4 and rec.dense_step == 4
+        np.testing.assert_array_equal(rec.embed_rows, mirror_before)
+        fresh = init_fn(jax.random.PRNGKey(tc.seed))
+        st, resume = recovery.resume_train_state(rec, fresh)
+        assert resume == 5
+        _, tail = train_loop.train(b.model, tc, data, 3, relaxed=True,
+                                   state=st, start_step=resume)
+        np.testing.assert_allclose(np.asarray(tail), np.asarray(full[5:]),
+                                   rtol=1e-6, atol=1e-6)
+        rec.pool.close()
+    finally:
+        srv.shutdown(close_device=True)
