@@ -2,9 +2,18 @@
 ~76% vs PMEM on average; DRAM loses on embedding-intensive RMs.
 
 Besides the analytic table, ``measured_rows()`` replays one emulated training
-batch (bag-gather -> undo snapshot -> row update -> persist) against the
-``repro.pool`` dram and pmem backends and reports the traffic/energy the
-pool *counters* observed — the measured counterpart of the model above.
+batch against the ``repro.pool`` dram and pmem backends in BOTH undo-capture
+modes and reports the traffic/energy the pool *counters* observed:
+
+  * ``wire`` — the pre-fix tier-E path: the undo image round-trips to the
+    host (``nmp.undo_snapshot`` out, host-driven log write back in),
+    uncompressed;
+  * ``pool`` — the paper's active design: one fused ``undo_log_append``
+    captures, compresses (zlib) and commits the image inside the memory
+    node; only (idx, new_rows) cross the link.
+
+The ``link_savings_x`` / ``energy_savings_pct`` rows are the measured
+before/after deltas quoted in EXPERIMENTS.md §Pool.
 """
 from __future__ import annotations
 
@@ -16,41 +25,86 @@ from repro.sim.energy import energy_table
 from repro.sim.models_rm import RMS
 
 
+def _mk_table(rng, shape):
+    """Embedding-like (not max-entropy) values: quantised mantissas, the
+    compressible structure trained tables actually have."""
+    return (rng.integers(-512, 512, shape) / 256.0).astype(np.float32)
+
+
 def measured_rows(dim: int = 32, n_tables: int = 20, rows_per: int = 2048,
                   batch: int = 256, n_sparse: int = 8):
-    """One RM1-shaped batch against each pool backend; counter-based rows."""
+    """One RM1-shaped batch per backend x capture mode; counter-based rows."""
     import shutil
     import tempfile
 
-    from repro.pool import DramPool, EmbeddingPoolMirror, PmemPool
+    from repro.core.checkpoint.undo_log import UndoRing
+    from repro.pool import (DramPool, EmbeddingPoolMirror, PmemPool,
+                            PoolAllocator)
     out = []
     tmpdir = tempfile.mkdtemp(prefix="fig13_pool_")
     for backend in ("dram", "pmem"):
-        if backend == "dram":
-            dev = DramPool(capacity=n_tables * rows_per * dim * 8)
-        else:
-            dev = PmemPool(os.path.join(tmpdir, "measure.pool"),
-                           capacity=n_tables * rows_per * dim * 8)
-        rng = np.random.default_rng(0)
-        table = rng.standard_normal((n_tables, rows_per, dim),
-                                    dtype=np.float32)
-        mir = EmbeddingPoolMirror(dev, table)
-        dev.metrics.reset()      # count the batch, not the one-time load
-        ids = rng.integers(0, rows_per, (batch, n_tables, n_sparse))
-        reduced = mir.bag_lookup(ids)                     # near-memory reduce
-        flat_idx = np.unique(ids + np.arange(n_tables)[None, :, None]
-                             * rows_per)
-        old = mir.nmp.undo_snapshot(mir.region, flat_idx)  # undo capture
-        mir.apply_grad(flat_idx, old * 0.01, lr=0.1)       # pool-side update
-        assert reduced.shape == (batch, n_tables, dim)
-        e = dev.metrics.energy()
-        out.append((f"fig13.measured.{backend}_pool_energy_j",
-                    e["total"], "repro.pool counters, one RM1-ish batch"))
-        out.append((f"fig13.measured.{backend}_link_media_ratio",
-                    dev.metrics.link_bytes() / max(1, dev.metrics
-                                                   .media_bytes()),
-                    "near-memory ops keep raw rows off the link"))
-        dev.close()
+        cells = {}
+        for mode in ("wire", "pool"):
+            if backend == "dram":
+                dev = DramPool(capacity=n_tables * rows_per * dim * 8)
+            else:
+                dev = PmemPool(os.path.join(tmpdir, f"measure-{mode}.pool"),
+                               capacity=n_tables * rows_per * dim * 8)
+            rng = np.random.default_rng(0)
+            table = _mk_table(rng, (n_tables, rows_per, dim))
+            mir = EmbeddingPoolMirror(dev, table)
+            ring = UndoRing(PoolAllocator(dev), max_logs=4,
+                            compress="none" if mode == "wire" else "zlib")
+            ids = rng.integers(0, rows_per, (batch, n_tables, n_sparse))
+            flat_idx = np.unique(ids + np.arange(n_tables)[None, :, None]
+                                 * rows_per)
+            flat = table.reshape(-1, dim)
+            new_rows = (flat[flat_idx] * 0.999).astype(np.float32)
+            # warmup sizes the ring so growth stays out of the window
+            ring.append(0, flat_idx, flat[flat_idx])
+            dev.metrics.reset()      # count the batch, not the warmup/load
+
+            reduced = mir.bag_lookup(ids)                 # near-memory reduce
+            if mode == "wire":
+                # before: image out over the link, logged from the host.
+                # device.write only meters media, so charge the write-back
+                # leg (idx + old rows crossing back in) explicitly — the
+                # round-trip the fused op exists to kill
+                old = mir.nmp.undo_snapshot(mir.region, flat_idx)
+                ring.append(1, flat_idx, old)
+                dev.metrics.record_link("link_in",
+                                        flat_idx.nbytes + old.nbytes)
+                mir.nmp.row_update(mir.region, flat_idx, new_rows,
+                                   point="mirror-apply")
+            else:
+                # after: fused server-side capture + pool-side compression
+                ring.log_and_apply(1, mir.region, flat_idx, new_rows)
+            assert reduced.shape == (batch, n_tables, dim)
+            m = dev.metrics
+            cells[mode] = {"energy": m.energy()["total"],
+                           "link": m.link_bytes(), "media": m.media_bytes(),
+                           "comp": m.comp_ratio()}
+            pre = f"fig13.measured.{backend}.{mode}"
+            out.append((f"{pre}.energy_j", cells[mode]["energy"],
+                        "repro.pool counters, one RM1-ish batch"))
+            out.append((f"{pre}.link_bytes", cells[mode]["link"],
+                        "host-link traffic"))
+            out.append((f"{pre}.media_bytes", cells[mode]["media"],
+                        "in-pool traffic"))
+            out.append((f"{pre}.link_media_ratio",
+                        cells[mode]["link"] / max(1, cells[mode]["media"]),
+                        "near-memory ops keep raw rows off the link"))
+            dev.close()
+        out.append((f"fig13.measured.{backend}.pool.undo_comp_ratio",
+                    cells["pool"]["comp"],
+                    "stored/raw, pool-side zlib on undo payloads"))
+        out.append((f"fig13.measured.{backend}.link_savings_x",
+                    cells["wire"]["link"] / max(1, cells["pool"]["link"]),
+                    "tier-E wire round-trip eliminated"))
+        out.append((f"fig13.measured.{backend}.energy_savings_pct",
+                    100 * (1 - cells["pool"]["energy"]
+                           / max(cells["wire"]["energy"], 1e-12)),
+                    "server-side capture + compression, same batch"))
     shutil.rmtree(tmpdir, ignore_errors=True)
     return out
 

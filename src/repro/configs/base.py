@@ -220,6 +220,8 @@ class CheckpointConfig:
     pool_addr: str = ""            # remote backend: unix:/path or tcp:host:port
     pool_tenant: str = "default"   # remote backend: tenant namespace on the node
     pool_quota: int = 0            # remote backend: byte quota (0 = unlimited)
+    pool_compress: str = "zlib"    # pool-side compression: none | zlib | int8
+                                   # (int8 is lossy — relaxed rollback only)
 
 
 @dataclass(frozen=True)

@@ -10,15 +10,17 @@ All persistent state lives in named pool domains of one ``PoolDevice``:
 
 Tier-E (embedding pool, every step — paper: "the embedding log should be
 permanently stored for every batch"):
-    1. the *batch-aware* property: touched indices are known from the sparse
-       features before compute finishes; the undo image is captured pool-side
-       (``nmp.undo_snapshot`` — no link traffic);
-    2. write undo entry + COMMIT flag (two persist barriers);
-    3. apply new row values to the mirror region (idempotent near-memory
-       row_update + persist);
+    1-3. ONE fused near-memory op (``nmp.undo_log_append`` via
+       ``UndoRing.log_and_apply``): the memory node snapshots the touched
+       mirror rows straight into the log slot, compresses them pool-side,
+       persists payload + COMMIT flag with the two paper barriers, then
+       applies the new row values (idempotent row update + persist). Only
+       (step, idx, new_rows) cross the link; the undo image never does —
+       the paper's "active" checkpointing logic living next to the CXL
+       controller.
     4. advance the manifest (A/B slot write).
-Each stage boundary is a named fault-injection point, so tests can crash
-exactly between COMMIT and apply.
+The commit/apply boundary stays a named fault point (hit *inside* the node),
+so tests still crash exactly between COMMIT and apply on every backend.
 
 Tier-M (dense params, every K steps — the *relaxed batch-aware checkpoint*):
     the pytree is serialized to a CRC'd blob and written to the dense slot
@@ -42,6 +44,7 @@ import numpy as np
 
 from repro.core.checkpoint import store
 from repro.core.checkpoint.undo_log import UndoRing
+from repro.pool import compress as pool_compress
 from repro.pool.allocator import JsonRegion, PoolAllocator
 from repro.pool.device import PoolDevice, make_pool
 from repro.pool.faults import FaultSchedule, InjectedCrash
@@ -87,7 +90,9 @@ class CheckpointManager:
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
         self.stats = {"tier_e": 0, "tier_m": 0, "tier_m_skipped": 0,
-                      "bytes_e": 0, "bytes_m": 0}
+                      "bytes_e": 0, "bytes_m": 0,
+                      "undo_raw_bytes": 0, "undo_stored_bytes": 0,
+                      "dense_stored_bytes": 0}
         if embed_init is not None:
             self.init_mirror(embed_init)
 
@@ -112,7 +117,9 @@ class CheckpointManager:
         self._alloc = PoolAllocator(self.pool)
         self.manifest = JsonRegion.create(self._alloc.domain("manifest"),
                                           "manifest")
-        self.ring = UndoRing(self._alloc, self.ccfg.max_undo_logs)
+        self.compress = getattr(self.ccfg, "pool_compress", "zlib")
+        self.ring = UndoRing(self._alloc, self.ccfg.max_undo_logs,
+                             compress=self.compress)
         self.nmp = NmpQueue(self.pool)
         self.dense_dom = self._alloc.domain("dense")
 
@@ -204,14 +211,12 @@ class CheckpointManager:
                 self._q.task_done()
 
     def _do_tier_e(self, step: int, idx: np.ndarray, new_rows: np.ndarray):
-        # 1: undo image captured pool-side (batch-aware, no link bytes)
-        old_rows = self.nmp.undo_snapshot(self.mirror_region, idx)
-        # 2: log entry + COMMIT flag (undo-payload / undo-commit barriers)
-        self.ring.append(step, idx, old_rows)
-        self._hit("tier_e.between-commit-and-apply")
-        # 3: in-place idempotent apply (near-memory row update + persist)
-        self.nmp.row_update(self.mirror_region, idx, new_rows,
-                            point="mirror-apply")
+        # 1-3: fused near-memory op — capture + compressed log + COMMIT +
+        # apply, all inside the pool; only (step, idx, new_rows) crossed the
+        # link to get here. The commit/apply crash window lives inside the
+        # op (fault point "tier_e.between-commit-and-apply").
+        info = self.ring.log_and_apply(step, self.mirror_region, idx,
+                                       new_rows)
         self._hit("tier_e.between-apply-and-manifest")
         # 4: persistent step flag
         man = self.manifest.read()
@@ -220,6 +225,8 @@ class CheckpointManager:
         self.ring.gc(step - self.ccfg.max_undo_logs)
         self.stats["tier_e"] += 1
         self.stats["bytes_e"] += idx.nbytes + new_rows.nbytes
+        self.stats["undo_raw_bytes"] += info.get("raw", 0)
+        self.stats["undo_stored_bytes"] += info.get("stored", 0)
 
     def _do_tier_m(self, step: int, dense_np: dict, t_enq: float):
         if (self.ccfg.writer_deadline_s
@@ -229,17 +236,26 @@ class CheckpointManager:
         blob = store.serialize_tree(dense_np, {"step": step})
         man = self.manifest.read()
         slot = 1 - man.get("dense_slot", 1)        # write the spare slot
-        cap = max(len(blob), 1 << 12)
+        # the pool stores a framed (possibly compressed) image; size the
+        # region for the frame's worst case (mode falls back to raw)
+        need = pool_compress.framed_len(len(blob))
+        cap = max(need, 1 << 12)
         region = self.dense_dom.get(f"slot{slot}")
-        if region is None or region.nbytes < len(blob):
+        if region is None or region.nbytes < need:
+            if region is not None:
+                # same-name realloc would leak the old entry (and its quota
+                # share) in the directory: free explicitly, then alloc
+                self.dense_dom.free_region(f"slot{slot}")
             region = self.dense_dom.alloc(
                 f"slot{slot}", shape=(int(cap * 1.5),), dtype="uint8")
-        self.pool.write(region.off, blob, tag="dense")
-        self.pool.persist(region.off, len(blob), point="dense-blob")
-        man.update(dense_step=step, dense_slot=slot, dense_len=len(blob))
+        # compressed at the pool, persisted over exactly the written range
+        stored = self.nmp.blob_put(region, blob, compress=self.compress,
+                                   point="dense-blob")
+        man.update(dense_step=step, dense_slot=slot, dense_len=stored)
         self.manifest.write(man, point="manifest-dense")
         self.stats["tier_m"] += 1
         self.stats["bytes_m"] += len(blob)
+        self.stats["dense_stored_bytes"] += stored
 
 
 def jnp_take(flat_tab, idx: np.ndarray):

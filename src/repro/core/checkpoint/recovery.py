@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.checkpoint import store
 from repro.core.checkpoint.undo_log import UndoRing
+from repro.pool import compress as pool_compress
 from repro.pool.allocator import JsonRegion, PoolAllocator
 from repro.pool.device import PmemPool, PoolDevice, PoolError
 from repro.pool.nmp import NmpQueue
@@ -98,8 +99,13 @@ def recover(root: str, pool: Optional[PoolDevice] = None) -> RecoveredState:
             if region is None:
                 raise store.CorruptError("dense slot region missing")
             blob = bytes(dev.read(region.off, man["dense_len"], tag="dense"))
-            dense, _ = store.deserialize_tree(blob)
-        except store.CorruptError:
+            # the pool stores a framed, pool-compressed image; the frame's
+            # CRC (over the stored bytes) rejects torn/corrupt blobs before
+            # decompression; unframed legacy blobs pass through verbatim.
+            # Only *corruption* downgrades to dense=None — transport or
+            # isolation failures (plain PoolError) must surface.
+            dense, _ = store.deserialize_tree(pool_compress.unframe(blob))
+        except (store.CorruptError, pool_compress.BlobCorruptError):
             dense, dense_step = None, -1
 
     return RecoveredState(

@@ -5,43 +5,57 @@ The ring lives in the ``undo-log`` persistence domain of a ``PoolDevice``:
     meta (JsonRegion)   {gen, nslots, slot_bytes}
     ring<gen> (Region)  nslots fixed-size slots
 
-Slot layout for step N (slot = N mod nslots):
+Slot layout (``repro.pool.undo_codec``) for step N (slot = N mod nslots):
 
-    header  step i64 | n i64 | d i64 | has_acc i64 | payload-crc u32 | commit u32
+    header  step i64 | n i64 | d i64 | flags i64 | stored_len i64
+            | payload-crc u32 | commit u32
     payload idx int64[n] | old_rows f32[n,d] | (old_acc f32[n,d])
+            — possibly compressed pool-side (flags carry the codec)
 
 The writer persists the payload first (``undo-payload`` barrier), then sets
 the COMMIT word and persists it separately (``undo-commit`` — the paper's
-persistent flag, step 2). Recovery trusts a slot only if the step matches,
-COMMIT is set, and the payload CRC verifies — a torn payload or a dropped
-commit flush both invalidate the entry, falling back to the previous
-consistent state. GC clears COMMIT words once both tiers are durable
-(paper step 4); the ring naturally overwrites the oldest entry.
+persistent flag, step 2). The CRC is computed over the *stored* (compressed)
+bytes, so a torn payload or a dropped commit flush both invalidate the
+entry. GC clears COMMIT words once both tiers are durable (paper step 4).
+
+The hot path is ``log_and_apply``: ONE near-memory op (``undo_log_append``)
+captures the pre-update image, logs + commits it, and applies the new rows —
+all inside the memory node. Only (step, idx, new_rows) cross the link; the
+old row images never leave the pool. ``append`` remains the host-driven
+write path (carry-over, direct tests, the before/after benchmark).
+
+Ring growth is crash-safe by ordering: the new ring is allocated and every
+still-committed entry is carried over FIRST; the meta flip — the only
+durable commit point of the grow — happens LAST, and the old ring's COMMIT
+words are never touched. A crash anywhere mid-grow recovers the old ring
+with every committed entry intact.
 """
 from __future__ import annotations
 
-import struct
 import zlib
 from typing import Optional
 
 import numpy as np
 
+from repro.pool import undo_codec as uc
 from repro.pool.allocator import Domain, JsonRegion, PoolAllocator, Region
-from repro.pool.device import PoolDevice, PoolError
+from repro.pool.device import PoolDevice
+from repro.pool.nmp import NmpQueue
 
-_HDR = struct.Struct("<qqqqII")     # step, n, d, has_acc, crc, commit
-_COMMIT_OFF = _HDR.size - 4
 _ALIGN = 64
 
 DOMAIN = "undo-log"
 
 
 class UndoRing:
-    def __init__(self, alloc: PoolAllocator, max_logs: int):
+    def __init__(self, alloc: PoolAllocator, max_logs: int,
+                 compress: str = "zlib"):
         self.alloc = alloc
         self.device: PoolDevice = alloc.device
         self.domain: Domain = alloc.domain(DOMAIN)
         self.nslots = max(2, int(max_logs) + 1)
+        self.compress = compress
+        self.nmp = NmpQueue(self.device)
         self.meta = JsonRegion.create(self.domain, "meta", nbytes=4 << 10)
         m = self.meta.read()
         self.ring: Optional[Region] = None
@@ -55,115 +69,164 @@ class UndoRing:
             self.gen = -1
 
     # -- layout --------------------------------------------------------------
-    def _make_ring(self, need: int):
-        self.gen += 1
-        self.slot_bytes = -(-int(need * 1.5) // _ALIGN) * _ALIGN
-        self.ring = self.domain.alloc(
-            f"ring{self.gen}", shape=(self.nslots * self.slot_bytes,),
-            dtype="uint8")
+    def _alloc_ring(self, gen: int, need: int) -> tuple[Region, int]:
+        """Allocate ring<gen> sized for `need`-byte entries. Does NOT touch
+        meta — the caller decides when the flip commits. A ring<gen> left
+        behind by a grow that crashed before its meta flip is scrubbed
+        (COMMIT words cleared + persisted) before reuse, so its stale —
+        possibly already-GC'd — entries can never resurrect."""
+        slot_bytes = -(-int(need * 1.5) // _ALIGN) * _ALIGN
+        name = f"ring{gen}"
+        stale = self.domain.get(name) is not None
+        ring = self.domain.alloc(
+            name, shape=(self.nslots * slot_bytes,),
+            dtype="uint8", point="undo-grow-alloc" if gen else "superblock")
+        if stale:
+            for i in range(self.nslots):
+                self.device.write(ring.off + i * slot_bytes + uc.COMMIT_OFF,
+                                  uc.COMMIT_CLEAR, tag="undo")
+            # one wide-clipped barrier: persist flushes (and meters) only
+            # the dirty ranges inside the window — the nslots 4-byte COMMIT
+            # words just written, not the whole ring
+            self.device.persist(ring.off, self.nslots * slot_bytes,
+                                point="undo-grow-scrub")
+        return ring, slot_bytes
+
+    def _flip_meta(self):
+        """The durable commit point for ring creation/growth."""
         self.meta.write({"gen": self.gen, "nslots": self.nslots,
                          "slot_bytes": self.slot_bytes}, point="undo-meta")
+
+    def _make_ring(self, need: int):
+        """First ring (nothing to carry over): alloc, then flip."""
+        self.gen += 1
+        self.ring, self.slot_bytes = self._alloc_ring(self.gen, need)
+        self._flip_meta()
 
     def _slot_off(self, step: int) -> int:
         return self.ring.off + (step % self.nslots) * self.slot_bytes
 
-    @staticmethod
-    def _payload(idx: np.ndarray, old_rows: np.ndarray,
-                 old_acc: Optional[np.ndarray]) -> bytes:
-        parts = [np.ascontiguousarray(idx, np.int64).tobytes(),
-                 np.ascontiguousarray(old_rows, np.float32).tobytes()]
-        if old_acc is not None:
-            parts.append(np.ascontiguousarray(old_acc, np.float32).tobytes())
-        return b"".join(parts)
+    def _ensure_capacity(self, raw_need: int):
+        if self.ring is None:
+            self._make_ring(raw_need)
+        elif raw_need > self.slot_bytes:
+            self._grow(raw_need)
 
     # -- write path ----------------------------------------------------------
+    def _write_slot(self, step: int, idx: np.ndarray, old_rows: np.ndarray,
+                    old_acc: Optional[np.ndarray]):
+        """Host-driven slot write — the same two-barrier commit protocol
+        (``uc.write_slot``) the near-memory executor uses, so the host and
+        fused paths stay bit-identical. Persists exactly the bytes written,
+        not the whole slot."""
+        buf, _, _ = uc.pack_slot(step, idx, old_rows, old_acc,
+                                 mode=self.compress,
+                                 slot_bytes=self.slot_bytes)
+        uc.write_slot(self.device, self._slot_off(step), buf)
+
     def append(self, step: int, idx: np.ndarray, old_rows: np.ndarray,
                old_acc: Optional[np.ndarray] = None):
         idx = np.asarray(idx).reshape(-1)
         old_rows = np.asarray(old_rows, np.float32).reshape(idx.size, -1)
-        payload = self._payload(idx, old_rows, old_acc)
-        need = _HDR.size + len(payload)
-        if self.ring is None:
-            self._make_ring(need)
-        elif need > self.slot_bytes:
-            self._grow(need)
+        self._ensure_capacity(uc.slot_nbytes(idx.size, old_rows.shape[-1],
+                                             old_acc is not None))
+        self._write_slot(step, idx, old_rows, old_acc)
+
+    def log_and_apply(self, step: int, mirror: Region, idx: np.ndarray,
+                      new_rows: np.ndarray) -> dict:
+        """Fused tier-E hot path: capture + log + COMMIT (+ apply) in one
+        near-memory op executed inside the pool. Returns the op's
+        {"stored", "raw"} payload byte counts."""
+        idx = np.asarray(idx).reshape(-1)
+        new_rows = np.asarray(new_rows, np.float32).reshape(idx.size, -1)
+        self._ensure_capacity(uc.slot_nbytes(idx.size, new_rows.shape[-1],
+                                             False))
+        return self.nmp.undo_log_append(
+            mirror, self.ring, step=step, slot_off=self._slot_off(step),
+            slot_bytes=self.slot_bytes, idx=idx, new_rows=new_rows,
+            compress=self.compress)
+
+    def _read_slot_verbatim(self, step: int) -> Optional[bytes]:
+        """CRC-checked copy of a committed slot's stored bytes, with the
+        COMMIT word cleared — ready for ``uc.write_slot`` into another
+        ring. No decode/re-encode, so lossy (int8) payloads carry over
+        bit-identically instead of compounding quantisation error."""
+        hdr = self._read_header(step % self.nslots) if self.ring else None
+        if hdr is None or hdr[0] != step:
+            return None
+        _, n, d, flags, stored_len, crc = hdr
         off = self._slot_off(step)
-        hdr = _HDR.pack(step, idx.size, old_rows.shape[-1],
-                        int(old_acc is not None), zlib.crc32(payload), 0)
-        self.device.write(off, hdr + payload, tag="undo")
-        self.device.persist(off, self.slot_bytes, point="undo-payload")
-        # paper step 2: the persistent flag, its own barrier
-        self.device.write(off + _COMMIT_OFF,
-                          struct.pack("<I", 1), tag="undo")
-        self.device.persist(off + _COMMIT_OFF, 4, point="undo-commit")
+        stored = bytes(self.device.view(off + uc.HDR.size, stored_len))
+        if zlib.crc32(stored) != crc:
+            return None
+        return uc.HDR.pack(step, n, d, flags, stored_len, crc, 0) + stored
 
     def _grow(self, need: int):
-        """Entry outgrew the slot: allocate a bigger ring and carry over the
-        still-committed entries (old ring space is leaked — emulator).
-        Entries whose payload CRC fails (torn before the crash) are dropped,
-        same as recovery does."""
-        entries = [(s, e) for s in self.committed_steps()
-                   if (e := self.read(s)) is not None]
-        self._make_ring(need)
-        for step, (idx, rows, acc) in entries:
-            self.append(step, idx, rows, acc)
+        """Entry outgrew the slot: allocate a bigger ring, carry the
+        still-committed entries over verbatim, and only then flip meta (old
+        ring space is leaked — emulator). Entries whose payload CRC fails
+        (torn before the crash) are dropped, same as recovery does.
+        Ordering is the crash-safety argument: until the meta flip
+        persists, recovery still reads the old ring — whose COMMIT words
+        were never cleared — so a crash anywhere mid-grow loses nothing."""
+        entries = [(s, buf) for s in self.committed_steps()
+                   if (buf := self._read_slot_verbatim(s)) is not None]
+        new_gen = self.gen + 1
+        new_ring, new_slot_bytes = self._alloc_ring(new_gen, need)
+        self.ring, self.gen, self.slot_bytes = (new_ring, new_gen,
+                                                new_slot_bytes)
+        for step, buf in entries:
+            uc.write_slot(self.device, self._slot_off(step), buf)
+        self._flip_meta()
 
     # -- read path -----------------------------------------------------------
     def _read_header(self, step_slot: int):
-        """Cheap header-only probe (no payload copy / CRC) — used by the
-        per-step GC and the committed scan; ``read`` verifies the CRC."""
+        """Single-slot header probe (no payload copy / CRC) — the read path;
+        bulk scans go through ``_scan_headers``."""
         if self.ring is None:
             return None
         off = self.ring.off + step_slot * self.slot_bytes
-        raw = bytes(self.device.view(off, _HDR.size))
-        step, n, d, has_acc, crc, commit = _HDR.unpack(raw)
-        if commit != 1 or n < 0 or d <= 0:
-            return None
-        end = _HDR.size + n * 8 + n * d * 4 * (2 if has_acc else 1)
-        if end > self.slot_bytes:
-            return None
-        return step, n, d, has_acc, crc, end
+        raw = bytes(self.device.view(off, uc.HDR.size))
+        return uc.parse_header(raw, self.slot_bytes)
+
+    def _scan_headers(self) -> list:
+        """All committed slot headers in ONE strided near-memory read —
+        O(1) link round-trips instead of one per slot. Returns
+        [(slot, (step, n, d, flags, stored_len, crc)), ...]."""
+        if self.ring is None:
+            return []
+        hdrs = self.nmp.slot_headers(self.ring, self.nslots,
+                                     self.slot_bytes, uc.HDR.size)
+        out = []
+        for i in range(self.nslots):
+            got = uc.parse_header(bytes(hdrs[i]), self.slot_bytes)
+            if got is not None:
+                out.append((i, got))
+        return out
 
     def read(self, step: int):
         hdr = self._read_header(step % self.nslots) if self.ring else None
         if hdr is None or hdr[0] != step:
             return None
-        _, n, d, has_acc, crc, end = hdr
-        off = self.ring.off + (step % self.nslots) * self.slot_bytes
-        payload = bytes(self.device.view(off + _HDR.size, end - _HDR.size))
-        if zlib.crc32(payload) != crc:
+        _, n, d, flags, stored_len, crc = hdr
+        off = self._slot_off(step)
+        stored = bytes(self.device.view(off + uc.HDR.size, stored_len))
+        if zlib.crc32(stored) != crc:
             return None
-        idx = np.frombuffer(payload, np.int64, n)
-        rows = np.frombuffer(payload, np.float32, n * d,
-                             offset=n * 8).reshape(n, d)
-        acc = None
-        if has_acc:
-            acc = np.frombuffer(payload, np.float32, n * d,
-                                offset=n * 8 + n * d * 4).reshape(n, d)
-        return idx, rows, acc
+        return uc.decode_payload(stored, n, d, flags)
 
     def committed_steps(self) -> list[int]:
-        if self.ring is None:
-            return []
-        out = []
-        for i in range(self.nslots):
-            hdr = self._read_header(i)
-            if hdr is not None:
-                out.append(hdr[0])
-        return sorted(out)
+        return sorted(hdr[0] for _, hdr in self._scan_headers())
 
     def gc(self, keep_from: int):
         """Invalidate committed entries older than keep_from (both tiers
         durable — paper step 4)."""
-        if self.ring is None:
-            return
-        for i in range(self.nslots):
-            hdr = self._read_header(i)
-            if hdr is not None and hdr[0] < keep_from:
-                off = self.ring.off + i * self.slot_bytes
-                self.device.write(off + _COMMIT_OFF,
-                                  struct.pack("<I", 0), tag="undo")
-                self.device.persist(off + _COMMIT_OFF, 4, point="undo-gc")
+        for slot, hdr in self._scan_headers():
+            if hdr[0] < keep_from:
+                off = self.ring.off + slot * self.slot_bytes
+                self.device.write(off + uc.COMMIT_OFF, uc.COMMIT_CLEAR,
+                                  tag="undo")
+                self.device.persist(off + uc.COMMIT_OFF, 4, point="undo-gc")
 
 
 def open_ring(device: PoolDevice, max_logs: int = 64) -> UndoRing:

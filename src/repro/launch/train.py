@@ -43,6 +43,10 @@ def main():
                     help="remote backend: tenant namespace on the pool node")
     ap.add_argument("--pool-quota", type=int, default=0,
                     help="remote backend: byte quota (0 = unlimited)")
+    ap.add_argument("--pool-compress", choices=["none", "zlib", "int8"],
+                    default="zlib",
+                    help="pool-side compression for undo payloads and dense "
+                         "snapshot blobs (int8 is lossy: relaxed rollback)")
     ap.add_argument("--dense-interval", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -64,7 +68,8 @@ def main():
                             pool_backend=args.pool_backend,
                             pool_addr=args.pool_addr,
                             pool_tenant=args.pool_tenant,
-                            pool_quota=args.pool_quota)
+                            pool_quota=args.pool_quota,
+                            pool_compress=args.pool_compress)
     tc = TrainConfig(learning_rate=args.lr, embed_learning_rate=args.embed_lr,
                      checkpoint=ckpt)
     raw = make_batches(cfg, args.batch, args.seq, seed=0)

@@ -5,8 +5,11 @@ Layering (bottom up):
                persist barriers, crash semantics, and Table-2 accounting
   allocator.py named persistence domains, crash-atomic directory, JsonRegion,
                multi-tenant namespaces + byte quotas + ownership ranges
+  compress.py  pool-side compression codecs (zlib / int8) + framed blobs
+  undo_codec.py undo-log slot format shared by ring manager and NMP executor
   nmp.py       near-memory ops (gather / bag-reduce / scatter-add / row
-               update / undo snapshot) + EmbeddingPoolMirror
+               update / undo snapshot / fused undo-log append / blob put)
+               + EmbeddingPoolMirror
   faults.py    deterministic crash / torn-write / dropped-flush injection
   metrics.py   traffic + energy counters (feeds benchmarks/fig13_energy.py)
   remote.py    RemotePool client + length-prefixed wire protocol

@@ -125,6 +125,9 @@ class Domain:
     def free(self, point: str = "superblock") -> bool:
         return self._alloc.free_domain(self.name, point=point)
 
+    def free_region(self, name: str, point: str = "superblock") -> bool:
+        return self._alloc._free_region(self.name, name, point)
+
 
 class PoolAllocator:
     def __init__(self, device: PoolDevice, tenant: Optional[str] = None,
@@ -234,6 +237,20 @@ class PoolAllocator:
             self._sync()
             ents = self.directory["domains"].get(self._key(dname), {})
         return {n: self._region(dname, n, e) for n, e in ents.items()}
+
+    def _free_region(self, dname: str, rname: str, point: str) -> bool:
+        """Drop ONE region's directory entry (bytes leaked — emulator). The
+        honest alternative to same-name realloc: callers that outgrow a
+        region must free-then-alloc so quota accounting and the directory
+        never silently orphan the old entry."""
+        if self._proxy is not None:
+            return self._proxy.free_remote_region(dname, rname, point)
+        self._sync()
+        dom = self.directory["domains"].get(self._key(dname), {})
+        if dom.pop(rname, None) is None:
+            return False
+        self._write_directory(point)
+        return True
 
     def free_domain(self, dname: str, point: str = "superblock") -> bool:
         """Drop a domain's directory entries (the data bytes are leaked —

@@ -16,6 +16,7 @@ to the analytic ones.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 from repro.sim import devices as dv
 
@@ -44,6 +45,10 @@ class PoolMetrics:
     media: dict = field(default_factory=dict)     # kind -> OpStat
     link: dict = field(default_factory=dict)      # kind -> OpStat
     ndp_time_s: float = 0.0                       # near-memory compute busy
+    comp_raw_bytes: int = 0                       # pool-side compression in
+    comp_stored_bytes: int = 0                    # ...and what hit media
+    comp_time_s: float = 0.0                      # compression engine busy
+    comp: dict = field(default_factory=dict)      # kind -> [raw, stored]
     dropped_flushes: int = 0
     torn_writes: int = 0
     crashes: int = 0
@@ -54,6 +59,10 @@ class PoolMetrics:
         self.media.clear()
         self.link.clear()
         self.ndp_time_s = 0.0
+        self.comp_raw_bytes = 0
+        self.comp_stored_bytes = 0
+        self.comp_time_s = 0.0
+        self.comp.clear()
 
     def record(self, kind: str, nbytes: int, time_s: float):
         self.media.setdefault(kind, OpStat()).add(nbytes, time_s)
@@ -64,6 +73,31 @@ class PoolMetrics:
 
     def record_ndp(self, flops: float):
         self.ndp_time_s += flops / dv.NDP_LOGIC.flops
+
+    def record_comp(self, raw_bytes: int, stored_bytes: int,
+                    time_s: float = 0.0, kind: str = "undo"):
+        """Pool-side (de)compression: raw-vs-stored byte tallies feed the
+        measured compression ratio — tagged by payload kind ("undo" rows
+        vs "blob" snapshots compress very differently, and the simulator
+        must calibrate its undo segment from the undo ratio alone. Busy
+        time lands on its own meter (the in-controller DEFLATE block, not
+        the 15W adder array)."""
+        self.comp_raw_bytes += int(raw_bytes)
+        self.comp_stored_bytes += int(stored_bytes)
+        self.comp_time_s += float(time_s)
+        ent = self.comp.setdefault(kind, [0, 0])
+        ent[0] += int(raw_bytes)
+        ent[1] += int(stored_bytes)
+
+    def comp_ratio(self, kind: Optional[str] = None) -> float:
+        """stored/raw (1.0 = off/unknown) — for one payload kind, or over
+        everything pool-compressed when `kind` is None."""
+        if kind is not None:
+            raw, stored = self.comp.get(kind, (0, 0))
+            return stored / raw if raw > 0 else 1.0
+        if self.comp_raw_bytes <= 0:
+            return 1.0
+        return self.comp_stored_bytes / self.comp_raw_bytes
 
     # -- aggregates ----------------------------------------------------------
     def media_bytes(self, *kinds) -> int:
@@ -85,7 +119,7 @@ class PoolMetrics:
         if self.device_name == "pmem":
             read_t = sum(s.time_s for k, s in self.media.items()
                          if k in ("read", "gather", "bag_gather",
-                                  "undo_snapshot"))
+                                  "undo_snapshot", "undo_scan"))
             write_t = self.media_time() - read_t
             e_mem = P["pmem_read_w"] * read_t + P["pmem_write_w"] * write_t
         else:
@@ -93,6 +127,7 @@ class PoolMetrics:
         e = {
             "mem": e_mem,
             "ndp": P["ndp_logic_w"] * self.ndp_time_s,
+            "comp": P.get("comp_engine_w", 2.0) * self.comp_time_s,
             "link": LINK_W * self.link_time(),
         }
         e["total"] = sum(e.values())
@@ -110,6 +145,11 @@ class PoolMetrics:
                                      nbytes=int(st["nbytes"]),
                                      time_s=float(st["time_s"]))
         m.ndp_time_s = float(snap.get("ndp_time_s", 0.0))
+        m.comp_raw_bytes = int(snap.get("comp_raw_bytes", 0))
+        m.comp_stored_bytes = int(snap.get("comp_stored_bytes", 0))
+        m.comp_time_s = float(snap.get("comp_time_s", 0.0))
+        m.comp = {k: [int(v[0]), int(v[1])]
+                  for k, v in (snap.get("comp") or {}).items()}
         m.dropped_flushes = int(snap.get("dropped_flushes", 0))
         m.torn_writes = int(snap.get("torn_writes", 0))
         m.crashes = int(snap.get("crashes", 0))
@@ -125,6 +165,11 @@ class PoolMetrics:
             "media_time_s": self.media_time(),
             "link_time_s": self.link_time(),
             "ndp_time_s": self.ndp_time_s,
+            "comp_raw_bytes": self.comp_raw_bytes,
+            "comp_stored_bytes": self.comp_stored_bytes,
+            "comp_ratio": self.comp_ratio(),
+            "comp_time_s": self.comp_time_s,
+            "comp": {k: list(v) for k, v in self.comp.items()},
             "dropped_flushes": self.dropped_flushes,
             "torn_writes": self.torn_writes,
             "crashes": self.crashes,
@@ -141,6 +186,10 @@ class PoolMetrics:
         e = self.energy()
         lines.append(f"  link/media byte ratio: "
                      f"{self.link_bytes() / max(1, self.media_bytes()):.4f}")
+        if self.comp_raw_bytes:
+            lines.append(f"  pool compression: raw={self.comp_raw_bytes} "
+                         f"stored={self.comp_stored_bytes} "
+                         f"ratio={self.comp_ratio():.4f}")
         lines.append("  energy[J]: " + "  ".join(
             f"{k}={v:.6f}" for k, v in e.items()))
         if self.dropped_flushes or self.torn_writes or self.crashes:

@@ -19,8 +19,11 @@ from typing import Optional
 
 import numpy as np
 
+from repro.pool import compress as pc
+from repro.pool import undo_codec as uc
 from repro.pool.allocator import Region
-from repro.pool.device import PoolDevice
+from repro.pool.device import PoolDevice, PoolError
+from repro.pool.faults import InjectedCrash
 
 
 class NmpQueue:
@@ -143,17 +146,129 @@ class NmpQueue:
             region.persist(point=point)
 
     def undo_snapshot(self, region: Region, idx) -> np.ndarray:
-        """Capture the pre-update image of rows[idx] *inside the pool* (no
-        link traffic — the paper's batch-aware undo capture)."""
+        """Capture the pre-update image of rows[idx] and return it to the
+        host. This is the *round-trip* capture path: the old rows cross the
+        link out (and come back in if the host logs them) — kept for the
+        before/after comparison and ad-hoc reads. The paper's active design
+        is ``undo_log_append``, which never ships the image."""
         idx = np.asarray(idx).reshape(-1)
         if self._remote:
             return self.device.nmp("undo_snapshot", region, idx=idx)
         flat, row_bytes = self._rows_meta(region)
         old = np.array(flat[idx])
-        self.device.metrics.record(
-            "undo_snapshot", idx.size * row_bytes,
-            self.device.profile.t_random_read(idx.size, row_bytes))
+        m = self.device.metrics
+        m.record("undo_snapshot", idx.size * row_bytes,
+                 self.device.profile.t_random_read(idx.size, row_bytes))
+        m.record_link("link_in", idx.nbytes)
+        m.record_link("link_out", old.nbytes)
         return old
+
+    def undo_log_append(self, mirror: Region, log: Region, *, step: int,
+                        slot_off: int, slot_bytes: int, idx,
+                        new_rows: Optional[np.ndarray] = None,
+                        compress: str = "zlib",
+                        apply_point: str = "mirror-apply") -> dict:
+        """Server-side undo capture — the tentpole op (paper Fig. 6/7, the
+        checkpointing logic managing persistency "in an active manner").
+
+        Inside the memory node: snapshot mirror[idx], compress + write the
+        undo entry into the log slot, persist payload and COMMIT flag with
+        the two paper barriers, then (fused) apply ``new_rows`` to the
+        mirror. Only ``(step, idx, new_rows)`` ever cross the link; the old
+        row images never leave the pool. Returns {"stored", "raw"} byte
+        counts of the logged payload."""
+        idx = np.asarray(idx).reshape(-1)
+        if self._remote:
+            return self.device.nmp(
+                "undo_log_append", mirror, idx=idx, rows=new_rows,
+                point=apply_point, log_region=log, step=int(step),
+                slot_off=int(slot_off), slot_bytes=int(slot_bytes),
+                compress=compress)
+        if not (log.off <= slot_off
+                and slot_off + slot_bytes <= log.off + log.nbytes):
+            raise PoolError(f"undo slot [{slot_off}, {slot_off + slot_bytes})"
+                            f" outside log region")
+        dev = self.device
+        m = dev.metrics
+        # operands in; results never out — the whole point of the op
+        m.record_link("link_in", idx.nbytes + uc.HDR.size
+                      + (0 if new_rows is None else
+                         np.asarray(new_rows).nbytes))
+        # 1: batch-aware capture of the pre-update image (media-only read)
+        flat, row_bytes = self._rows_meta(mirror)
+        old = np.array(flat[idx])
+        m.record("undo_snapshot", idx.size * row_bytes,
+                 dev.profile.t_random_read(idx.size, row_bytes))
+        # 2: compress + log entry (payload barrier), then COMMIT (its own)
+        buf, stored_len, raw_len = uc.pack_slot(step, idx, old, None,
+                                                mode=compress,
+                                                slot_bytes=slot_bytes)
+        if compress != "none":     # engine idle when compression is off
+            m.record_comp(raw_len, stored_len, raw_len / pc.COMPRESS_BPS,
+                          kind="undo")
+        uc.write_slot(dev, slot_off, buf)
+        stats = {"stored": stored_len, "raw": raw_len}
+        if new_rows is None:
+            return stats
+        # 3 (fused): idempotent in-place apply. The commit/apply boundary is
+        # a named fault point *inside the node* so crash drills still land
+        # exactly between the two barriers on every backend.
+        f = dev.faults
+        if f is not None and \
+                f.hit("tier_e.between-commit-and-apply") == "crash-after":
+            raise InjectedCrash("tier_e.between-commit-and-apply",
+                                f.counts["tier_e.between-commit-and-apply"])
+        new_rows = np.asarray(new_rows, flat.dtype).reshape(idx.size, -1)
+        flat[idx] = new_rows
+        self._mark_rows_dirty(mirror, flat, idx, row_bytes)
+        m.record("row_update", idx.size * row_bytes,
+                 dev.profile.t_random_write(idx.size, row_bytes))
+        mirror.persist(point=apply_point)
+        return stats
+
+    def slot_headers(self, log: Region, nslots: int, slot_bytes: int,
+                     hdr_bytes: int) -> np.ndarray:
+        """Strided gather of every slot header in one op — the committed-set
+        scan costs one link round-trip instead of one per slot."""
+        if self._remote:
+            return self.device.nmp("slot_headers", log, nslots=int(nslots),
+                                   slot_bytes=int(slot_bytes),
+                                   hdr_bytes=int(hdr_bytes))
+        v = self.device.view(log.off, nslots * slot_bytes)
+        out = np.lib.stride_tricks.as_strided(
+            v, (nslots, hdr_bytes), (slot_bytes, 1)).copy()
+        m = self.device.metrics
+        m.record("undo_scan", nslots * hdr_bytes,
+                 self.device.profile.t_random_read(nslots, hdr_bytes))
+        m.record_link("link_in", 16)
+        m.record_link("link_out", out.nbytes)
+        return out
+
+    def blob_put(self, region: Region, blob, *, compress: str = "zlib",
+                 point: str = "dense-blob") -> int:
+        """Write an opaque blob through the pool's compression engine: the
+        raw bytes cross the link in, the *framed, compressed* image hits
+        media, and exactly the written range is persisted. Returns the
+        stored (framed) length — what a reader must fetch + ``unframe``."""
+        if self._remote:
+            return self.device.nmp("blob_put", region, blob=blob,
+                                   point=point, compress=compress)["stored"]
+        raw = bytes(blob) if isinstance(blob, (bytes, bytearray, memoryview)) \
+            else np.ascontiguousarray(blob).tobytes()
+        framed = pc.frame(raw, mode=compress)
+        if len(framed) > region.nbytes:
+            raise PoolError(f"blob ({len(framed)}B framed) overflows region "
+                            f"{region.domain}/{region.name} "
+                            f"({region.nbytes}B)")
+        m = self.device.metrics
+        m.record_link("link_in", len(raw))
+        if compress != "none":     # engine idle when compression is off
+            # frame header excluded: the ratio compares payload bytes only
+            m.record_comp(len(raw), len(framed) - pc.FRAME_OVERHEAD,
+                          len(raw) / pc.COMPRESS_BPS, kind="blob")
+        self.device.write(region.off, framed, tag="dense")
+        self.device.persist(region.off, len(framed), point=point)
+        return len(framed)
 
 
 class EmbeddingPoolMirror:

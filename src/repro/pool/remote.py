@@ -26,7 +26,10 @@ quota, and metrics; raw-offset ops are validated against the tenant's owned
 byte ranges server-side.
 
 Ops: hello, read, write, persist, ensure, crash, alloc, get, regions, free,
-nmp, metrics, set-faults, capacity, close.
+free-region, nmp, metrics, set-faults, capacity, close. The ``nmp`` op
+family includes the fused ``undo_log_append`` (server-side undo capture —
+old row images never cross the link), ``blob_put`` (pool-side compression of
+dense snapshot blobs) and ``slot_headers`` (one-round-trip undo-ring scan).
 """
 from __future__ import annotations
 
@@ -329,25 +332,46 @@ class RemotePool(PoolDevice):
                                "point": point})
         return bool(rh["freed"])
 
+    def free_remote_region(self, domain: str, name: str,
+                           point: str = "superblock") -> bool:
+        rh, _ = self._request({"op": "free-region", "domain": domain,
+                               "name": name, "point": point})
+        return bool(rh["freed"])
+
     # -- near-memory ops --------------------------------------------------------
-    def nmp(self, kind: str, region, idx, rows=None, combine: str = "sum",
-            point: Optional[str] = None):
+    @staticmethod
+    def _region_hdr(region) -> dict:
+        return {"off": region.off, "nbytes": region.nbytes,
+                "dtype": region.dtype, "shape": list(region.shape)}
+
+    def nmp(self, kind: str, region, idx=None, rows=None, blob=None,
+            combine: str = "sum", point: Optional[str] = None,
+            log_region=None, **extra):
         """Ship one near-memory op to the server; returns the result array
-        (gather / bag_gather / undo_snapshot) or None (row_update /
-        scatter_add)."""
-        idx = np.ascontiguousarray(np.asarray(idx), dtype=np.int64)
+        (gather / bag_gather / undo_snapshot / slot_headers), a stats dict
+        (undo_log_append / blob_put), or None (row_update / scatter_add).
+        ``log_region`` names a second owned region (the undo-log ring) for
+        the fused capture op; scalar op parameters ride in ``extra``."""
         hdr = {"op": "nmp", "kind": kind, "combine": combine, "point": point,
-               "region": {"off": region.off, "nbytes": region.nbytes,
-                          "dtype": region.dtype,
-                          "shape": list(region.shape)},
-               "idx_shape": list(idx.shape)}
-        body = idx.tobytes()
+               "region": self._region_hdr(region)}
+        body = b""
+        if idx is not None:
+            idx = np.ascontiguousarray(np.asarray(idx), dtype=np.int64)
+            hdr["idx_shape"] = list(idx.shape)
+            body += idx.tobytes()
         if rows is not None:
             rows = np.ascontiguousarray(rows)
             hdr["rows_dtype"] = str(rows.dtype)
             hdr["rows_shape"] = list(rows.shape)
             body += rows.tobytes()
+        if blob is not None:
+            body += _as_bytes(blob)
+        if log_region is not None:
+            hdr["log_region"] = self._region_hdr(log_region)
+        hdr.update(extra)
         rh, rbody = self._request(hdr, body)
+        if "stats" in rh:
+            return rh["stats"]
         if rh.get("shape") is None:
             return None
         return np.frombuffer(rbody, dtype=rh["dtype"]) \

@@ -315,6 +315,12 @@ class PoolServer:
         tenant.ranges = None
         return {"freed": freed}, b""
 
+    def _op_free_region(self, tenant, hdr, body):
+        freed = tenant.alloc.domain(hdr["domain"]).free_region(
+            hdr["name"], point=hdr.get("point", "superblock"))
+        tenant.ranges = None
+        return {"freed": freed}, b""
+
     def _op_metrics(self, tenant, hdr, body):
         if hdr.get("reset"):
             tenant.metrics.reset()
@@ -325,20 +331,30 @@ class PoolServer:
                     "snapshot": tenant.metrics.snapshot()}, b""
         return {"snapshot": tenant.metrics.snapshot()}, b""
 
+    def _wire_region(self, tenant, ent: dict, label: str) -> Region:
+        off, nbytes = self._check_owned(tenant, ent["off"], ent["nbytes"])
+        return Region(self.device, "<nmp>", label, off, nbytes,
+                      ent["dtype"], tuple(ent["shape"]))
+
     def _op_nmp(self, tenant, hdr, body):
-        r = hdr["region"]
-        off, nbytes = self._check_owned(tenant, r["off"], r["nbytes"])
-        region = Region(self.device, "<nmp>", "<nmp>", off, nbytes,
-                        r["dtype"], tuple(r["shape"]))
-        idx_shape = tuple(hdr["idx_shape"])
-        n_idx = int(np.prod(idx_shape)) if idx_shape else 1
-        idx = np.frombuffer(body[:n_idx * 8], dtype=np.int64) \
-            .reshape(idx_shape)
+        region = self._wire_region(tenant, hdr["region"], "<nmp>")
+        log = None
+        if hdr.get("log_region"):
+            log = self._wire_region(tenant, hdr["log_region"], "<log>")
+        idx, pos = None, 0
+        if "idx_shape" in hdr:
+            idx_shape = tuple(hdr["idx_shape"])
+            n_idx = int(np.prod(idx_shape)) if idx_shape else 1
+            idx = np.frombuffer(body[:n_idx * 8], dtype=np.int64) \
+                .reshape(idx_shape)
+            pos = n_idx * 8
         rows = None
         if hdr.get("rows_dtype"):
-            rows = np.frombuffer(body[n_idx * 8:],
-                                 dtype=hdr["rows_dtype"]) \
-                .reshape(hdr["rows_shape"])
+            shape = tuple(hdr["rows_shape"])
+            count = int(np.prod(shape)) if shape else 1
+            rows = np.frombuffer(body, dtype=hdr["rows_dtype"], count=count,
+                                 offset=pos).reshape(shape)
+            pos += rows.nbytes
         kind, point = hdr["kind"], hdr.get("point")
         if kind == "gather":
             out = self._nmp.gather(region, idx)
@@ -347,12 +363,31 @@ class PoolServer:
                                        combine=hdr.get("combine", "sum"))
         elif kind == "undo_snapshot":
             out = self._nmp.undo_snapshot(region, idx)
+        elif kind == "slot_headers":
+            out = self._nmp.slot_headers(region, int(hdr["nslots"]),
+                                         int(hdr["slot_bytes"]),
+                                         int(hdr["hdr_bytes"]))
         elif kind == "row_update":
             self._nmp.row_update(region, idx, rows, point=point)
             return {"shape": None}, b""
         elif kind == "scatter_add":
             self._nmp.scatter_add(region, idx, rows, point=point)
             return {"shape": None}, b""
+        elif kind == "undo_log_append":
+            if log is None:
+                raise WireError("undo_log_append needs log_region")
+            stats = self._nmp.undo_log_append(
+                region, log, step=int(hdr["step"]),
+                slot_off=int(hdr["slot_off"]),
+                slot_bytes=int(hdr["slot_bytes"]), idx=idx, new_rows=rows,
+                compress=hdr.get("compress", "zlib"),
+                apply_point=point or "mirror-apply")
+            return {"shape": None, "stats": stats}, b""
+        elif kind == "blob_put":
+            stored = self._nmp.blob_put(
+                region, body[pos:], compress=hdr.get("compress", "zlib"),
+                point=point or "dense-blob")
+            return {"shape": None, "stats": {"stored": stored}}, b""
         else:
             raise WireError(f"unknown nmp kind {kind!r}")
         out = np.ascontiguousarray(out)

@@ -92,6 +92,9 @@ POWER = {
     "pmem_per_module_static": 1.5, "pmem_read_w": 10.0, "pmem_write_w": 15.0,
     "ssd_static": 2.0, "ssd_access_w": 8.0,
     "ndp_logic_w": 15.0,
+    # in-controller (de)compression block: IAA/QAT-class DEFLATE engines
+    # run single-digit GB/s at a watt or two, nothing like the adder array
+    "comp_engine_w": 2.0,
     "dram_modules_full": 768,  # production-scale tables fully in DRAM (Fig13 premise)
     "pmem_modules": 8,
 }

@@ -53,20 +53,30 @@ def calibrate_from_pool(metrics) -> dict:
     host link) with effective rates measured by a ``repro.pool`` run.
 
     `metrics` is a ``repro.pool.PoolMetrics``. Persist traffic calibrates the
-    checkpoint *write* path, gather/read traffic the undo-read path, and link
-    counters the transfer segments. Returns the calibration dict applied."""
+    checkpoint *write* path, gather/read traffic the undo-read path, link
+    counters the transfer segments, and the pool-side compression tallies
+    shrink the undo-log write volume in the CXL-B/CXL checkpoint segments.
+    Returns the calibration dict applied."""
     cal: dict = {}
     w = metrics.media.get("persist")
     if w is not None and w.time_s > 0:
         cal["write_bps"] = w.nbytes / w.time_s
     r_bytes = r_time = 0.0
-    for kind in ("read", "gather", "bag_gather", "undo_snapshot"):
+    for kind in ("read", "gather", "bag_gather", "undo_snapshot",
+                 "undo_scan"):
         s = metrics.media.get(kind)
         if s is not None:
             r_bytes += s.nbytes
             r_time += s.time_s
     if r_time > 0:
         cal["read_bps"] = r_bytes / r_time
+    # calibrate the undo segment from the UNDO payload ratio alone — dense
+    # blobs (near-zero optimizer state) compress far better and would skew
+    # the blended pool-wide ratio
+    if metrics.comp.get("undo", (0, 0))[0] > 0:
+        cal["undo_comp_ratio"] = metrics.comp_ratio("undo")
+    elif metrics.comp_raw_bytes > 0:
+        cal["undo_comp_ratio"] = metrics.comp_ratio()
     _POOL_CAL[metrics.device_name] = cal
     if metrics.link_time() > 0:
         # pool link counters model the CXL link; calibrate only that link so
@@ -96,6 +106,12 @@ def _bulk_read_t(dev, nbytes: int) -> float:
 
 def _link_bw(link) -> float:
     return _POOL_CAL.get("_link:" + link.name, {}).get("bps", link.bw)
+
+
+def _undo_comp_ratio(dev) -> float:
+    """Measured pool-side undo-log compression ratio (1.0 when the pool ran
+    uncompressed or no calibration is loaded)."""
+    return _POOL_CAL.get(dev.name, {}).get("undo_comp_ratio", 1.0)
 
 
 @dataclass
@@ -185,10 +201,14 @@ def _stage_times(system: str, w: RMWorkload):
             t_ckpt_mlp += (w.mlp_param_bytes / link_ck.bw
                            + link_ck.sw_overhead)
     else:
-        # undo log: read old rows (data region) + write to log region;
-        # MLP log is differential/quantised (MLP_LOG_FRACTION)
+        # undo log: read old rows (data region) + write to log region —
+        # shrunk by the measured pool-side compression ratio when a pool
+        # calibration is loaded; MLP log is differential/quantised
+        # (MLP_LOG_FRACTION)
         t_ckpt_emb = (_bulk_read_t(dev, row_bytes)
-                      + _bulk_write_t(dev, row_bytes))
+                      + _bulk_write_t(dev,
+                                      int(row_bytes
+                                          * _undo_comp_ratio(dev))))
         t_ckpt_mlp = _bulk_write_t(
             dev, int(w.mlp_param_bytes * MLP_LOG_FRACTION))
         if system == "CXL":

@@ -22,11 +22,15 @@ from repro.training import train_loop
 
 BACKENDS = [b.strip() for b in os.environ.get(
     "REPRO_POOL_BACKENDS", "dram,pmem").split(",") if b.strip()]
+# pool-side compression mode under test (CI runs the suite with both
+# "none" and "zlib"; recovery must be bit-identical either way)
+COMPRESS = os.environ.get("REPRO_POOL_COMPRESS", "zlib")
 
 _SERVERS = []    # in-process memory nodes; daemon threads, die with pytest
 
 
-def setup_run(tmp, arch="tinyllama-1.1b", dense_interval=1, backend="pmem"):
+def setup_run(tmp, arch="tinyllama-1.1b", dense_interval=1, backend="pmem",
+              compress=COMPRESS):
     addr = ""
     if backend == "remote":
         from repro.pool import PoolServer
@@ -34,7 +38,8 @@ def setup_run(tmp, arch="tinyllama-1.1b", dense_interval=1, backend="pmem"):
         _SERVERS.append(srv)
         addr = srv.addr
     cc = CheckpointConfig(directory=tmp, dense_interval=dense_interval,
-                          pool_backend=backend, pool_addr=addr)
+                          pool_backend=backend, pool_addr=addr,
+                          pool_compress=compress)
     tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
     b = get_arch(arch, smoke=True)
     data = make_batches(b.model, 4, 16, seed=3)
@@ -145,6 +150,37 @@ def test_torn_mirror_apply_rolls_back(tmp_path, backend):
     assert rec.rolled_back
     assert rec.mirror_step == 1
     np.testing.assert_array_equal(rec.embed_rows, ref_rows)
+
+
+def test_recovery_bit_identical_across_compression_modes(tmp_path):
+    """Acceptance: the same crash drill recovers the same bytes whether
+    pool-side compression is on or off — compression is transparent to the
+    durability contract."""
+    rows, dense_steps = {}, {}
+    init_fn = None
+    for comp in ("none", "zlib"):
+        tmp = str(tmp_path / f"ck-{comp}")
+        b, tc, cc, data = setup_run(tmp, backend="pmem", compress=comp)
+        faults = FaultSchedule.crash_at("tier_e.between-commit-and-apply",
+                                        occurrence=4)
+        if init_fn is None:
+            init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+        st0 = init_fn(jax.random.PRNGKey(tc.seed))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"],
+                                faults=faults)
+        with pytest.raises(InjectedCrash):
+            train_loop.train(b.model, tc, data, 6, relaxed=True, state=st0,
+                             ckpt_manager=mgr)
+        if comp == "zlib":       # the compressed cell really compressed
+            assert 0 < mgr.stats["undo_stored_bytes"] \
+                <= mgr.stats["undo_raw_bytes"]
+        mgr.pool.close()
+        rec = recovery.recover(tmp)
+        rows[comp] = np.array(rec.embed_rows)
+        dense_steps[comp] = rec.dense_step
+        assert rec.mirror_step == 2
+    np.testing.assert_array_equal(rows["none"], rows["zlib"])
+    assert dense_steps["none"] == dense_steps["zlib"]
 
 
 def test_crc_detects_corruption(tmp_path):

@@ -11,13 +11,18 @@ import numpy as np
 import pytest
 
 from repro.core.checkpoint.undo_log import UndoRing
-from repro.pool import (DramPool, EmbeddingPoolMirror, FaultSchedule,
-                        InjectedCrash, JsonRegion, NmpQueue, PmemPool,
-                        PoolAllocator, PoolError, PoolServer, RemotePool,
-                        make_pool)
+from repro.pool import (DramPool, EmbeddingPoolMirror, FaultEvent,
+                        FaultSchedule, InjectedCrash, JsonRegion, NmpQueue,
+                        PmemPool, PoolAllocator, PoolError, PoolServer,
+                        RemotePool, make_pool)
+from repro.pool import compress as pc
+from repro.pool import undo_codec as uc
 
 BACKENDS = [b.strip() for b in os.environ.get(
     "REPRO_POOL_BACKENDS", "dram,pmem").split(",") if b.strip()]
+# default compression for UndoRings built here (tests that pin a mode
+# parametrize it explicitly); CI matrixes this over {none, zlib}
+COMPRESS = os.environ.get("REPRO_POOL_COMPRESS", "zlib")
 
 _SOCK_SEQ = [0]
 
@@ -245,7 +250,7 @@ def test_torn_write_is_partial(backend, tmp_path):
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_undo_ring_commit_crc_and_gc(backend, tmp_path, rng):
     dev = mkpool(backend, tmp_path)
-    ring = UndoRing(PoolAllocator(dev), max_logs=3)
+    ring = UndoRing(PoolAllocator(dev), max_logs=3, compress=COMPRESS)
     for step in range(6):
         ring.append(step, np.arange(4) + step,
                     rng.standard_normal((4, 8)).astype(np.float32))
@@ -257,19 +262,248 @@ def test_undo_ring_commit_crc_and_gc(backend, tmp_path, rng):
     assert ring.committed_steps() == [4, 5]
     # committed entries survive crash; a torn payload invalidates the entry
     dev.crash()
-    ring2 = UndoRing(PoolAllocator(dev), max_logs=3)
+    ring2 = UndoRing(PoolAllocator(dev), max_logs=3,
+                     compress=COMPRESS)
     assert ring2.committed_steps() == [4, 5]
 
 
-def test_undo_ring_grows_slots(tmp_path, rng):
+@pytest.mark.parametrize("compress", ["none", "zlib"])
+def test_undo_ring_grows_slots(tmp_path, rng, compress):
     dev = mkpool("dram", tmp_path)
-    ring = UndoRing(PoolAllocator(dev), max_logs=2)
+    ring = UndoRing(PoolAllocator(dev), max_logs=2, compress=compress)
     ring.append(0, np.arange(2), np.ones((2, 4), np.float32))
     big_idx = np.arange(512)
     ring.append(1, big_idx, np.ones((512, 4), np.float32))  # outgrows slot
     assert ring.committed_steps() == [0, 1]
     idx, rows, _ = ring.read(1)
     np.testing.assert_array_equal(idx, big_idx)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("point,occurrence,phase", [
+    # schedules are armed AFTER the two seed appends, so occurrences count
+    # from the start of the growing append
+    ("undo-grow-alloc", 1, "after"),   # new ring allocated, nothing carried
+    ("undo-payload", 1, "before"),     # first carried entry: mid carry-over
+    ("undo-payload", 2, "before"),     # second carried entry
+    ("undo-meta", 1, "before"),        # carry done, meta flip not durable
+    ("undo-meta", 1, "after"),         # flip durable, grow complete
+])
+def test_crash_mid_grow_loses_no_committed_entry(backend, point, occurrence,
+                                                 phase, tmp_path, rng):
+    """The _grow crash-safety contract: entries are copied into the new
+    ring FIRST and meta flips LAST, so a power loss anywhere mid-grow
+    recovers the old ring with every committed entry (and its COMMIT word)
+    intact."""
+    dev = mkpool(backend, tmp_path)
+    ring = UndoRing(PoolAllocator(dev), max_logs=3, compress=COMPRESS)
+    rows = {}
+    for s in range(2):
+        rows[s] = rng.standard_normal((4, 8)).astype(np.float32)
+        ring.append(s, np.arange(4) + s, rows[s])
+    dev.faults = FaultSchedule(
+        events=(FaultEvent("crash", point, occurrence, phase),))
+    with pytest.raises(InjectedCrash):      # entry outgrows slot -> grow
+        ring.append(2, np.arange(512), np.ones((512, 8), np.float32))
+    dev.faults = None
+    dev.crash()                             # power loss mid-grow
+    ring2 = UndoRing(PoolAllocator(dev), max_logs=3,
+                     compress=COMPRESS)
+    assert ring2.committed_steps() == [0, 1], \
+        f"committed entries lost after crash at {point}"
+    for s in range(2):
+        idx, got, acc = ring2.read(s)
+        np.testing.assert_array_equal(idx, np.arange(4) + s)
+        np.testing.assert_allclose(got, rows[s], rtol=1e-6)
+
+
+def test_regrow_after_crashed_grow_cannot_resurrect_stale_entries(tmp_path,
+                                                                  rng):
+    """A grow that crashed before its meta flip leaves a half-written
+    ring<gen> in the directory. A later same-size grow reopens that region
+    idempotently — its stale COMMIT words (for entries that may since have
+    been GC'd) must be scrubbed, or recovery would roll the mirror back to
+    ancient row images."""
+    dev = mkpool("dram", tmp_path)
+    ring = UndoRing(PoolAllocator(dev), max_logs=3, compress=COMPRESS)
+    for s in range(2):
+        ring.append(s, np.arange(4) + s, np.ones((4, 8), np.float32))
+    big = (np.arange(512), np.ones((512, 8), np.float32))
+    dev.faults = FaultSchedule.crash_at("undo-meta", occurrence=1)
+    with pytest.raises(InjectedCrash):      # carry done, flip never durable
+        ring.append(2, *big)
+    dev.faults = None
+    dev.crash()
+    ring2 = UndoRing(PoolAllocator(dev), max_logs=3,
+                     compress=COMPRESS)
+    assert ring2.committed_steps() == [0, 1]
+    ring2.gc(keep_from=2)                   # both tiers durable past 0, 1
+    assert ring2.committed_steps() == []
+    ring2.append(2, *big)                   # same need -> same ring1 region
+    assert ring2.committed_steps() == [2], \
+        "stale carried-over entries resurrected from the crashed grow"
+
+
+def test_compress_none_leaves_engine_idle(tmp_path, rng):
+    """With compression off the engine must charge nothing: no bytes, no
+    busy time, no phantom DEFLATE energy, no sim calibration ratio."""
+    dev = mkpool("dram", tmp_path)
+    a = PoolAllocator(dev)
+    tab = rng.standard_normal((32, 8)).astype(np.float32)
+    mirror = a.domain("m").alloc("rows", shape=tab.shape, dtype="float32")
+    mirror.write_array(tab)
+    ring = UndoRing(a, max_logs=2, compress="none")
+    ring.log_and_apply(0, mirror, np.arange(4), np.ones((4, 8), np.float32))
+    q = NmpQueue(dev)
+    r = a.domain("dense").alloc("slot0", shape=(8 << 10,), dtype="uint8")
+    q.blob_put(r, b"\0" * 4096, compress="none")
+    m = dev.metrics
+    assert m.comp_raw_bytes == 0 and m.comp_stored_bytes == 0
+    assert m.comp_time_s == 0.0 and m.energy()["comp"] == 0.0
+    assert m.comp_ratio() == 1.0
+
+
+def test_grow_carries_entries_and_flips_meta_last(tmp_path, rng):
+    """A clean grow keeps everything; meta gen advances exactly once."""
+    dev = mkpool("dram", tmp_path)
+    ring = UndoRing(PoolAllocator(dev), max_logs=3, compress=COMPRESS)
+    rows = {s: rng.standard_normal((4, 8)).astype(np.float32)
+            for s in range(3)}
+    for s in range(3):
+        ring.append(s, np.arange(4) + s, rows[s])
+    gen0 = ring.gen
+    ring.append(3, np.arange(512), np.ones((512, 8), np.float32))
+    assert ring.gen == gen0 + 1
+    assert ring.committed_steps() == [0, 1, 2, 3]
+    for s in range(3):
+        _, got, _ = ring.read(s)
+        np.testing.assert_allclose(got, rows[s], rtol=1e-6)
+
+
+# -- undo codec / pool-side compression ---------------------------------------
+
+@pytest.mark.parametrize("mode", ["none", "zlib"])
+def test_undo_codec_lossless_roundtrip(rng, mode):
+    idx = np.sort(rng.choice(10_000, 64, replace=False)).astype(np.int64)
+    rows = rng.standard_normal((64, 16)).astype(np.float32)
+    acc = rng.standard_normal((64, 16)).astype(np.float32)
+    stored, flags, raw_len = uc.encode_payload(idx, rows, acc, mode)
+    assert len(stored) <= raw_len
+    i2, r2, a2 = uc.decode_payload(stored, 64, 16, flags)
+    np.testing.assert_array_equal(i2, idx)
+    np.testing.assert_array_equal(r2, rows)
+    np.testing.assert_array_equal(a2, acc)
+
+
+def test_undo_codec_zlib_shrinks_compressible_rows(rng):
+    idx = np.arange(128, dtype=np.int64)
+    rows = np.zeros((128, 32), np.float32)          # maximally compressible
+    stored, flags, raw_len = uc.encode_payload(idx, rows, None, "zlib")
+    assert uc.flags_mode(flags) == "zlib"
+    assert len(stored) < raw_len // 4
+
+
+def test_undo_codec_int8_is_relaxed_but_indices_exact(rng):
+    idx = rng.choice(10_000, 32, replace=False).astype(np.int64)
+    rows = rng.standard_normal((32, 64)).astype(np.float32)
+    stored, flags, raw_len = uc.encode_payload(idx, rows, None, "int8")
+    assert uc.flags_mode(flags) == "int8"
+    assert len(stored) < raw_len // 2               # ~4x on the row part
+    i2, r2, _ = uc.decode_payload(stored, 32, 64, flags)
+    np.testing.assert_array_equal(i2, idx)          # indices stay lossless
+    err = np.abs(r2 - rows)
+    scale = np.abs(rows).max(axis=1, keepdims=True)
+    assert (err <= scale / 127 + 1e-6).all()        # quantisation-bounded
+
+
+def test_undo_ring_int8_mode_bounded_rollback(tmp_path, rng):
+    dev = mkpool("dram", tmp_path)
+    ring = UndoRing(PoolAllocator(dev), max_logs=2, compress="int8")
+    rows = rng.standard_normal((16, 8)).astype(np.float32)
+    ring.append(0, np.arange(16), rows)
+    _, got, _ = ring.read(0)
+    scale = np.abs(rows).max(axis=1, keepdims=True)
+    assert (np.abs(got - rows) <= scale / 127 + 1e-6).all()
+    # grow carries the STORED bytes verbatim: the one-shot quantisation
+    # error must not compound through re-encode on carry-over
+    ring.append(1, np.arange(512), np.ones((512, 8), np.float32))  # grows
+    _, got2, _ = ring.read(0)
+    np.testing.assert_array_equal(got2, got)
+
+
+def test_blob_frame_roundtrip_and_crc(rng):
+    raw = rng.standard_normal(4096).astype(np.float32).tobytes() + b"\0" * 8192
+    framed = pc.frame(raw, "zlib")
+    assert len(framed) < len(raw)                   # zeros compress
+    assert pc.unframe(framed) == raw
+    # CRC over the *stored* bytes: corrupt the compressed body
+    bad = bytearray(framed)
+    bad[-5] ^= 0xFF
+    with pytest.raises(PoolError):
+        pc.unframe(bytes(bad))
+    # legacy (unframed) blobs pass through verbatim
+    assert pc.unframe(raw) == raw
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_blob_put_compresses_at_pool(backend, tmp_path, rng):
+    dev = mkpool(backend, tmp_path)
+    a = PoolAllocator(dev)
+    raw = b"\0" * (32 << 10)
+    r = a.domain("dense").alloc("slot0", shape=(pc.framed_len(len(raw)),),
+                                dtype="uint8")
+    q = NmpQueue(dev)
+    stored = q.blob_put(r, raw, compress="zlib", point="dense-blob")
+    assert stored < len(raw) // 4                   # hit media compressed
+    dev.crash()                                     # ...and durable
+    back = bytes(dev.read(r.off, stored, tag="dense"))
+    assert pc.unframe(back) == raw
+    m = dev.metrics
+    assert m.comp_raw_bytes >= len(raw)
+    assert m.comp_stored_bytes < m.comp_raw_bytes
+
+
+# -- fused server-side undo capture ------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("compress", ["none", "zlib"])
+def test_undo_log_append_fused(backend, compress, tmp_path, rng):
+    """The tentpole op: capture + log + COMMIT + apply inside the pool, the
+    logged image bit-identical to the pre-update rows, the apply durable."""
+    dev = mkpool(backend, tmp_path)
+    a = PoolAllocator(dev)
+    tab = rng.standard_normal((128, 16)).astype(np.float32)
+    mirror = a.domain("m").alloc("rows", shape=tab.shape, dtype="float32")
+    mirror.write_array(tab)
+    mirror.persist(point="load")
+    ring = UndoRing(a, max_logs=4, compress=compress)
+    idx = np.unique(rng.integers(0, 128, 32))
+    new_rows = rng.standard_normal((idx.size, 16)).astype(np.float32)
+    info = ring.log_and_apply(7, mirror, idx, new_rows)
+    assert 0 < info["stored"] <= info["raw"]
+    got_idx, got_rows, _ = ring.read(7)
+    np.testing.assert_array_equal(got_idx, idx)
+    np.testing.assert_array_equal(got_rows, tab[idx])   # pre-update image
+    dev.crash()                                         # log + apply durable
+    np.testing.assert_array_equal(
+        mirror.read_array()[idx], new_rows)
+    ring2 = UndoRing(PoolAllocator(dev), max_logs=4)
+    assert ring2.committed_steps() == [7]
+
+
+def test_free_region_releases_directory_and_quota(tmp_path):
+    dev = mkpool("dram", tmp_path)
+    a = PoolAllocator(dev)
+    r1 = a.domain("d").alloc("x", shape=(64,), dtype="float32")
+    # same-name realloc with a new shape: the allocator REPLACES the entry
+    # (old bytes leaked, new offset) — verified here so callers know to
+    # free-then-alloc explicitly
+    r2 = a.domain("d").alloc("x", shape=(128,), dtype="float32")
+    assert r2.off != r1.off and r2.nbytes == 512
+    assert a.domain("d").regions().keys() == {"x"}
+    assert a.domain("d").free_region("x")
+    assert a.domain("d").get("x") is None
+    assert not a.domain("d").free_region("x")       # idempotent miss
 
 
 # -- embedding_ops pool strategy --------------------------------------------
@@ -350,9 +584,11 @@ def test_engine_calibration_from_pool_counters(tmp_path, rng):
     r.write_array(rng.standard_normal((4096, 32)).astype(np.float32))
     r.persist(point="p")
     NmpQueue(dev).gather(r, rng.integers(0, 4096, 2048))
+    dev.metrics.record_comp(1000, 400)        # pool-side compression ran
     try:
         cal = engine.calibrate_from_pool(dev.metrics)
         assert cal["write_bps"] > 0 and cal["read_bps"] > 0
+        assert cal["undo_comp_ratio"] == pytest.approx(0.4)
         res = engine.simulate("CXL-B", RMS["RM1"])
         assert res.batch_time > 0 and res.breakdown["Checkpoint"] >= 0
     finally:

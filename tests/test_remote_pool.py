@@ -19,6 +19,10 @@ from repro.pool import (DramPool, FaultSchedule, InjectedCrash, NmpQueue,
 from repro.pool.allocator import DATA_START
 from repro.pool.remote import recv_frame, send_frame
 
+# CI matrixes pool-side compression over {none, zlib}; the fused-path
+# and scan tests must exercise whichever mode the cell selects
+COMPRESS = os.environ.get("REPRO_POOL_COMPRESS", "zlib")
+
 
 @pytest.fixture
 def server(tmp_path):
@@ -282,6 +286,129 @@ def test_concurrent_tenants_hammer(server, rng):
     for t in threads:
         t.join(timeout=60)
     assert not errs, errs
+
+
+# -- server-side undo capture: the link-traffic acceptance tests -------------
+
+def test_fused_undo_append_keeps_old_rows_off_link(server, rng):
+    """Tier-E acceptance: the fused op ships only (step, idx, new_rows)
+    over the wire; the undo image (old rows) is captured, compressed and
+    committed entirely inside the memory node."""
+    from repro.core.checkpoint.undo_log import UndoRing
+
+    dev = connect(server, tenant="fused")
+    a = PoolAllocator(dev)
+    tab = rng.standard_normal((256, 16)).astype(np.float32)
+    mirror = a.domain("m").alloc("rows", shape=tab.shape, dtype="float32")
+    mirror.write_array(tab)
+    mirror.persist(point="load")
+    ring = UndoRing(a, max_logs=4, compress=COMPRESS)
+    idx = np.unique(rng.integers(0, 256, 64))
+    new0 = rng.standard_normal((idx.size, 16)).astype(np.float32)
+    ring.log_and_apply(0, mirror, idx, new0)        # warmup: ring creation
+    dev.reset_metrics()
+
+    new1 = rng.standard_normal((idx.size, 16)).astype(np.float32)
+    info = ring.log_and_apply(1, mirror, idx, new1)
+    m = dev.metrics
+    # per-step link bytes <= idx + new_rows + O(header)
+    assert m.link_bytes() <= idx.nbytes + new1.nbytes + 1024
+    # ...while media still carries the full undo payload: the capture read
+    # and the (compressed) log write, plus the apply
+    assert m.media_bytes("undo_snapshot") == idx.size * 16 * 4
+    assert m.media_bytes("undo") >= info["stored"]
+    assert m.media_bytes() > m.link_bytes()
+    # the logged image is the step-0 state (new0), bit-exact after decompress
+    got_idx, got_rows, _ = ring.read(1)
+    np.testing.assert_array_equal(got_idx, idx)
+    np.testing.assert_array_equal(got_rows, new0)
+    np.testing.assert_array_equal(mirror.read_array()[idx], new1)
+
+
+def test_manager_tier_e_link_bytes_bounded(tmp_path, rng):
+    """End-to-end acceptance: a remote tier-E step (fused op + manifest +
+    GC scan) stays within idx+new_rows+O(headers) of link traffic, while
+    media bytes keep the undo payloads."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.configs.base import CheckpointConfig, TrainConfig
+    from repro.core.checkpoint.manager import CheckpointManager
+    from repro.training import train_loop
+
+    srv = PoolServer(DramPool(1 << 22),
+                     f"unix:{tmp_path}/pool.sock").start()
+    try:
+        cc = CheckpointConfig(directory=str(tmp_path / "ck"),
+                              dense_interval=0, pool_backend="remote",
+                              pool_addr=srv.addr, pool_tenant="trainer",
+                              pool_compress=COMPRESS)
+        b = get_arch("tinyllama-1.1b", smoke=True)
+        tc = TrainConfig(checkpoint=cc)
+        init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+        st0 = init_fn(jax.random.PRNGKey(0))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+        d = mgr.mirror_region.shape[-1]
+        nrows = mgr.mirror_region.shape[0]
+        idx = np.unique(rng.integers(0, nrows, 32)).astype(np.int64)
+        new = rng.standard_normal((idx.size, d)).astype(np.float32)
+        mgr._do_tier_e(0, idx, new)                 # warmup (ring creation)
+        mgr.pool.reset_metrics()
+        sent = 0
+        for step in (1, 2, 3):
+            mgr._do_tier_e(step, idx, new)
+            sent += idx.nbytes + new.nbytes
+        m = mgr.pool.metrics
+        # O(header) covers the fused-op header + the one-round-trip GC
+        # header scan (nslots * 48B), never the row payloads
+        assert m.link_bytes() <= sent + 3 * 4096
+        assert m.media_bytes("undo_snapshot") == 3 * idx.size * d * 4
+        assert m.media_bytes() > 2 * m.link_bytes()
+        assert mgr.stats["undo_stored_bytes"] <= mgr.stats["undo_raw_bytes"]
+        mgr.pool.close()
+    finally:
+        srv.shutdown(close_device=True)
+
+
+def test_committed_scan_is_single_round_trip(server, rng):
+    """The batched header scan: committed_steps()/gc() cost O(1) wire
+    round-trips, not one per slot."""
+    from repro.core.checkpoint.undo_log import UndoRing
+
+    dev = connect(server, tenant="scan")
+    ring = UndoRing(PoolAllocator(dev), max_logs=16,
+                    compress=COMPRESS)
+    for s in range(5):
+        ring.append(s, np.arange(4) + s, np.ones((4, 8), np.float32))
+    calls = []
+    orig = dev._request
+
+    def counting(hdr, body=b""):
+        calls.append(hdr["op"])
+        return orig(hdr, body)
+
+    dev._request = counting
+    try:
+        assert ring.committed_steps() == [0, 1, 2, 3, 4]
+        assert len(calls) == 1, f"scan used {len(calls)} RTTs: {calls}"
+        calls.clear()
+        ring.gc(keep_from=2)                 # scan + 2 clears (write+persist)
+        assert len(calls) <= 1 + 2 * 2
+    finally:
+        dev._request = orig
+    assert ring.committed_steps() == [2, 3, 4]
+
+
+def test_free_region_over_wire_releases_quota(server):
+    dev = connect(server, tenant="fr", quota=1 << 12)
+    a = PoolAllocator(dev)
+    a.domain("d").alloc("x", shape=(1 << 10,), dtype="uint8")
+    a.domain("d").alloc("y", shape=(1 << 10,), dtype="uint8")
+    with pytest.raises(QuotaExceededError):
+        a.domain("d").alloc("z", shape=(1 << 11) + 1024, dtype="uint8")
+    assert a.domain("d").free_region("x")        # free-then-alloc fits
+    a.domain("d").alloc("z", shape=(1 << 11,), dtype="uint8")
+    assert a.domain("d").get("x") is None
 
 
 # -- checkpoint stack against a surviving node --------------------------------
