@@ -1,6 +1,6 @@
 """Fault-tolerance demo over the emulated CXL/PMEM memory pool.
 
-Three drills, selected by the pool backend:
+Four drills, selected by the pool backend:
 
   * ``--pool-backend remote`` (default): TRUE disaggregation. Starts a
     standalone pool-server process (the memory node, pmem-backed), launches a
@@ -9,6 +9,15 @@ Three drills, selected by the pool backend:
     — then reconnects from the parent, recovers bit-identically (verified
     against a clean reference run), and finishes training against the same
     living server.
+  * ``--pool-backend sharded``: the multi-node pool. Starts ``--pool-shards``
+    (default 2) pool-server processes, spreads the checkpoint domains over
+    them (manifest + dense snapshots pinned onto a different node than the
+    embedding mirror + undo ring), then ``kill -9``s the memory node that
+    owns the MIRROR mid-run — the trainer dies with it — restarts that node
+    over its pmem image, reconnects the whole topology via POOL.json,
+    recovers bit-identically, and resumes. Prints per-shard counters and
+    checks the fused undo capture kept running on the owning shard (per-step
+    trainer link bytes stay <= idx + new_rows + O(header)).
   * ``--pool-backend pmem``: process death without a server. The trainer
     subprocess is SIGKILLed and recovery reopens the mmap'd pool image from
     disk, like a power-cycled PMEM module.
@@ -46,6 +55,7 @@ from repro.training import train_loop
 b = get_arch("dlrm-rm1", smoke=True)
 cc = CheckpointConfig(directory=%(ckpt)r, dense_interval=3,
                       pool_backend=%(backend)r, pool_addr=%(addr)r,
+                      pool_shards=%(shards)r, pool_placement=%(placement)r,
                       pool_tenant="trainer")
 tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01, checkpoint=cc)
 data = make_batches(b.model, 16, 0, seed=11)
@@ -59,10 +69,12 @@ train_loop.train(b.model, tc, data, 1000, relaxed=True, state=st,
 """
 
 
-def run_trainer_until_kill(backend: str, addr: str = "", min_steps: int = 12):
+def run_trainer_until_kill(backend: str, addr: str = "", min_steps: int = 12,
+                           shards: str = "", placement: str = "", kill=None):
     proc = subprocess.Popen(
         [sys.executable, "-c",
-         TRAINER % {"ckpt": CKPT, "backend": backend, "addr": addr}],
+         TRAINER % {"ckpt": CKPT, "backend": backend, "addr": addr,
+                    "shards": shards, "placement": placement}],
         stdout=subprocess.PIPE, text=True, cwd=REPO)
     steps_seen = 0
     for line in proc.stdout:
@@ -70,9 +82,19 @@ def run_trainer_until_kill(backend: str, addr: str = "", min_steps: int = 12):
         steps_seen += 1
         if steps_seen >= min_steps:
             break
-    proc.kill()                      # kill -9: no cleanup, no flush
-    proc.wait()
-    print(f"== SIGKILLed trainer after {steps_seen} reported steps ==")
+    if kill is None:
+        proc.kill()                  # kill -9: no cleanup, no flush
+        proc.wait()
+        print(f"== SIGKILLed trainer after {steps_seen} reported steps ==")
+    else:
+        kill()                       # kill -9 a MEMORY NODE instead
+        try:
+            proc.wait(timeout=120)   # the trainer dies of the node loss
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            proc.wait()
+        print(f"== trainer died after losing its memory node "
+              f"(exit {proc.returncode}) ==")
 
 
 def crash_pmem_subprocess():
@@ -87,19 +109,67 @@ def crash_remote_subprocess():
     os.makedirs(CKPT, exist_ok=True)
     addr = "unix:" + os.path.join(CKPT, "pool.sock")
     print(f"== starting pool-server (memory node) at {addr} ==")
-    server = subprocess.Popen(
-        [sys.executable, "-m", "repro.pool.server", "--addr", addr,
-         "--backend", "pmem", "--path", os.path.join(CKPT, "pool.img")],
-        stdout=subprocess.PIPE, text=True, cwd=REPO,
-        env={**os.environ, "PYTHONPATH": "src"})
-    line = server.stdout.readline().strip()
-    print(" ", line)
-    assert "listening" in line, f"server failed to start: {line}"
+    server = _start_node(addr, os.path.join(CKPT, "pool.img"))
     print("== launching trainer subprocess (remote pool tenant) ==")
     run_trainer_until_kill("remote", addr)
     assert server.poll() is None, "memory node must survive trainer death"
     print("== memory node still alive ==")
     return server, addr
+
+
+def _start_node(addr: str, img: str):
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.pool.server", "--addr", addr,
+         "--backend", "pmem", "--path", img],
+        stdout=subprocess.PIPE, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": "src"})
+    line = proc.stdout.readline().strip()
+    print(" ", line)
+    assert "listening" in line, f"node failed to start: {line}"
+    return proc
+
+
+def crash_sharded_subprocess(shards_arg: str):
+    """The multi-node drill: N memory nodes, domains spread across them,
+    kill -9 of the node owning the embedding mirror, restart over its
+    durable image — the topology recovers bit-identically."""
+    import signal as sg
+
+    from repro.pool import PoolTopology
+
+    os.makedirs(CKPT, exist_ok=True)
+    if shards_arg.strip().isdigit():
+        addrs = ["unix:" + os.path.join(CKPT, f"node{i}.sock")
+                 for i in range(int(shards_arg))]
+    else:
+        addrs = [a.strip() for a in shards_arg.split(",") if a.strip()]
+    assert len(addrs) >= 2, "the sharded drill needs >= 2 memory nodes"
+    print(f"== starting {len(addrs)} pool-servers (memory nodes) ==")
+    servers = [_start_node(addr, os.path.join(CKPT, f"node{i}.img"))
+               for i, addr in enumerate(addrs)]
+    topo = PoolTopology(shards=tuple(addrs))
+    hot = topo.place("embedding-mirror")
+    cold = (hot + 1) % len(addrs)
+    placement = f"manifest={cold},dense={cold}"
+    print(f"== mirror+undo-ring on node {hot}; manifest+dense pinned to "
+          f"node {cold} ==")
+
+    def kill_hot():
+        os.kill(servers[hot].pid, sg.SIGKILL)     # kill -9 the memory node
+        servers[hot].wait()
+        print(f"== kill -9'd memory node {hot} ({addrs[hot]}) ==")
+
+    print("== launching trainer subprocess (sharded pool tenant) ==")
+    run_trainer_until_kill("sharded", shards=",".join(addrs),
+                           placement=placement, kill=kill_hot)
+    for i, srv in enumerate(servers):
+        if i != hot:
+            assert srv.poll() is None, f"surviving node {i} must stay up"
+    print("== surviving memory nodes still alive ==")
+    servers[hot] = _start_node(addrs[hot], os.path.join(CKPT,
+                                                        f"node{hot}.img"))
+    print(f"== memory node {hot} restarted over its pmem image ==")
+    return servers
 
 
 def crash_dram_inprocess():
@@ -172,27 +242,35 @@ def reference_mirror(rec):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--pool-backend", choices=["dram", "pmem", "remote"],
+    ap.add_argument("--pool-backend",
+                    choices=["dram", "pmem", "remote", "sharded"],
                     default="remote")
+    ap.add_argument("--pool-shards", default="2",
+                    help="sharded drill: a node count, or a comma list of "
+                         "unix: addresses to bind the memory nodes at")
     args = ap.parse_args()
     shutil.rmtree(CKPT, ignore_errors=True)
 
     sys.path.insert(0, "src")
-    server = None
+    servers = []
     surviving_pool = None
     try:
         if args.pool_backend == "pmem":
             surviving_pool, _ = crash_pmem_subprocess()
         elif args.pool_backend == "remote":
             server, _ = crash_remote_subprocess()
+            servers = [server]
+        elif args.pool_backend == "sharded":
+            servers = crash_sharded_subprocess(args.pool_shards)
         else:
             surviving_pool = crash_dram_inprocess()
         run_recovery(args, surviving_pool)
     finally:
-        if server is not None:     # never leak the memory node on failure
+        for server in servers:     # never leak a memory node on failure
             server.terminate()
             server.wait()
-            print("== memory node shut down ==")
+        if servers:
+            print("== memory nodes shut down ==")
     print("fault-tolerance demo PASSED")
 
 
@@ -212,15 +290,21 @@ def run_recovery(args, surviving_pool):
           f"gap={rec.gap} rolled_back={rec.rolled_back} ==")
     assert rec.mirror_step >= 0
 
-    if args.pool_backend == "remote":
+    if args.pool_backend in ("remote", "sharded"):
         np.testing.assert_array_equal(rec.embed_rows, reference_mirror(rec))
         print(f"== recovered mirror is BIT-IDENTICAL to a clean replay "
               f"through step {rec.mirror_step} ==")
 
     b = get_arch("dlrm-rm1", smoke=True)
-    cc = CheckpointConfig(directory=CKPT, dense_interval=3,
+    sharded = args.pool_backend == "sharded"
+    cc = CheckpointConfig(directory=CKPT,
+                          # tier-E only while sharded so the measured resume
+                          # segment isolates the fused-capture link bytes
+                          dense_interval=0 if sharded else 3,
                           pool_backend=args.pool_backend,
                           pool_addr=getattr(rec.pool, "addr", ""),
+                          pool_shards=",".join(
+                              rec.pool.topology.shards) if sharded else "",
                           pool_tenant="trainer")
     tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01,
                      checkpoint=cc)
@@ -228,12 +312,27 @@ def run_recovery(args, surviving_pool):
     st, resume = recovery.resume_train_state(rec, init_fn(jax.random.PRNGKey(0)))
     mgr = CheckpointManager(b.model, cc, pool=rec.pool)
     mgr.init_mirror(st["embed"], step=rec.mirror_step)
+    if sharded:
+        rec.pool.reset_metrics()         # measure only the resumed tier-E
     data = make_batches(b.model, 16, 0, seed=11)
     _, losses = train_loop.train(b.model, tc, data, 10, relaxed=True,
                                  state=st, start_step=resume,
                                  ckpt_manager=mgr)
     print(f"== resumed at step {resume}, 10 more steps, "
           f"final loss {losses[-1]:.4f} ==")
+    if sharded:
+        mgr.flush()
+        m = mgr.pool.metrics
+        sent = mgr.stats["bytes_e"]      # sum of per-step idx + new_rows
+        assert m.link_bytes() <= sent + 10 * 4096, \
+            f"fused capture left the owning shard: link={m.link_bytes()}B " \
+            f"> operands {sent}B + headers"
+        print(f"== fused undo capture stayed on the owning shard: "
+              f"{m.link_bytes()}B link <= {sent}B operands + O(header) ==")
+        for i, snap in enumerate(mgr.pool.shard_metrics()):
+            print(f"  shard {i}: link={snap['link_bytes']}B "
+                  f"media={snap['media_bytes']}B "
+                  f"crashes={snap['crashes']}")
     print(mgr.pool.metrics.report())
 
 

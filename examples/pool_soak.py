@@ -13,11 +13,15 @@ barriers, run a short training with the two-tier checkpoint manager, then:
 
 and record the pool-metrics snapshot. The remote backend runs the same drill
 through a live pool-server (faults armed over the wire), so the whole
-protocol path soaks too. Results land in a JSON report (CI uploads it as an
-artifact); any cell failure exits non-zero.
+protocol path soaks too; the sharded backend spreads the checkpoint domains
+over ``--shards`` pmem-backed memory nodes and arms the schedule on every
+node — the shard owning the faulted domain takes the hit while the others
+keep serving, and recovery reconnects the whole topology. Results land in a
+JSON report (CI uploads it as an artifact); any cell failure exits non-zero.
 
     PYTHONPATH=src python examples/pool_soak.py \
-        --backends pmem,remote --seeds 4 --out soak_metrics.json
+        --backends pmem,remote,sharded --shards 2 --seeds 4 \
+        --out soak_metrics.json
 """
 import argparse
 import json
@@ -57,7 +61,7 @@ def build_ctx():
     return b, tc, data, init_fn, full_losses
 
 
-def one_cell(ctx, backend, seed, root, addr=None):
+def one_cell(ctx, backend, seed, root, addr=None, shards=None):
     """Run one soak cell; returns a result dict (raises on assertion
     failure)."""
     b, tc, data, init_fn, full_losses = ctx
@@ -68,6 +72,7 @@ def one_cell(ctx, backend, seed, root, addr=None):
     faults = FaultSchedule.seeded(seed, POINTS, every=STEPS - 2, kind=kind)
     cc = CheckpointConfig(directory=root, dense_interval=1,
                           pool_backend=backend, pool_addr=addr or "",
+                          pool_shards=",".join(shards or []),
                           pool_tenant=f"soak-{seed}")
     st0 = init_fn(jax.random.PRNGKey(tc.seed))
     mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"],
@@ -127,6 +132,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backends", default="pmem,remote")
     ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--shards", type=int, default=2,
+                    help="memory nodes per cell for the sharded backend")
     ap.add_argument("--out", default="soak_metrics.json")
     args = ap.parse_args(argv)
 
@@ -136,16 +143,29 @@ def main(argv=None):
         backend = backend.strip()
         for seed in range(args.seeds):
             work = tempfile.mkdtemp(prefix=f"soak_{backend}_{seed}_")
-            server = None
+            servers = []
             addr = None
+            shards = None
             try:
                 if backend == "remote":
                     dev = PmemPool(os.path.join(work, "pool.img"), 1 << 22)
-                    server = PoolServer(
-                        dev, "unix:" + os.path.join(work, "p.sock")).start()
-                    addr = server.addr
+                    servers.append(PoolServer(
+                        dev, "unix:" + os.path.join(work, "p.sock")).start())
+                    addr = servers[0].addr
+                elif backend == "sharded":
+                    # one pmem-backed memory node per shard: the seeded
+                    # schedule arms on EVERY node, so whichever shard owns
+                    # the faulted domain takes the hit while the others
+                    # keep serving
+                    for i in range(args.shards):
+                        dev = PmemPool(os.path.join(work, f"node{i}.img"),
+                                       1 << 22)
+                        servers.append(PoolServer(
+                            dev, "unix:" + os.path.join(
+                                work, f"n{i}.sock")).start())
+                    shards = [s.addr for s in servers]
                 cell = one_cell(ctx, backend, seed,
-                                os.path.join(work, "ck"), addr)
+                                os.path.join(work, "ck"), addr, shards)
                 results.append(cell)
                 print(f"soak[{backend} seed={seed}] OK: kind={cell['kind']} "
                       f"mirror@{cell['mirror_step']} "
@@ -156,7 +176,7 @@ def main(argv=None):
                                  "error": f"{type(e).__name__}: {e}"})
                 print(f"soak[{backend} seed={seed}] FAILED: {e}", flush=True)
             finally:
-                if server is not None:
+                for server in servers:
                     server.shutdown(close_device=True)
                 shutil.rmtree(work, ignore_errors=True)
 

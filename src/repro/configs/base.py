@@ -216,10 +216,13 @@ class CheckpointConfig:
     async_write: bool = True
     max_undo_logs: int = 64        # ring of undo logs kept before GC
     writer_deadline_s: float = 0.0 # 0 = no deadline (relaxed ckpt "stop" knob)
-    pool_backend: str = "pmem"     # repro.pool backend: pmem | dram | remote
+    pool_backend: str = "pmem"     # repro.pool backend: pmem | dram | remote | sharded
     pool_addr: str = ""            # remote backend: unix:/path or tcp:host:port
+    pool_shards: str = ""          # sharded backend: comma list of node addrs
+    pool_placement: str = ""       # sharded: explicit pins "dom=idx,dom=idx"
+                                   # (unpinned domains hash deterministically)
     pool_tenant: str = "default"   # remote backend: tenant namespace on the node
-    pool_quota: int = 0            # remote backend: byte quota (0 = unlimited)
+    pool_quota: int = 0            # remote/sharded: byte quota (per node)
     pool_compress: str = "zlib"    # pool-side compression: none | zlib | int8
                                    # (int8 is lossy — relaxed rollback only)
 

@@ -105,15 +105,25 @@ class CheckpointManager:
             self.pool = make_pool(
                 backend, path=os.path.join(self.root, "pool.img"),
                 capacity=capacity_hint, faults=self.faults, addr=addr,
-                tenant=tenant, quota=getattr(self.ccfg, "pool_quota", 0))
-            # POOL.json lets recovery reopen the same node: pmem by image
+                tenant=tenant, quota=getattr(self.ccfg, "pool_quota", 0),
+                shards=getattr(self.ccfg, "pool_shards", ""),
+                placement=getattr(self.ccfg, "pool_placement", ""))
+            # POOL.json lets recovery reopen the same node(s): pmem by image
             # path, remote by reconnecting to the surviving server under
             # the same tenant AND quota (a server restart re-registers the
-            # tenant from the reconnect handshake)
+            # tenant from the reconnect handshake). For a sharded pool it
+            # records the RESOLVED topology — ordered shard list + explicit
+            # pins — so recovery reconnects every node and re-derives the
+            # identical domain placement (a domain is never re-placed).
+            info = {"backend": backend, "addr": addr, "tenant": tenant,
+                    "quota": getattr(self.ccfg, "pool_quota", 0)}
+            if backend == "sharded":
+                topo = self.pool.topology
+                info["shards"] = list(topo.shards)
+                info["placement"] = {k: int(v)
+                                     for k, v in topo.pin.items()}
             store.write_json_atomic(
-                os.path.join(self.root, "POOL.json"),
-                {"backend": backend, "addr": addr, "tenant": tenant,
-                 "quota": getattr(self.ccfg, "pool_quota", 0)})
+                os.path.join(self.root, "POOL.json"), info)
         self._alloc = PoolAllocator(self.pool)
         self.manifest = JsonRegion.create(self._alloc.domain("manifest"),
                                           "manifest")

@@ -52,7 +52,8 @@ def open_pool(root: str,
     """Reopen the checkpoint pool for `root`. A surviving in-process device
     (dram backend, or an already-open pmem handle) takes precedence. A
     remote pool is reopened by reconnecting to the memory-node server that
-    outlived the dead trainer, under the same tenant."""
+    outlived the dead trainer, under the same tenant; a sharded pool
+    reconnects every node of the topology recorded in POOL.json."""
     if pool is not None:
         return pool
     info = store.read_json(os.path.join(root, "POOL.json"))
@@ -60,6 +61,18 @@ def open_pool(root: str,
         from repro.pool.remote import RemotePool
         return RemotePool(info["addr"], tenant=info.get("tenant", "default"),
                           quota=info.get("quota", 0))
+    if info["backend"] == "sharded":
+        # reconnect EVERY node of the recorded topology in order; placement
+        # is re-derived from the same (shards, pins) inputs, so every
+        # domain is found exactly where it was first placed
+        from repro.pool.sharded import PoolTopology, ShardedPool
+        topo = PoolTopology(
+            shards=tuple(info.get("shards") or ()),
+            pin={k: int(v)
+                 for k, v in (info.get("placement") or {}).items()})
+        return ShardedPool(list(topo.shards),
+                           tenant=info.get("tenant", "default"),
+                           quota=info.get("quota", 0), topology=topo)
     if info["backend"] != "pmem":
         raise PoolError(
             f"pool backend {info['backend']!r} is volatile across processes; "

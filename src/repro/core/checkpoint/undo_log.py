@@ -28,7 +28,10 @@ Ring growth is crash-safe by ordering: the new ring is allocated and every
 still-committed entry is carried over FIRST; the meta flip — the only
 durable commit point of the grow — happens LAST, and the old ring's COMMIT
 words are never touched. A crash anywhere mid-grow recovers the old ring
-with every committed entry intact.
+with every committed entry intact. Once the flip is durable the outgrown
+generation is freed (``undo-grow-free``); generations leaked by a crash in
+that window are reclaimed by the open-time sweep, which frees by name and
+so can never double-free.
 """
 from __future__ import annotations
 
@@ -67,14 +70,32 @@ class UndoRing:
         else:
             self.slot_bytes = 0
             self.gen = -1
+        self._sweep_stale_rings()
 
     # -- layout --------------------------------------------------------------
+    def _sweep_stale_rings(self):
+        """Reclaim SUPERSEDED ring generations (gen < live): the outgrown
+        ring a crash between meta flip and free leaked. By-name frees make
+        this naturally double-free safe — a name already freed (by the
+        crashed grow, or by a previous sweep) is a directory miss, never a
+        second release of someone else's region. Half-built FUTURE
+        generations (a grow that never flipped meta) are left in place:
+        the next grow reuses the region, and the ``_alloc_ring`` scrub
+        clears their stale COMMIT words before reuse."""
+        for name in sorted(self.domain.regions().keys()):
+            if not name.startswith("ring"):
+                continue
+            gen = name[4:]
+            if gen.lstrip("-").isdigit() and int(gen) < self.gen:
+                self.domain.free_region(name, point="undo-grow-free")
+
     def _alloc_ring(self, gen: int, need: int) -> tuple[Region, int]:
         """Allocate ring<gen> sized for `need`-byte entries. Does NOT touch
         meta — the caller decides when the flip commits. A ring<gen> left
         behind by a grow that crashed before its meta flip is scrubbed
-        (COMMIT words cleared + persisted) before reuse, so its stale —
-        possibly already-GC'd — entries can never resurrect."""
+        (COMMIT words cleared + persisted, one ``slot_clear`` op) before
+        reuse, so its stale — possibly already-GC'd — entries can never
+        resurrect."""
         slot_bytes = -(-int(need * 1.5) // _ALIGN) * _ALIGN
         name = f"ring{gen}"
         stale = self.domain.get(name) is not None
@@ -82,13 +103,7 @@ class UndoRing:
             name, shape=(self.nslots * slot_bytes,),
             dtype="uint8", point="undo-grow-alloc" if gen else "superblock")
         if stale:
-            for i in range(self.nslots):
-                self.device.write(ring.off + i * slot_bytes + uc.COMMIT_OFF,
-                                  uc.COMMIT_CLEAR, tag="undo")
-            # one wide-clipped barrier: persist flushes (and meters) only
-            # the dirty ranges inside the window — the nslots 4-byte COMMIT
-            # words just written, not the whole ring
-            self.device.persist(ring.off, self.nslots * slot_bytes,
+            self.nmp.slot_clear(ring, list(range(self.nslots)), slot_bytes,
                                 point="undo-grow-scrub")
         return ring, slot_bytes
 
@@ -163,14 +178,18 @@ class UndoRing:
 
     def _grow(self, need: int):
         """Entry outgrew the slot: allocate a bigger ring, carry the
-        still-committed entries over verbatim, and only then flip meta (old
-        ring space is leaked — emulator). Entries whose payload CRC fails
+        still-committed entries over verbatim, flip meta, and only then
+        free the outgrown generation. Entries whose payload CRC fails
         (torn before the crash) are dropped, same as recovery does.
         Ordering is the crash-safety argument: until the meta flip
         persists, recovery still reads the old ring — whose COMMIT words
-        were never cleared — so a crash anywhere mid-grow loses nothing."""
+        were never cleared — so a crash anywhere mid-grow loses nothing;
+        the old region is released only once the flip is durable (a crash
+        between flip and free leaks it for one restart, and the open-time
+        sweep reclaims it — by name, so it can never double-free)."""
         entries = [(s, buf) for s in self.committed_steps()
                    if (buf := self._read_slot_verbatim(s)) is not None]
+        old_gen = self.gen
         new_gen = self.gen + 1
         new_ring, new_slot_bytes = self._alloc_ring(new_gen, need)
         self.ring, self.gen, self.slot_bytes = (new_ring, new_gen,
@@ -178,6 +197,9 @@ class UndoRing:
         for step, buf in entries:
             uc.write_slot(self.device, self._slot_off(step), buf)
         self._flip_meta()
+        if old_gen >= 0:
+            self.domain.free_region(f"ring{old_gen}",
+                                    point="undo-grow-free")
 
     # -- read path -----------------------------------------------------------
     def _read_header(self, step_slot: int):
@@ -220,13 +242,13 @@ class UndoRing:
 
     def gc(self, keep_from: int):
         """Invalidate committed entries older than keep_from (both tiers
-        durable — paper step 4)."""
-        for slot, hdr in self._scan_headers():
-            if hdr[0] < keep_from:
-                off = self.ring.off + slot * self.slot_bytes
-                self.device.write(off + uc.COMMIT_OFF, uc.COMMIT_CLEAR,
-                                  tag="undo")
-                self.device.persist(off + uc.COMMIT_OFF, 4, point="undo-gc")
+        durable — paper step 4). One ``slot_headers`` scan plus one batched
+        ``slot_clear`` — O(1) wire round-trips however many expired."""
+        expired = [slot for slot, hdr in self._scan_headers()
+                   if hdr[0] < keep_from]
+        if expired:
+            self.nmp.slot_clear(self.ring, expired, self.slot_bytes,
+                                point="undo-gc")
 
 
 def open_ring(device: PoolDevice, max_logs: int = 64) -> UndoRing:

@@ -33,12 +33,20 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--strict", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--pool-backend", choices=["dram", "pmem", "remote"],
+    ap.add_argument("--pool-backend",
+                    choices=["dram", "pmem", "remote", "sharded"],
                     default="pmem",
                     help="emulated memory-pool backend for checkpoints")
     ap.add_argument("--pool-addr", default="",
                     help="remote backend: pool-server address "
                          "(unix:/path or tcp:host:port)")
+    ap.add_argument("--pool-shards", default="",
+                    help="sharded backend: comma-separated pool-server "
+                         "addresses (one per memory node)")
+    ap.add_argument("--pool-placement", default="",
+                    help="sharded backend: explicit domain pins, e.g. "
+                         "'manifest=1,dense=1' (unpinned domains hash "
+                         "deterministically over the shard list)")
     ap.add_argument("--pool-tenant", default="default",
                     help="remote backend: tenant namespace on the pool node")
     ap.add_argument("--pool-quota", type=int, default=0,
@@ -59,6 +67,9 @@ def main():
     if args.pool_backend == "remote" and not args.pool_addr:
         ap.error("--pool-backend remote needs --pool-addr "
                  "(start one: python -m repro.pool.server --addr ...)")
+    if args.pool_backend == "sharded" and not args.pool_shards:
+        ap.error("--pool-backend sharded needs --pool-shards addr1,addr2,... "
+                 "(one pool server per memory node)")
 
     bundle = get_arch(args.arch, smoke=args.smoke)
     cfg = bundle.model
@@ -67,6 +78,8 @@ def main():
                             dense_interval=args.dense_interval,
                             pool_backend=args.pool_backend,
                             pool_addr=args.pool_addr,
+                            pool_shards=args.pool_shards,
+                            pool_placement=args.pool_placement,
                             pool_tenant=args.pool_tenant,
                             pool_quota=args.pool_quota,
                             pool_compress=args.pool_compress)

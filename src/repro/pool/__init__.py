@@ -14,6 +14,9 @@ Layering (bottom up):
   metrics.py   traffic + energy counters (feeds benchmarks/fig13_energy.py)
   remote.py    RemotePool client + length-prefixed wire protocol
   server.py    standalone memory-node process serving many trainer tenants
+  sharded.py   ShardedPool: N memory nodes behind one device, deterministic
+               domain->shard placement (PoolTopology), per-shard fault and
+               power-event drills, aggregated-yet-attributable metrics
 """
 from repro.pool.allocator import JsonRegion, PoolAllocator, Region
 from repro.pool.device import (BACKENDS, DramPool, PmemPool, PoolDevice,
@@ -24,14 +27,15 @@ from repro.pool.metrics import PoolMetrics
 from repro.pool.nmp import EmbeddingPoolMirror, NmpQueue
 from repro.pool.remote import (PoolConnectionError, RemotePool, WireError,
                                parse_addr)
+from repro.pool.sharded import PoolTopology, ShardedPool
 
 __all__ = [
     "BACKENDS", "DramPool", "EmbeddingPoolMirror", "FaultEvent",
     "FaultSchedule", "InjectedCrash", "JsonRegion", "NmpQueue", "PmemPool",
     "PoolAllocator", "PoolConnectionError", "PoolDevice", "PoolError",
-    "PoolMetrics", "QuotaExceededError", "Region",
-    "RemotePool", "TenantIsolationError", "WireError", "make_pool",
-    "parse_addr",
+    "PoolMetrics", "PoolTopology", "QuotaExceededError", "Region",
+    "RemotePool", "ShardedPool", "TenantIsolationError", "WireError",
+    "make_pool", "parse_addr",
 ]
 # "PoolServer" is importable too, via the lazy __getattr__ below (kept out
 # of __all__ so static checkers don't flag the deferred name)

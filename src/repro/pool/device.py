@@ -280,14 +280,15 @@ class PmemPool(PoolDevice):
         super().close()
 
 
-BACKENDS = ("dram", "pmem", "remote")
+BACKENDS = ("dram", "pmem", "remote", "sharded")
 
 
 def make_pool(backend: str, *, path: Optional[str] = None,
               capacity: int = 1 << 20,
               faults: Optional[FaultSchedule] = None,
               addr: Optional[str] = None, tenant: str = "default",
-              quota: int = 0) -> PoolDevice:
+              quota: int = 0, shards=None,
+              placement=None) -> PoolDevice:
     if backend == "dram":
         return DramPool(capacity, faults)
     if backend == "pmem":
@@ -300,6 +301,17 @@ def make_pool(backend: str, *, path: Optional[str] = None,
                             "(unix:/path or tcp:host:port)")
         from repro.pool.remote import RemotePool
         dev = RemotePool(addr, tenant=tenant, quota=quota)
+        if faults is not None:
+            dev.faults = faults
+        return dev
+    if backend == "sharded":
+        if not shards:
+            raise PoolError("sharded backend needs shard addrs "
+                            "(--pool-shards addr1,addr2,...)")
+        from repro.pool.sharded import PoolTopology, ShardedPool
+        topo = PoolTopology.parse(shards, placement)
+        dev = ShardedPool(list(topo.shards), tenant=tenant, quota=quota,
+                          topology=topo)
         if faults is not None:
             dev.faults = faults
         return dev

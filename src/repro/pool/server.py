@@ -383,6 +383,11 @@ class PoolServer:
                 compress=hdr.get("compress", "zlib"),
                 apply_point=point or "mirror-apply")
             return {"shape": None, "stats": stats}, b""
+        elif kind == "slot_clear":
+            n = self._nmp.slot_clear(region, hdr["slots"],
+                                     int(hdr["slot_bytes"]),
+                                     point=point or "undo-gc")
+            return {"shape": None, "stats": {"cleared": n}}, b""
         elif kind == "blob_put":
             stored = self._nmp.blob_put(
                 region, body[pos:], compress=hdr.get("compress", "zlib"),

@@ -1,0 +1,510 @@
+"""Multi-node sharded pool — N memory nodes behind one ``PoolDevice``.
+
+``ShardedPool`` composes several backends (remote ``RemotePool`` clients or
+in-process devices) into one device the rest of the stack uses unchanged.
+The trick is a *global address space*: shard ``i`` owns the offset window
+``[i * SHARD_SPAN, (i+1) * SHARD_SPAN)``, so every ``Region`` handed out by
+the (proxy-mode) allocator carries a global offset that encodes its owning
+shard. Raw ``read``/``write``/``persist`` and every near-memory op route by
+offset; domain-level ops (alloc/get/free) route by *placement*.
+
+Placement (``PoolTopology``) is deterministic by construction — a pure
+CRC32 hash of the domain name over the shard count, overridable per domain
+with explicit pins — so the same topology + the same domain names always
+produce the same assignment, across processes and across restarts
+(recovery must never re-place a domain). ``undo-log`` aliases to
+``embedding-mirror`` by default so the fused ``undo_log_append`` op finds
+its mirror and its log slot on the SAME node; near-memory execution stays
+near the right memory. If a placement (or an explicit pin) does separate
+the two regions of a fused op, the op degrades to a correct-but-chatty
+host-driven path (snapshot from the mirror shard, slot write to the log
+shard) instead of failing — the crash window keeps its named fault point.
+
+A domain never spans shards: its superblock entry, its regions, and all
+their bytes live wholly inside the owning shard's own allocator directory.
+Tenancy therefore stays per shard (namespaced keys, quotas, owned-range
+isolation are enforced by each node exactly as for a single node), and
+metrics stay attributable: ``metrics`` aggregates every shard's counters
+into one ``PoolMetrics`` while ``shard_metrics()`` keeps the per-node view.
+
+Fault injection and power events are per shard: ``crash_shard(i)`` /
+``set_shard_faults(i, schedule)`` drill one node while the others keep
+serving; the plain ``crash()``/``faults`` forms fan out to every shard
+(the all-nodes power event).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.pool.device import PoolDevice, PoolError, make_pool
+from repro.pool.faults import FaultSchedule, InjectedCrash
+from repro.pool.metrics import OpStat, PoolMetrics
+
+# Each shard's offset window in the global address space. Large enough that
+# no single emulated node ever grows past it; small enough that global
+# offsets stay exact python ints (they are never packed into float64).
+SHARD_SPAN = 1 << 44
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolTopology:
+    """Deterministic domain -> shard placement over an ordered shard list.
+
+    ``shards`` is the ordered tuple of node addresses (order is identity:
+    shard i is always the i-th address — recovery reconnects by index).
+    ``pin`` maps a domain name to an explicit shard index; everything else
+    hashes. ``ALIAS`` makes co-location a property of the *policy*, not of
+    luck: ``undo-log`` places wherever ``embedding-mirror`` places unless
+    pinned apart explicitly.
+    """
+
+    shards: tuple = ()
+    pin: dict = dataclasses.field(default_factory=dict)
+
+    ALIAS = {"undo-log": "embedding-mirror"}
+
+    @property
+    def nshards(self) -> int:
+        return len(self.shards)
+
+    def place(self, domain: str) -> int:
+        if self.nshards == 0:
+            raise PoolError("empty topology: no shards")
+        if domain in self.pin:
+            idx = int(self.pin[domain])
+            if not 0 <= idx < self.nshards:
+                raise PoolError(f"pin {domain!r} -> shard {idx} out of "
+                                f"range (have {self.nshards} shards)")
+            return idx
+        key = self.ALIAS.get(domain, domain)
+        if key != domain and key in self.pin:
+            return self.place(key)
+        return zlib.crc32(key.encode()) % self.nshards
+
+    def to_json(self) -> dict:
+        return {"shards": list(self.shards),
+                "pin": {k: int(v) for k, v in self.pin.items()}}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "PoolTopology":
+        return cls(shards=tuple(obj.get("shards") or ()),
+                   pin={k: int(v) for k, v in (obj.get("pin") or {}).items()})
+
+    @classmethod
+    def parse(cls, shards: Union[str, Sequence[str]],
+              placement: Union[str, dict, None] = None) -> "PoolTopology":
+        """Build from CLI-ish inputs: ``shards`` is a list of addresses or
+        one comma-separated string; ``placement`` is a dict or a
+        ``dom=idx,dom=idx`` string of explicit pins."""
+        if isinstance(shards, str):
+            shards = [s.strip() for s in shards.split(",") if s.strip()]
+        pin: dict = {}
+        if isinstance(placement, dict):
+            pin = {k: int(v) for k, v in placement.items()}
+        elif placement:
+            for part in placement.split(","):
+                part = part.strip()
+                if not part:
+                    continue
+                dom, _, idx = part.partition("=")
+                if not idx.lstrip("-").isdigit():
+                    raise PoolError(f"bad placement spec {part!r} "
+                                    f"(want domain=shard_index)")
+                pin[dom.strip()] = int(idx)
+        return cls(shards=tuple(shards), pin=pin)
+
+
+class _Shard:
+    """One member node: a device plus its domain-op surface. For a remote
+    device the proxy ops go over the wire to the node's tenant-scoped
+    allocator; for an in-process device a local ``PoolAllocator`` owns the
+    node's directory (rebuilt on crash, exactly like the server does)."""
+
+    def __init__(self, index: int, device: PoolDevice, tenant: str,
+                 quota: int):
+        self.index = index
+        self.device = device
+        self.tenant = tenant
+        self.quota = quota
+        self.remote = bool(getattr(device, "remote", False))
+        if not self.remote:
+            from repro.pool.allocator import PoolAllocator
+            self.alloc = PoolAllocator(device, tenant=tenant or None,
+                                       quota=quota)
+            from repro.pool.nmp import NmpQueue
+            self.nmp = NmpQueue(device)
+
+    def rebuild(self):
+        """After a power-cycle the in-process allocator view may be ahead of
+        media — rebuild it from the durable directory (server parity)."""
+        if not self.remote:
+            from repro.pool.allocator import PoolAllocator
+            self.alloc = PoolAllocator(self.device, tenant=self.tenant or None,
+                                       quota=self.quota)
+
+    # -- domain ops (entry dicts, shard-local offsets) -----------------------
+    def alloc_region(self, domain, name, shape, dtype, point) -> dict:
+        if self.remote:
+            return self.device.alloc_region(domain, name, shape, dtype, point)
+        r = self.alloc._alloc(domain, name, shape, dtype, point)
+        return {"off": r.off, "nbytes": r.nbytes, "dtype": r.dtype,
+                "shape": list(r.shape)}
+
+    def get_region(self, domain, name) -> Optional[dict]:
+        if self.remote:
+            return self.device.get_region(domain, name)
+        r = self.alloc._get(domain, name)
+        return None if r is None else {"off": r.off, "nbytes": r.nbytes,
+                                       "dtype": r.dtype,
+                                       "shape": list(r.shape)}
+
+    def list_regions(self, domain) -> dict:
+        if self.remote:
+            return self.device.list_regions(domain)
+        return {n: {"off": r.off, "nbytes": r.nbytes, "dtype": r.dtype,
+                    "shape": list(r.shape)}
+                for n, r in self.alloc._regions(domain).items()}
+
+    def free_domain(self, domain, point) -> bool:
+        if self.remote:
+            return self.device.free_remote_domain(domain, point)
+        return self.alloc.free_domain(domain, point=point)
+
+    def free_region(self, domain, name, point) -> bool:
+        if self.remote:
+            return self.device.free_remote_region(domain, name, point)
+        return self.alloc._free_region(domain, name, point)
+
+    # -- metrics --------------------------------------------------------------
+    def metrics_snapshot(self) -> dict:
+        if self.remote:
+            return self.device.metrics_snapshot()
+        return self.device.metrics.snapshot()
+
+    def reset_metrics(self):
+        if self.remote:
+            self.device.reset_metrics()
+        else:
+            self.device.metrics.reset()
+
+
+def merge_metrics(snapshots: Sequence[dict],
+                  device_name: str = "sharded") -> PoolMetrics:
+    """Sum per-shard counter snapshots into one ``PoolMetrics`` view."""
+    agg = PoolMetrics(device_name=device_name)
+    for snap in snapshots:
+        m = PoolMetrics.from_snapshot(snap)
+        for side_a, side_m in ((agg.media, m.media), (agg.link, m.link)):
+            for kind, s in side_m.items():
+                t = side_a.setdefault(kind, OpStat())
+                t.ops += s.ops
+                t.nbytes += s.nbytes
+                t.time_s += s.time_s
+        agg.ndp_time_s += m.ndp_time_s
+        agg.comp_raw_bytes += m.comp_raw_bytes
+        agg.comp_stored_bytes += m.comp_stored_bytes
+        agg.comp_time_s += m.comp_time_s
+        for kind, (raw, stored) in m.comp.items():
+            ent = agg.comp.setdefault(kind, [0, 0])
+            ent[0] += raw
+            ent[1] += stored
+        agg.dropped_flushes += m.dropped_flushes
+        agg.torn_writes += m.torn_writes
+        agg.crashes += m.crashes
+    return agg
+
+
+class ShardedPool(PoolDevice):
+    """One ``PoolDevice`` over N member nodes (the multi-node pool).
+
+    ``shards`` may be node addresses (``unix:``/``tcp:`` strings — each
+    becomes a ``RemotePool`` tenant connection) or already-open in-process
+    ``PoolDevice`` instances (tests, dram drills). Mixing is allowed.
+    """
+
+    backend = "sharded"
+    remote = True        # PoolAllocator must proxy domain ops through us
+
+    def __init__(self, shards: Sequence, tenant: str = "default",
+                 quota: int = 0, pin: Optional[dict] = None,
+                 topology: Optional[PoolTopology] = None):
+        if topology is None:
+            addrs = [s if isinstance(s, str) else
+                     getattr(s, "addr", f"<local:{i}>")
+                     for i, s in enumerate(shards)]
+            topology = PoolTopology(shards=tuple(addrs),
+                                    pin=dict(pin or {}))
+        if not shards:
+            raise PoolError("sharded backend needs at least one shard")
+        self.topology = topology
+        self.tenant = tenant
+        self.closed = False
+        self._faults: Optional[FaultSchedule] = None
+        self.shards: list[_Shard] = []
+        for i, spec in enumerate(shards):
+            if isinstance(spec, str):
+                dev = make_pool("remote", addr=spec, tenant=tenant,
+                                quota=quota)
+            else:
+                dev = spec
+            self.shards.append(_Shard(i, dev, tenant, quota))
+        # fail fast on a policy that strands the fused op cross-shard
+        # *silently*: an explicit pin may separate mirror and log (the op
+        # falls back to the host-driven path), but that is a choice the
+        # topology records, never an accident of hashing
+        if (self.topology.place("undo-log")
+                != self.topology.place("embedding-mirror")
+                and "undo-log" not in self.topology.pin):
+            raise PoolError("topology separates undo-log from "
+                            "embedding-mirror without an explicit pin")
+
+    # -- address space ---------------------------------------------------------
+    @property
+    def nshards(self) -> int:
+        return len(self.shards)
+
+    def shard_of(self, off: int) -> tuple[_Shard, int]:
+        """Global offset -> (owning shard, shard-local offset)."""
+        idx, local = divmod(int(off), SHARD_SPAN)
+        if not 0 <= idx < self.nshards:
+            raise PoolError(f"offset {off} outside every shard window")
+        return self.shards[idx], local
+
+    def _globalize(self, idx: int, ent: dict) -> dict:
+        return {**ent, "off": int(ent["off"]) + idx * SHARD_SPAN}
+
+    @property
+    def capacity(self) -> int:
+        return self.nshards * SHARD_SPAN
+
+    def ensure(self, nbytes: int):
+        pass        # growth is per shard, driven by each node's allocator
+
+    # -- raw data path ---------------------------------------------------------
+    def read(self, off: int, nbytes: int, tag: str = "read") -> np.ndarray:
+        shard, local = self.shard_of(off)
+        return shard.device.read(local, nbytes, tag=tag)
+
+    def view(self, off: int, nbytes: int) -> np.ndarray:
+        shard, local = self.shard_of(off)
+        return shard.device.view(local, nbytes)
+
+    def write(self, off: int, data, tag: str = "write"):
+        shard, local = self.shard_of(off)
+        shard.device.write(local, data, tag=tag)
+
+    def mark_dirty(self, off: int, nbytes: int):
+        if nbytes > 0:
+            shard, local = self.shard_of(off)
+            shard.device.mark_dirty(local, nbytes)
+
+    def persist(self, off: Optional[int] = None,
+                nbytes: Optional[int] = None, point: str = "persist"):
+        if off is None:
+            for shard in self.shards:      # global barrier: every node
+                shard.device.persist(point=point)
+            return
+        shard, local = self.shard_of(off)
+        shard.device.persist(local, nbytes, point=point)
+
+    # -- power events / faults -------------------------------------------------
+    def crash(self):
+        """All-nodes power event (the correlated-failure drill)."""
+        for i in range(self.nshards):
+            self.crash_shard(i)
+
+    def crash_shard(self, i: int):
+        shard = self.shards[i]
+        shard.device.crash()
+        shard.rebuild()
+
+    @property
+    def faults(self) -> Optional[FaultSchedule]:
+        return self._faults
+
+    @faults.setter
+    def faults(self, schedule: Optional[FaultSchedule]):
+        # fan out to every node: each shard counts its own occurrences (a
+        # point fires on the n-th hit at the node that serves it)
+        for shard in self.shards:
+            if shard.remote:
+                shard.device.faults = schedule
+            else:
+                shard.device.faults = schedule if schedule is None else \
+                    FaultSchedule(events=schedule.events)
+        self._faults = schedule
+
+    def set_shard_faults(self, i: int, schedule: Optional[FaultSchedule]):
+        """Arm (or clear) a schedule on ONE node — the partial-failure
+        drills: a torn write or power loss on a single memory node."""
+        self.shards[i].device.faults = schedule
+
+    def close(self):
+        if not self.closed:
+            self.closed = True
+            for shard in self.shards:
+                try:
+                    shard.device.close()
+                except PoolError:
+                    pass
+
+    # -- metrics ---------------------------------------------------------------
+    @property
+    def metrics(self) -> PoolMetrics:
+        return merge_metrics([s for s in self.shard_metrics()
+                              if not s.get("unreachable")])
+
+    def shard_metrics(self) -> list[dict]:
+        """Per-node counter snapshots, index-aligned with the topology. A
+        node that cannot be reached (killed, partitioned, fenced) yields
+        ``{"unreachable": True, ...}`` instead of failing the whole view —
+        the surviving shards' counters must stay observable mid-drill."""
+        out = []
+        for s in self.shards:
+            try:
+                out.append(s.metrics_snapshot())
+            except PoolError as e:
+                out.append({"unreachable": True, "error": str(e)})
+        return out
+
+    def metrics_snapshot(self, scope: str = "tenant") -> dict:
+        if scope == "shards":
+            return {str(i): snap
+                    for i, snap in enumerate(self.shard_metrics())}
+        return self.metrics.snapshot()
+
+    def reset_metrics(self):
+        for shard in self.shards:
+            shard.reset_metrics()
+
+    # -- allocator proxy (PoolAllocator routes through these) ------------------
+    def alloc_region(self, domain: str, name: str, shape, dtype: str,
+                     point: str = "superblock") -> dict:
+        i = self.topology.place(domain)
+        ent = self.shards[i].alloc_region(domain, name, shape, dtype, point)
+        return self._globalize(i, ent)
+
+    def get_region(self, domain: str, name: str) -> Optional[dict]:
+        i = self.topology.place(domain)
+        ent = self.shards[i].get_region(domain, name)
+        return None if ent is None else self._globalize(i, ent)
+
+    def list_regions(self, domain: str) -> dict:
+        i = self.topology.place(domain)
+        return {n: self._globalize(i, e)
+                for n, e in self.shards[i].list_regions(domain).items()}
+
+    def free_remote_domain(self, domain: str,
+                           point: str = "superblock") -> bool:
+        return self.shards[self.topology.place(domain)] \
+            .free_domain(domain, point)
+
+    def free_remote_region(self, domain: str, name: str,
+                           point: str = "superblock") -> bool:
+        return self.shards[self.topology.place(domain)] \
+            .free_region(domain, name, point)
+
+    # -- near-memory ops -------------------------------------------------------
+    def _localize_region(self, region, shard: _Shard, local_off: int):
+        """Rebind a global-offset Region to the owning shard's device."""
+        return dataclasses.replace(region, device=shard.device,
+                                   off=local_off)
+
+    def nmp(self, kind: str, region, idx=None, rows=None, blob=None,
+            combine: str = "sum", point: Optional[str] = None,
+            log_region=None, **extra):
+        """Route one near-memory op to the shard owning the target region,
+        so near-memory execution stays near the right memory. The fused
+        ``undo_log_append`` needs its mirror and its log slot on ONE node;
+        when an explicit pin separates them it degrades to the host-driven
+        two-region path (correct, but the undo image crosses the link)."""
+        shard, local = self.shard_of(region.off)
+        if kind == "undo_log_append":
+            log_shard, log_local = self.shard_of(log_region.off)
+            if log_shard is not shard:
+                return self._cross_shard_undo_append(
+                    region, log_region, idx=idx, rows=rows, point=point,
+                    **extra)
+            extra["slot_off"] = int(extra["slot_off"]) \
+                - shard.index * SHARD_SPAN
+            log_region = self._localize_region(log_region, log_shard,
+                                               log_local)
+        region = self._localize_region(region, shard, local)
+        if shard.remote:
+            return shard.device.nmp(kind, region, idx=idx, rows=rows,
+                                    blob=blob, combine=combine, point=point,
+                                    log_region=log_region, **extra)
+        return self._local_nmp(shard, kind, region, idx=idx, rows=rows,
+                               blob=blob, combine=combine, point=point,
+                               log_region=log_region, **extra)
+
+    @staticmethod
+    def _local_nmp(shard: _Shard, kind, region, *, idx, rows, blob, combine,
+                   point, log_region, **extra):
+        q = shard.nmp
+        if kind == "gather":
+            return q.gather(region, idx)
+        if kind == "bag_gather":
+            return q.bag_gather(region, idx, combine=combine)
+        if kind == "undo_snapshot":
+            return q.undo_snapshot(region, idx)
+        if kind == "slot_headers":
+            return q.slot_headers(region, int(extra["nslots"]),
+                                  int(extra["slot_bytes"]),
+                                  int(extra["hdr_bytes"]))
+        if kind == "slot_clear":
+            return {"cleared": q.slot_clear(region, extra["slots"],
+                                            int(extra["slot_bytes"]),
+                                            point=point or "undo-gc")}
+        if kind == "row_update":
+            return q.row_update(region, idx, rows, point=point)
+        if kind == "scatter_add":
+            return q.scatter_add(region, idx, rows, point=point)
+        if kind == "undo_log_append":
+            return q.undo_log_append(
+                region, log_region, step=int(extra["step"]),
+                slot_off=int(extra["slot_off"]),
+                slot_bytes=int(extra["slot_bytes"]), idx=idx, new_rows=rows,
+                compress=extra.get("compress", "zlib"),
+                apply_point=point or "mirror-apply")
+        if kind == "blob_put":
+            return {"stored": q.blob_put(region, blob,
+                                         compress=extra.get("compress",
+                                                            "zlib"),
+                                         point=point or "dense-blob")}
+        raise PoolError(f"unknown nmp kind {kind!r}")
+
+    def _cross_shard_undo_append(self, mirror, log, *, idx, rows, point,
+                                 step, slot_off, slot_bytes,
+                                 compress="zlib"):
+        """Pinned-apart fallback: same commit protocol, same fault points,
+        but host-driven — the pre-update image crosses the link from the
+        mirror shard and lands on the log shard. Chatty by design; the
+        default placement never takes this path."""
+        from repro.pool import undo_codec as uc
+        from repro.pool.nmp import NmpQueue
+
+        q = NmpQueue(self)           # routes each piece to its owner
+        old = q.undo_snapshot(mirror, idx)
+        buf, stored_len, raw_len = uc.pack_slot(step, idx, old, None,
+                                                mode=compress,
+                                                slot_bytes=slot_bytes)
+        uc.write_slot(self, int(slot_off), buf)
+        stats = {"stored": stored_len, "raw": raw_len}
+        if rows is None:
+            return stats
+        f = self._shard_faults_for(mirror)
+        if f is not None and \
+                f.hit("tier_e.between-commit-and-apply") == "crash-after":
+            raise InjectedCrash("tier_e.between-commit-and-apply",
+                                f.counts["tier_e.between-commit-and-apply"])
+        q.row_update(mirror, idx, rows, point=point or "mirror-apply")
+        return stats
+
+    def _shard_faults_for(self, region) -> Optional[FaultSchedule]:
+        shard, _ = self.shard_of(region.off)
+        return shard.device.faults if not shard.remote else self._faults

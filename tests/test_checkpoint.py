@@ -31,15 +31,22 @@ _SERVERS = []    # in-process memory nodes; daemon threads, die with pytest
 
 def setup_run(tmp, arch="tinyllama-1.1b", dense_interval=1, backend="pmem",
               compress=COMPRESS):
-    addr = ""
+    addr, shards = "", ""
     if backend == "remote":
         from repro.pool import PoolServer
         srv = PoolServer(DramPool(1 << 20), f"unix:{tmp}.sock").start()
         _SERVERS.append(srv)
         addr = srv.addr
+    elif backend == "sharded":
+        from repro.pool import PoolServer
+        srvs = [PoolServer(DramPool(1 << 20),
+                           f"unix:{tmp}.s{i}.sock").start()
+                for i in range(2)]
+        _SERVERS.extend(srvs)
+        shards = ",".join(s.addr for s in srvs)
     cc = CheckpointConfig(directory=tmp, dense_interval=dense_interval,
                           pool_backend=backend, pool_addr=addr,
-                          pool_compress=compress)
+                          pool_shards=shards, pool_compress=compress)
     tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
     b = get_arch(arch, smoke=True)
     data = make_batches(b.model, 4, 16, seed=3)
@@ -105,10 +112,10 @@ def test_crash_between_commit_and_apply(tmp_path, backend):
     if backend == "dram":
         mgr.pool.crash()                   # power loss: cache dropped
         rec = recovery.recover(tmp, pool=mgr.pool)
-    elif backend == "remote":
-        mgr.pool.crash()                   # memory-node power-cycle...
+    elif backend in ("remote", "sharded"):
+        mgr.pool.crash()                   # memory-node power-cycle(s)...
         mgr.pool.close()                   # ...plus trainer death
-        rec = recovery.recover(tmp)        # reconnect to the living node
+        rec = recovery.recover(tmp)        # reconnect to the living node(s)
     else:
         mgr.pool.close()                   # process death: reopen from disk
         rec = recovery.recover(tmp)

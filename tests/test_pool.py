@@ -14,7 +14,7 @@ from repro.core.checkpoint.undo_log import UndoRing
 from repro.pool import (DramPool, EmbeddingPoolMirror, FaultEvent,
                         FaultSchedule, InjectedCrash, JsonRegion, NmpQueue,
                         PmemPool, PoolAllocator, PoolError, PoolServer,
-                        RemotePool, make_pool)
+                        RemotePool, ShardedPool, make_pool)
 from repro.pool import compress as pc
 from repro.pool import undo_codec as uc
 
@@ -41,6 +41,19 @@ def mkpool(backend, tmp_path, capacity=1 << 18, faults=None):
         if faults is not None:
             dev.faults = faults
         return dev
+    if backend == "sharded":
+        # two in-process memory nodes behind one device: the full suite
+        # must hold with domains spread over several servers
+        _SOCK_SEQ[0] += 1
+        seq = _SOCK_SEQ[0]
+        srvs = [PoolServer(DramPool(capacity),
+                           f"unix:{tmp_path}/p{seq}s{i}.sock").start()
+                for i in range(2)]
+        dev = ShardedPool([s.addr for s in srvs])
+        dev._test_servers = srvs   # keep the nodes alive with the device
+        if faults is not None:
+            dev.faults = faults
+        return dev
     raise ValueError(f"unknown backend {backend!r}")
 
 
@@ -59,7 +72,8 @@ def test_persist_survives_crash_unpersisted_lost(backend, tmp_path, rng):
     np.testing.assert_array_equal(r.read_array(), v2)   # cache is coherent
     dev.crash()
     np.testing.assert_array_equal(r.read_array(), v1)   # durable image only
-    assert dev.metrics.crashes == 1
+    # sharded counts one crash per power-cycled node (2-shard fixture)
+    assert dev.metrics.crashes == (2 if backend == "sharded" else 1)
 
 
 def test_pmem_reopen_across_handles(tmp_path, rng):
@@ -342,6 +356,61 @@ def test_regrow_after_crashed_grow_cannot_resurrect_stale_entries(tmp_path,
     ring2.append(2, *big)                   # same need -> same ring1 region
     assert ring2.committed_steps() == [2], \
         "stale carried-over entries resurrected from the crashed grow"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_grow_reclaims_old_generation_ring(backend, tmp_path, rng):
+    """Once the meta flip is durable, the outgrown generation's region is
+    freed — the directory never accumulates dead rings across grows."""
+    dev = mkpool(backend, tmp_path)
+    a = PoolAllocator(dev)
+    ring = UndoRing(a, max_logs=3, compress=COMPRESS)
+    for s in range(2):
+        ring.append(s, np.arange(4) + s, np.ones((4, 8), np.float32))
+    ring.append(2, np.arange(512), np.ones((512, 8), np.float32))  # grows
+    names = sorted(a.domain("undo-log").regions().keys())
+    assert names == ["meta", f"ring{ring.gen}"], names
+    assert ring.committed_steps() == [0, 1, 2]
+
+
+@pytest.mark.parametrize("window", ["before-free", "during-free"])
+def test_crash_window_around_grow_free_no_double_free(tmp_path, rng, window):
+    """A crash between the meta flip and the old-ring free (or mid-free,
+    tearing the directory write) leaks the old generation for one restart;
+    the open-time sweep then reclaims it exactly once. Frees go by NAME,
+    so the retry can never release the live ring or any region allocated
+    since — the no-double-free argument."""
+    dev = mkpool("dram", tmp_path)
+    a = PoolAllocator(dev)
+    ring = UndoRing(a, max_logs=3, compress=COMPRESS)
+    rows = {}
+    for s in range(2):
+        rows[s] = rng.standard_normal((4, 8)).astype(np.float32)
+        ring.append(s, np.arange(4) + s, rows[s])
+    if window == "before-free":
+        dev.faults = FaultSchedule.crash_at("undo-grow-free", occurrence=1)
+    else:
+        dev.faults = FaultSchedule.torn_at("undo-grow-free", occurrence=1)
+    with pytest.raises(InjectedCrash):     # entry outgrows slot -> grow
+        ring.append(2, np.arange(512), np.ones((512, 8), np.float32))
+    dev.faults = None
+    dev.crash()                            # power loss in the free window
+    a2 = PoolAllocator(dev)
+    ring2 = UndoRing(a2, max_logs=3, compress=COMPRESS)   # sweep reclaims
+    dom = a2.domain("undo-log")
+    assert sorted(dom.regions().keys()) == ["meta", f"ring{ring2.gen}"]
+    assert ring2.committed_steps() == [0, 1]   # carried entries intact
+    for s in range(2):
+        idx, got, _ = ring2.read(s)
+        np.testing.assert_array_equal(idx, np.arange(4) + s)
+        np.testing.assert_allclose(got, rows[s], rtol=1e-6)
+    # the already-reclaimed name is a directory miss, never a second release
+    assert not dom.free_region("ring0")
+    # the grown ring is live: the big entry now fits without another grow
+    gen = ring2.gen
+    ring2.append(2, np.arange(512), np.ones((512, 8), np.float32))
+    assert ring2.gen == gen
+    assert ring2.committed_steps() == [0, 1, 2]
 
 
 def test_compress_none_leaves_engine_idle(tmp_path, rng):

@@ -392,11 +392,39 @@ def test_committed_scan_is_single_round_trip(server, rng):
         assert ring.committed_steps() == [0, 1, 2, 3, 4]
         assert len(calls) == 1, f"scan used {len(calls)} RTTs: {calls}"
         calls.clear()
-        ring.gc(keep_from=2)                 # scan + 2 clears (write+persist)
-        assert len(calls) <= 1 + 2 * 2
+        ring.gc(keep_from=2)                 # scan + ONE batched slot_clear
+        assert len(calls) == 2, f"gc used {len(calls)} RTTs: {calls}"
     finally:
         dev._request = orig
     assert ring.committed_steps() == [2, 3, 4]
+
+
+def test_gc_round_trips_constant_in_expired_count(server, rng):
+    """GC acceptance: O(1) wire round-trips however many slots expired —
+    the per-slot commit-clears ride in one ``slot_clear`` op."""
+    from repro.core.checkpoint.undo_log import UndoRing
+
+    dev = connect(server, tenant="gcbatch")
+    ring = UndoRing(PoolAllocator(dev), max_logs=24, compress=COMPRESS)
+    for s in range(20):
+        ring.append(s, np.arange(4) + s, np.ones((4, 8), np.float32))
+    calls = []
+    orig = dev._request
+
+    def counting(hdr, body=b""):
+        calls.append(hdr["op"])
+        return orig(hdr, body)
+
+    dev._request = counting
+    try:
+        ring.gc(keep_from=19)                # 19 expired entries, 2 RTTs
+        assert len(calls) == 2, f"gc used {len(calls)} RTTs: {calls}"
+        calls.clear()
+        ring.gc(keep_from=19)                # nothing expired: scan only
+        assert len(calls) == 1, f"empty gc used {len(calls)} RTTs: {calls}"
+    finally:
+        dev._request = orig
+    assert ring.committed_steps() == [19]
 
 
 def test_free_region_over_wire_releases_quota(server):

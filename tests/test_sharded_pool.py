@@ -1,0 +1,410 @@
+"""Multi-node sharded pool: deterministic placement, per-shard tenancy and
+metrics attribution, fused-op routing to the owning shard, and the seeded
+crash/partition matrix — {kill one shard mid-step, torn write on one shard,
+partition during fused append, all-shards restart} x {2, 3 shards} — with
+bit-identical recovery asserted against a clean reference replay and the
+surviving shards' counters proven untouched by the drill."""
+import os
+import zlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import CheckpointConfig, TrainConfig
+from repro.core.checkpoint import recovery
+from repro.core.checkpoint.manager import CheckpointManager
+from repro.core.checkpoint.undo_log import UndoRing
+from repro.data.synthetic import make_batches
+from repro.pool import (DramPool, FaultSchedule, InjectedCrash, NmpQueue,
+                        PmemPool, PoolAllocator, PoolError, PoolServer,
+                        PoolTopology, ShardedPool, TenantIsolationError)
+from repro.pool.sharded import SHARD_SPAN
+from repro.training import train_loop
+
+COMPRESS = os.environ.get("REPRO_POOL_COMPRESS", "zlib")
+STEPS = 6
+SCENARIOS = ("kill-shard", "torn-shard", "partition", "all-restart")
+MANAGER_DOMAINS = ("embedding-mirror", "undo-log", "manifest", "dense")
+
+
+def _occ(scenario: str, nshards: int) -> int:
+    """Seeded-but-deterministic drill step: pure hash, replays exactly."""
+    return zlib.crc32(f"{scenario}:{nshards}".encode()) % 3 + 2
+
+
+def shard_index(off: int) -> int:
+    return int(off) // SHARD_SPAN
+
+
+# ---------------------------------------------------------------------------
+# placement determinism
+# ---------------------------------------------------------------------------
+
+
+def test_placement_is_pure_and_stable():
+    """Same topology + same domain names => same assignment, every time —
+    the property recovery leans on (a domain is never re-placed)."""
+    t1 = PoolTopology(shards=("tcp:a:1", "tcp:b:1", "tcp:c:1"))
+    t2 = PoolTopology(shards=("tcp:a:1", "tcp:b:1", "tcp:c:1"))
+    for dom in MANAGER_DOMAINS + ("embedding-ops", "scratch"):
+        assert t1.place(dom) == t2.place(dom)
+        assert 0 <= t1.place(dom) < 3
+    # undo-log co-locates with embedding-mirror by policy, not by luck
+    assert t1.place("undo-log") == t1.place("embedding-mirror")
+    # pins override the hash; the json roundtrip preserves the policy
+    t3 = PoolTopology(shards=("tcp:a:1", "tcp:b:1"), pin={"manifest": 1})
+    assert t3.place("manifest") == 1
+    assert PoolTopology.from_json(t3.to_json()) == t3
+    # parse() accepts the CLI forms
+    t4 = PoolTopology.parse("tcp:a:1,tcp:b:1", "manifest=1,dense=0")
+    assert t4.pin == {"manifest": 1, "dense": 0}
+    with pytest.raises(PoolError):
+        PoolTopology(shards=("tcp:a:1",), pin={"manifest": 5}).place("manifest")
+
+
+def test_pinning_undo_log_away_from_mirror_needs_explicit_pin():
+    """Hashing can never silently strand the fused op cross-shard; only an
+    explicit pin may separate mirror and log (and then the op falls back
+    to the host-driven path — covered below)."""
+    dev = ShardedPool([DramPool(1 << 18), DramPool(1 << 18)],
+                      pin={"undo-log": 0, "embedding-mirror": 1})
+    assert dev.topology.place("undo-log") != \
+        dev.topology.place("embedding-mirror")
+
+
+def test_cross_shard_fallback_append_is_correct(rng):
+    """An explicit pin that separates mirror and log degrades the fused
+    append to the host-driven two-region path: same commit protocol, same
+    recovery semantics, just chatty."""
+    dev = ShardedPool([DramPool(1 << 18), DramPool(1 << 18)],
+                      pin={"undo-log": 0, "embedding-mirror": 1})
+    a = PoolAllocator(dev)
+    tab = rng.standard_normal((64, 8)).astype(np.float32)
+    mirror = a.domain("embedding-mirror").alloc("rows", shape=tab.shape,
+                                                dtype="float32")
+    mirror.write_array(tab)
+    mirror.persist(point="load")
+    ring = UndoRing(a, max_logs=4, compress=COMPRESS)
+    assert shard_index(ring.meta.region.off) != shard_index(mirror.off)
+    idx = np.unique(rng.integers(0, 64, 16))
+    new = rng.standard_normal((idx.size, 8)).astype(np.float32)
+    ring.log_and_apply(0, mirror, idx, new)
+    got_idx, got_rows, _ = ring.read(0)
+    np.testing.assert_array_equal(got_idx, idx)
+    np.testing.assert_array_equal(got_rows, tab[idx])
+    dev.crash()
+    np.testing.assert_array_equal(mirror.read_array()[idx], new)
+
+
+def _start_servers(tmp_path, n, backend="pmem", tag=""):
+    servers = []
+    for i in range(n):
+        if backend == "pmem":
+            dev = PmemPool(str(tmp_path / f"node{tag}{i}.img"), 1 << 21)
+        else:
+            dev = DramPool(1 << 21)
+        servers.append(PoolServer(
+            dev, f"unix:{tmp_path}/n{tag}{i}.sock").start())
+    return servers
+
+
+def test_manager_domains_spread_and_recovery_never_replaces(tmp_path):
+    """End to end: the manager places its four domains per the topology
+    (manifest + dense pinned onto a different node than the mirror), and a
+    fresh process (recovery via POOL.json) finds every domain at exactly
+    the offsets it was first placed at — on the same shards."""
+    servers = _start_servers(tmp_path, 2)
+    try:
+        addrs = [s.addr for s in servers]
+        mirror_shard = PoolTopology(shards=tuple(addrs)) \
+            .place("embedding-mirror")
+        other = 1 - mirror_shard
+        ck = str(tmp_path / "ck")
+        cc = CheckpointConfig(
+            directory=ck, dense_interval=1, pool_backend="sharded",
+            pool_shards=",".join(addrs),
+            pool_placement=f"manifest={other},dense={other}",
+            pool_compress=COMPRESS)
+        b = get_arch("tinyllama-1.1b", smoke=True)
+        tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
+        data = make_batches(b.model, 4, 16, seed=3)
+        init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+        st0 = init_fn(jax.random.PRNGKey(tc.seed))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+        train_loop.train(b.model, tc, data, 3, relaxed=True, state=st0,
+                         ckpt_manager=mgr)
+        mgr.flush()
+        assert shard_index(mgr.mirror_region.off) == mirror_shard
+        assert shard_index(mgr.manifest.region.off) == other
+        placed = {}
+        alloc = PoolAllocator(mgr.pool)
+        for dom in MANAGER_DOMAINS:
+            for name, r in alloc.domain(dom).regions().items():
+                placed[(dom, name)] = r.off
+        mgr.pool.close()                       # trainer death
+
+        rec = recovery.recover(ck)             # fresh topology from POOL.json
+        assert rec.mirror_step == 2
+        alloc2 = PoolAllocator(rec.pool)
+        for dom in MANAGER_DOMAINS:
+            for name, r in alloc2.domain(dom).regions().items():
+                assert placed[(dom, name)] == r.off, \
+                    f"{dom}/{name} re-placed: {placed[(dom, name)]} -> {r.off}"
+        rec.pool.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
+
+
+# ---------------------------------------------------------------------------
+# tenancy + metrics attribution per shard
+# ---------------------------------------------------------------------------
+
+
+def test_cross_tenant_isolation_enforced_per_shard(tmp_path, rng):
+    servers = _start_servers(tmp_path, 2, backend="dram")
+    try:
+        addrs = [s.addr for s in servers]
+        # one domain pinned on each node: the isolation check must hold on
+        # whichever shard the victim's bytes actually live
+        pool_a = ShardedPool(addrs, tenant="a", pin={"d0": 0, "d1": 1})
+        alloc_a = PoolAllocator(pool_a)
+        regions = {}
+        for dom in ("d0", "d1"):
+            r = alloc_a.domain(dom).alloc("x", shape=(64,), dtype="float32")
+            r.write_array(rng.standard_normal(64).astype(np.float32))
+            regions[dom] = r
+        assert shard_index(regions["d0"].off) == 0
+        assert shard_index(regions["d1"].off) == 1
+        eve = ShardedPool(addrs, tenant="eve", pin={"d0": 0, "d1": 1})
+        for dom, r in regions.items():
+            with pytest.raises(TenantIsolationError):
+                eve.read(r.off, r.nbytes)
+            with pytest.raises(TenantIsolationError):
+                eve.write(r.off, np.zeros(8, np.uint8))
+            with pytest.raises(TenantIsolationError):
+                NmpQueue(eve).gather(r, np.array([0]))
+        # eve's own (namespaced) allocations work on both shards
+        for dom in ("d0", "d1"):
+            re = PoolAllocator(eve).domain(dom).alloc("x", shape=(4,),
+                                                      dtype="float32")
+            assert re.off != regions[dom].off
+        pool_a.close()
+        eve.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
+
+
+def test_metrics_aggregate_and_stay_attributable(tmp_path, rng):
+    """The one-device metrics view sums every node, the per-shard view
+    keeps them apart, and tenant attribution survives sharding: a tenant
+    that did nothing reads zeros even while its neighbor hammers."""
+    servers = _start_servers(tmp_path, 2, backend="dram")
+    try:
+        addrs = [s.addr for s in servers]
+        worker = ShardedPool(addrs, tenant="worker", pin={"d0": 0, "d1": 1})
+        idle = ShardedPool(addrs, tenant="idle")
+        alloc = PoolAllocator(worker)
+        for dom in ("d0", "d1"):
+            r = alloc.domain(dom).alloc("x", shape=(256,), dtype="float32")
+            r.write_array(rng.standard_normal(256).astype(np.float32))
+            r.persist(point="p")
+        per_shard = worker.shard_metrics()
+        assert len(per_shard) == 2
+        assert all(s["media_bytes"] > 0 for s in per_shard)
+        agg = worker.metrics
+        assert agg.media_bytes() == sum(s["media_bytes"] for s in per_shard)
+        assert agg.link_bytes() == sum(s["link_bytes"] for s in per_shard)
+        assert idle.metrics.media_bytes() == 0      # attribution intact
+        worker.close()
+        idle.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
+
+
+def test_tier_e_link_bytes_bounded_on_sharded_pool(tmp_path, rng):
+    """Acceptance: with the default placement the fused undo capture runs
+    on the shard owning the mirror+log, so per-step trainer link bytes stay
+    <= idx + new_rows + O(header) across the WHOLE pool."""
+    servers = _start_servers(tmp_path, 2, backend="dram")
+    try:
+        addrs = [s.addr for s in servers]
+        cc = CheckpointConfig(directory=str(tmp_path / "ck"),
+                              dense_interval=0, pool_backend="sharded",
+                              pool_shards=",".join(addrs),
+                              pool_compress=COMPRESS)
+        b = get_arch("tinyllama-1.1b", smoke=True)
+        tc = TrainConfig(checkpoint=cc)
+        init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+        st0 = init_fn(jax.random.PRNGKey(0))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+        d = mgr.mirror_region.shape[-1]
+        nrows = mgr.mirror_region.shape[0]
+        idx = np.unique(rng.integers(0, nrows, 32)).astype(np.int64)
+        new = rng.standard_normal((idx.size, d)).astype(np.float32)
+        mgr._do_tier_e(0, idx, new)                 # warmup (ring creation)
+        mgr.pool.reset_metrics()
+        sent = 0
+        for step in (1, 2, 3):
+            mgr._do_tier_e(step, idx, new)
+            sent += idx.nbytes + new.nbytes
+        m = mgr.pool.metrics
+        assert m.link_bytes() <= sent + 3 * 4096
+        assert m.media_bytes("undo_snapshot") == 3 * idx.size * d * 4
+        assert m.media_bytes() > 2 * m.link_bytes()
+        mgr.pool.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
+
+
+# ---------------------------------------------------------------------------
+# the crash/partition matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ref_ctx(tmp_path_factory):
+    """One clean reference run on a dram pool: per-step mirror snapshots
+    (the bit-identical oracle) plus uninterrupted losses for the tail."""
+    b = get_arch("tinyllama-1.1b", smoke=True)
+    root = str(tmp_path_factory.mktemp("sharded_ref"))
+    cc = CheckpointConfig(directory=root, dense_interval=1,
+                          pool_backend="dram", pool_compress=COMPRESS)
+    tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
+    data = make_batches(b.model, 4, 16, seed=3)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    _, full_losses = train_loop.train(b.model, tc, data, STEPS + 3,
+                                     relaxed=True)
+    st = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st["embed"])
+    mirrors = {}
+    state = st
+    for n in range(STEPS):
+        state, _ = train_loop.train(b.model, tc, data, 1, relaxed=True,
+                                    state=state, start_step=n,
+                                    ckpt_manager=mgr)
+        mgr.flush()
+        mirrors[n] = np.array(mgr.mirror_rows)
+    return b, tc, data, init_fn, mirrors, full_losses
+
+
+def _sharded_cc(root, addrs):
+    return CheckpointConfig(directory=root, dense_interval=1,
+                            pool_backend="sharded",
+                            pool_shards=",".join(addrs),
+                            pool_compress=COMPRESS)
+
+
+def _train_expect_failure(b, tc, cc, data, init_fn, upto, inject):
+    """Run the trainer; call inject(mgr) after `upto` clean steps; keep
+    training until the writer's failure surfaces. Returns the manager."""
+    st0 = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+    state, _ = train_loop.train(b.model, tc, data, upto, relaxed=True,
+                                state=st0, ckpt_manager=mgr)
+    mgr.flush()
+    inject(mgr)
+    with pytest.raises((RuntimeError, InjectedCrash, PoolError)):
+        train_loop.train(b.model, tc, data, STEPS - upto, relaxed=True,
+                         state=state, start_step=upto, ckpt_manager=mgr)
+        mgr.flush()
+    return mgr
+
+
+def _recover_and_resume(ref, root, resume_steps=3):
+    b, tc, data, init_fn, mirrors, full_losses = ref
+    rec = recovery.recover(root)
+    assert rec.mirror_step >= 0
+    np.testing.assert_array_equal(rec.embed_rows, mirrors[rec.mirror_step])
+    fresh = init_fn(jax.random.PRNGKey(tc.seed))
+    st, resume = recovery.resume_train_state(rec, fresh)
+    cc = CheckpointConfig(directory=root, dense_interval=1,
+                          pool_backend="sharded", pool_compress=COMPRESS)
+    mgr = CheckpointManager(b.model, cc, pool=rec.pool)
+    mgr.init_mirror(st["embed"], step=rec.mirror_step)
+    _, tail = train_loop.train(b.model, tc, data, resume_steps, relaxed=True,
+                               state=st, start_step=resume, ckpt_manager=mgr)
+    mgr.flush()
+    ref_tail = np.asarray(full_losses[resume:resume + resume_steps])
+    if rec.gap == 0:
+        np.testing.assert_allclose(np.asarray(tail), ref_tail,
+                                   rtol=1e-5, atol=1e-6)
+    else:
+        assert np.isfinite(np.asarray(tail)).all()
+    return rec, mgr
+
+
+@pytest.mark.parametrize("nshards", [2, 3])
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_sharded_fault_matrix(tmp_path, ref_ctx, scenario, nshards):
+    b, tc, data, init_fn, mirrors, full_losses = ref_ctx
+    servers = _start_servers(tmp_path, nshards)
+    addrs = [s.addr for s in servers]
+    root = str(tmp_path / "ck")
+    cc = _sharded_cc(root, addrs)
+    topo = PoolTopology(shards=tuple(addrs))
+    hot = topo.place("embedding-mirror")     # the shard the drill targets
+    upto = _occ(scenario, nshards)
+    survivors = [i for i in range(nshards) if i != hot]
+    try:
+        if scenario == "all-restart":
+            # clean run, then every node power-cycles (correlated failure)
+            st0 = init_fn(jax.random.PRNGKey(tc.seed))
+            mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+            train_loop.train(b.model, tc, data, STEPS, relaxed=True,
+                             state=st0, ckpt_manager=mgr)
+            mgr.flush()
+            mgr.pool.close()
+            for i, s in enumerate(servers):
+                s.shutdown(close_device=True)
+                servers[i] = PoolServer(
+                    PmemPool.open(str(tmp_path / f"node{i}.img")),
+                    addrs[i]).start()
+            rec, mgr2 = _recover_and_resume(ref_ctx, root)
+            assert rec.mirror_step == STEPS - 1
+            mgr2.pool.close()
+            return
+
+        pre_kill = {}
+
+        def inject(mgr):
+            for i in survivors:
+                pre_kill[i] = mgr.pool.shard_metrics()[i]
+            if scenario == "kill-shard":
+                # kill -9 of one memory node: its unpersisted cache dies
+                servers[hot].shutdown(close_device=True)
+            elif scenario == "torn-shard":
+                # a torn mirror-apply persist on ONE node only
+                mgr.pool.set_shard_faults(
+                    hot, FaultSchedule.torn_at("mirror-apply", occurrence=1))
+            elif scenario == "partition":
+                # connection drop: the next fused append hits a dead socket
+                mgr.pool.shards[hot].device._sock.close()
+
+        mgr = _train_expect_failure(b, tc, cc, data, init_fn, upto, inject)
+        if scenario == "torn-shard":
+            mgr.pool.crash_shard(hot)        # power loss on the torn node
+        # surviving shards: counters never reset, no fault tallies bleed over
+        for i in survivors:
+            snap = mgr.pool.shard_metrics()[i]
+            assert snap["torn_writes"] == 0 and snap["crashes"] == 0, \
+                f"drill on shard {hot} bled into shard {i}"
+            assert snap["media_bytes"] >= pre_kill[i]["media_bytes"]
+        mgr.pool.close()
+        if scenario == "kill-shard":         # the node restarts on its image
+            servers[hot] = PoolServer(
+                PmemPool.open(str(tmp_path / f"node{hot}.img")),
+                addrs[hot]).start()
+        rec, mgr2 = _recover_and_resume(ref_ctx, root)
+        if scenario == "torn-shard":
+            assert rec.rolled_back           # COMMITted undo entry restored it
+        assert rec.mirror_step >= upto - 1
+        mgr2.pool.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
