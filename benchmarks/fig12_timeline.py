@@ -1,31 +1,57 @@
 """Paper Fig. 12: hardware-resource utilization timelines for CXL-D, CXL-B,
-CXL (RM1). Emits the segment list + derived utilization fractions."""
+CXL (RM1). Emits the segment list + derived utilization fractions.
+
+``--calibrate-from-pool`` re-derives the same utilization rows with the CXL
+segments driven by measured ``repro.pool`` counters (the fig11 measured
+batch feeding ``engine.calibrate_from_pool``), printed as
+``fig12.calibrated.*`` rows."""
 from __future__ import annotations
 
-from repro.sim.engine import simulate
+import argparse
+
+from repro.sim.engine import (calibrate_from_pool, clear_pool_calibration,
+                              simulate)
 from repro.sim.models_rm import RMS
 
 
-def rows():
+def rows(prefix: str = "fig12"):
     out = []
     for system in ("CXL-D", "CXL-B", "CXL"):
         r = simulate(system, RMS["RM1"])
         T = r.batch_time
         for comp in ("gpu", "mem", "ckpt", "link"):
             busy = sum(s.end - s.start for s in r.trace if s.component == comp)
-            out.append((f"fig12.{system}.{comp}_util_pct",
+            out.append((f"{prefix}.{system}.{comp}_util_pct",
                         100 * busy / T, f"batch_ms={T*1e3:.3f}"))
     # the relaxation effect: CXL's mem+ckpt utilization rises, batch shrinks
     d = simulate("CXL-D", RMS["RM1"]).batch_time
     c = simulate("CXL", RMS["RM1"]).batch_time
-    out.append(("fig12.batch_time_reduction_pct", 100 * (1 - c / d),
+    out.append((f"{prefix}.batch_time_reduction_pct", 100 * (1 - c / d),
                 "CXL vs CXL-D, RM1"))
     return out
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--calibrate-from-pool", action="store_true",
+                    help="also print fig12.calibrated.* rows with the CXL "
+                         "segments driven by measured repro.pool counters")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny measured-batch config for the calibration run")
+    args = ap.parse_args(argv)
     for name, val, extra in rows():
         print(f"{name},{val:.4f},{extra}")
+    if args.calibrate_from_pool:
+        from fig11_breakdown import measure_pool_metrics
+        m = (measure_pool_metrics(dim=8, n_tables=4, rows_per=256, batch=32,
+                                  n_sparse=4)
+             if args.smoke else measure_pool_metrics())
+        cal = calibrate_from_pool(m)
+        print(f"# calibrated from pool[{m.device_name}]: " + " ".join(
+            f"{k}={v:.4g}" for k, v in sorted(cal.items())))
+        for name, val, extra in rows("fig12.calibrated"):
+            print(f"{name},{val:.4f},{extra}")
+        clear_pool_calibration()
     # human-readable timeline
     for system in ("CXL-D", "CXL-B", "CXL"):
         r = simulate(system, RMS["RM1"])

@@ -25,62 +25,25 @@ from repro.sim.energy import energy_table
 from repro.sim.models_rm import RMS
 
 
-def _mk_table(rng, shape):
-    """Embedding-like (not max-entropy) values: quantised mantissas, the
-    compressible structure trained tables actually have."""
-    return (rng.integers(-512, 512, shape) / 256.0).astype(np.float32)
-
-
 def measured_rows(dim: int = 32, n_tables: int = 20, rows_per: int = 2048,
                   batch: int = 256, n_sparse: int = 8):
-    """One RM1-shaped batch per backend x capture mode; counter-based rows."""
+    """One RM1-shaped batch per backend x capture mode; counter-based rows.
+    The measurement rig is shared with the fig11/fig12 calibration path
+    (``repro.sim.calibration.measured_pool_batch``) so every figure quotes
+    the same batch protocol."""
     import shutil
     import tempfile
 
-    from repro.core.checkpoint.undo_log import UndoRing
-    from repro.pool import (DramPool, EmbeddingPoolMirror, PmemPool,
-                            PoolAllocator)
+    from repro.sim.calibration import measured_pool_batch
     out = []
     tmpdir = tempfile.mkdtemp(prefix="fig13_pool_")
     for backend in ("dram", "pmem"):
         cells = {}
         for mode in ("wire", "pool"):
-            if backend == "dram":
-                dev = DramPool(capacity=n_tables * rows_per * dim * 8)
-            else:
-                dev = PmemPool(os.path.join(tmpdir, f"measure-{mode}.pool"),
-                               capacity=n_tables * rows_per * dim * 8)
-            rng = np.random.default_rng(0)
-            table = _mk_table(rng, (n_tables, rows_per, dim))
-            mir = EmbeddingPoolMirror(dev, table)
-            ring = UndoRing(PoolAllocator(dev), max_logs=4,
-                            compress="none" if mode == "wire" else "zlib")
-            ids = rng.integers(0, rows_per, (batch, n_tables, n_sparse))
-            flat_idx = np.unique(ids + np.arange(n_tables)[None, :, None]
-                                 * rows_per)
-            flat = table.reshape(-1, dim)
-            new_rows = (flat[flat_idx] * 0.999).astype(np.float32)
-            # warmup sizes the ring so growth stays out of the window
-            ring.append(0, flat_idx, flat[flat_idx])
-            dev.metrics.reset()      # count the batch, not the warmup/load
-
-            reduced = mir.bag_lookup(ids)                 # near-memory reduce
-            if mode == "wire":
-                # before: image out over the link, logged from the host.
-                # device.write only meters media, so charge the write-back
-                # leg (idx + old rows crossing back in) explicitly — the
-                # round-trip the fused op exists to kill
-                old = mir.nmp.undo_snapshot(mir.region, flat_idx)
-                ring.append(1, flat_idx, old)
-                dev.metrics.record_link("link_in",
-                                        flat_idx.nbytes + old.nbytes)
-                mir.nmp.row_update(mir.region, flat_idx, new_rows,
-                                   point="mirror-apply")
-            else:
-                # after: fused server-side capture + pool-side compression
-                ring.log_and_apply(1, mir.region, flat_idx, new_rows)
-            assert reduced.shape == (batch, n_tables, dim)
-            m = dev.metrics
+            m = measured_pool_batch(
+                backend, mode, dim=dim, n_tables=n_tables,
+                rows_per=rows_per, batch=batch, n_sparse=n_sparse,
+                path=os.path.join(tmpdir, f"measure-{mode}.pool"))
             cells[mode] = {"energy": m.energy()["total"],
                            "link": m.link_bytes(), "media": m.media_bytes(),
                            "comp": m.comp_ratio()}
@@ -94,7 +57,6 @@ def measured_rows(dim: int = 32, n_tables: int = 20, rows_per: int = 2048,
             out.append((f"{pre}.link_media_ratio",
                         cells[mode]["link"] / max(1, cells[mode]["media"]),
                         "near-memory ops keep raw rows off the link"))
-            dev.close()
         out.append((f"fig13.measured.{backend}.pool.undo_comp_ratio",
                     cells["pool"]["comp"],
                     "stored/raw, pool-side zlib on undo payloads"))

@@ -248,6 +248,9 @@ def main():
     ap.add_argument("--pool-shards", default="2",
                     help="sharded drill: a node count, or a comma list of "
                          "unix: addresses to bind the memory nodes at")
+    ap.add_argument("--rebalance-high", type=float, default=0.75,
+                    help="sharded drill: high watermark for the rebalance "
+                         "act (used/capacity fraction)")
     args = ap.parse_args()
     shutil.rmtree(CKPT, ignore_errors=True)
 
@@ -264,7 +267,7 @@ def main():
             servers = crash_sharded_subprocess(args.pool_shards)
         else:
             surviving_pool = crash_dram_inprocess()
-        run_recovery(args, surviving_pool)
+        run_recovery(args, surviving_pool, servers)
     finally:
         for server in servers:     # never leak a memory node on failure
             server.terminate()
@@ -274,7 +277,158 @@ def main():
     print("fault-tolerance demo PASSED")
 
 
-def run_recovery(args, surviving_pool):
+def rebalance_act(args, b, tc, data, state, start_step, mgr, servers,
+                  init_fn):
+    """The live-migration act on the resumed sharded trainer: overfill the
+    mirror-owning shard past the high watermark (pinned ballast — never
+    auto-migrated — pushes it over), let the RebalancePolicy propose moving
+    the mirror group, ``kill -9`` the migration DESTINATION mid-copy,
+    restart it over its pmem image, recover (open-time sweep reclaims the
+    partial copy), and let the retriggered policy finish the move — mirror
+    and its aliased undo-log in the SAME epoch — then finish training with
+    bit-identical recovery and the fused-append link-bytes bound intact."""
+    import signal as sg
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import CheckpointConfig, TrainConfig
+    from repro.core.checkpoint import recovery
+    from repro.core.checkpoint.manager import CheckpointManager
+    from repro.pool import PoolAllocator, RebalancePolicy
+    from repro.training import train_loop
+
+    pool = mgr.pool
+    addrs = list(pool.placement.shards)
+    hot = pool.placement.place("embedding-mirror")
+    high = args.rebalance_high
+    print(f"== REBALANCE ACT: overfill shard {hot} (mirror home) past the "
+          f"{high:.2f} watermark ==")
+    # ballast is PINNED to the hot shard: explicit pins are operator intent
+    # and the policy never auto-migrates them — the mirror group must move
+    pool.placement = pool.placement.with_pin("ballast", hot)
+    mgr.record_placement()
+    snap = pool.shard_metrics()[hot]
+    need = int(high * snap["capacity_bytes"] - snap["used_bytes"]) \
+        + (64 << 10)
+    headroom = snap["capacity_bytes"] - snap["used_bytes"] - (256 << 10)
+    ballast = max(min(need, headroom), 0)
+    if ballast > 0:
+        PoolAllocator(pool).domain("ballast").alloc(
+            "fill", shape=(ballast,), dtype="uint8")
+    for i, s in enumerate(pool.shard_metrics()):
+        print(f"  gauge shard {i}: used={s['used_bytes']}B "
+              f"cap={s['capacity_bytes']}B "
+              f"fill={s['used_bytes'] / s['capacity_bytes']:.2f}")
+    pol = RebalancePolicy(high=high, check_every=2)
+    pool.rebalance = pol
+    proposals = pol.propose(pool)
+    assert proposals, (
+        f"watermark never tripped: ballast headroom could not push shard "
+        f"{hot} to {high:.2f} (try a lower --rebalance-high)")
+    mig = proposals[0]
+    assert mig.domain == "embedding-mirror" and \
+        set(mig.group) == {"embedding-mirror", "undo-log"}, mig
+    dst = mig.dst
+    print(f"== policy proposes: {mig.reason} ==")
+
+    hits = {"mid": 0}
+
+    def kill_dst(point):
+        # second mid-copy hit: one region has already landed on the
+        # destination — the partial copy the open-time sweep must reclaim
+        if point == "migrate.mid-copy":
+            hits["mid"] += 1
+            if hits["mid"] == 2:
+                os.kill(servers[dst].pid, sg.SIGKILL)
+                servers[dst].wait()
+                print(f"== kill -9'd DESTINATION memory node {dst} "
+                      f"mid-copy ==")
+
+    pool.migrate_window_hook = kill_dst
+    try:
+        train_loop.train(b.model, tc, data, 20, relaxed=True, state=state,
+                         start_step=start_step, ckpt_manager=mgr)
+        mgr.flush()
+        raise SystemExit("destination kill never surfaced")
+    except RuntimeError as e:
+        print(f"== trainer lost the migration destination mid-copy "
+              f"({type(e).__name__}) ==")
+    # the bit-identity oracle: every tier-E through the last manifest
+    # advance is persisted on the (surviving) source shard; recovery must
+    # reproduce exactly these bytes. (A clean-replay oracle would be wrong
+    # here — the earlier node-loss recovery resumed with a relaxed gap, so
+    # the trajectory legitimately differs from an uninterrupted run.)
+    oracle = np.array(mgr.mirror_rows)
+    pool.close()
+    servers[dst] = _start_node(addrs[dst],
+                               os.path.join(CKPT, f"node{dst}.img"))
+    print(f"== memory node {dst} restarted over its pmem image ==")
+
+    rec = recovery.recover(CKPT)      # replays epochs + open-time sweep
+    assert rec.pool.placement.place("embedding-mirror") == hot, \
+        "crash before the flip must leave the mirror on its source"
+    assert "embedding-mirror" not in rec.pool.shard_domains(dst), \
+        "partial destination copy survived the open-time sweep"
+    np.testing.assert_array_equal(rec.embed_rows, oracle)
+    print(f"== recovered on the SOURCE side of the flip, bit-identical "
+          f"through step {rec.mirror_step}; partial copy swept ==")
+
+    cc = CheckpointConfig(directory=CKPT, dense_interval=0,
+                          pool_backend="sharded",
+                          pool_shards=",".join(addrs),
+                          pool_tenant="trainer")
+    tc2 = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01,
+                      checkpoint=cc)
+    st, resume = recovery.resume_train_state(
+        rec, init_fn(jax.random.PRNGKey(0)))
+    rec.pool.rebalance = RebalancePolicy(high=high, check_every=2)
+    mgr2 = CheckpointManager(b.model, cc, pool=rec.pool)
+    mgr2.init_mirror(st["embed"], step=rec.mirror_step)
+    st, _ = train_loop.train(b.model, tc2, data, 6, relaxed=True, state=st,
+                             start_step=resume, ckpt_manager=mgr2)
+    mgr2.flush()
+    assert mgr2.stats["migrations"] >= 1, "watermark never retriggered"
+    pm = mgr2.pool.placement
+    new_home = pm.place("embedding-mirror")
+    last = pm.epochs[-1]
+    assert new_home == dst != hot
+    assert pm.place("undo-log") == new_home, "alias co-location broken"
+    assert {"embedding-mirror", "undo-log"} <= set(last.moves), \
+        "mirror and undo-log must move in the SAME epoch"
+    print(f"== policy migrated embedding-mirror + undo-log to shard "
+          f"{new_home} in epoch {last.epoch} "
+          f"({mgr2.stats['migration_link_bytes']}B over the link) ==")
+
+    # fused-append link-bytes bound still holds after the move
+    mgr2.pool.rebalance = None
+    mgr2.pool.reset_metrics()
+    sent0 = mgr2.stats["bytes_e"]
+    st, _ = train_loop.train(b.model, tc2, data, 5, relaxed=True, state=st,
+                             start_step=resume + 6, ckpt_manager=mgr2)
+    mgr2.flush()
+    sent = mgr2.stats["bytes_e"] - sent0
+    m = mgr2.pool.metrics
+    assert m.link_bytes() <= sent + 5 * 4096, \
+        f"fused capture left the new owning shard: {m.link_bytes()}B " \
+        f"link > {sent}B operands + headers"
+    print(f"== fused undo capture stayed on the NEW owning shard: "
+          f"{m.link_bytes()}B link <= {sent}B operands + O(header) ==")
+    mirror_final = np.array(mgr2.mirror_rows)
+    mgr2.pool.close()
+
+    rec2 = recovery.recover(CKPT)
+    assert rec2.pool.placement.place("embedding-mirror") == new_home
+    np.testing.assert_array_equal(rec2.embed_rows, mirror_final)
+    print(f"== post-migration recovery BIT-IDENTICAL through step "
+          f"{rec2.mirror_step}, mirror on shard {new_home} ==")
+    for i, s in enumerate(rec2.pool.shard_metrics()):
+        print(f"  shard {i}: used={s['used_bytes']}B "
+              f"cap={s['capacity_bytes']}B crashes={s['crashes']}")
+    rec2.pool.close()
+
+
+def run_recovery(args, surviving_pool, servers=None):
     import jax
     import numpy as np
 
@@ -315,9 +469,9 @@ def run_recovery(args, surviving_pool):
     if sharded:
         rec.pool.reset_metrics()         # measure only the resumed tier-E
     data = make_batches(b.model, 16, 0, seed=11)
-    _, losses = train_loop.train(b.model, tc, data, 10, relaxed=True,
-                                 state=st, start_step=resume,
-                                 ckpt_manager=mgr)
+    st2, losses = train_loop.train(b.model, tc, data, 10, relaxed=True,
+                                   state=st, start_step=resume,
+                                   ckpt_manager=mgr)
     print(f"== resumed at step {resume}, 10 more steps, "
           f"final loss {losses[-1]:.4f} ==")
     if sharded:
@@ -334,6 +488,9 @@ def run_recovery(args, surviving_pool):
                   f"media={snap['media_bytes']}B "
                   f"crashes={snap['crashes']}")
     print(mgr.pool.metrics.report())
+    if sharded:
+        rebalance_act(args, b, tc, data, st2, resume + 10, mgr, servers,
+                      init_fn)
 
 
 if __name__ == "__main__":

@@ -42,7 +42,8 @@ from repro.configs.base import CheckpointConfig, TrainConfig
 from repro.core.checkpoint import recovery
 from repro.core.checkpoint.manager import CheckpointManager
 from repro.data.synthetic import make_batches
-from repro.pool import FaultSchedule, InjectedCrash, PmemPool, PoolServer
+from repro.pool import (FaultSchedule, InjectedCrash, PmemPool, PoolError,
+                        PoolServer)
 from repro.training import train_loop
 
 POINTS = ("undo-payload", "undo-commit", "mirror-apply", "manifest-advance",
@@ -128,12 +129,138 @@ def one_cell(ctx, backend, seed, root, addr=None, shards=None):
             "metrics": snap}
 
 
+def migration_cell(ctx, seed, work, nshards=2):
+    """Seeded migrate-under-fire drill (one cell): train on an N-node
+    sharded pool, then
+
+      * phase A — live-migrate the embedding mirror and ``kill -9`` the
+        SOURCE memory node mid-copy: the migration aborts before its flip,
+        recovery (after the node restarts over its pmem image) must find
+        the domain on the source bit-identically, with the partial
+        destination copy reclaimed by the open-time sweep;
+      * phase B — resume, migrate again and kill the DESTINATION node
+        right after the epoch flip: the flip is durable, so recovery must
+        find the domain on the destination bit-identically (the import
+        persisted before the flip), and training resumes exactly.
+    """
+    b, tc, data, init_fn, full_losses = ctx
+    servers, addrs, imgs = [], [], []
+    for i in range(nshards):
+        imgs.append(os.path.join(work, f"mig{i}.img"))
+        dev = PmemPool(imgs[i], 1 << 22)
+        servers.append(PoolServer(
+            dev, "unix:" + os.path.join(work, f"mig{i}.sock")).start())
+        addrs.append(servers[i].addr)
+    root = os.path.join(work, "ck")
+    cc = CheckpointConfig(directory=root, dense_interval=1,
+                          pool_backend="sharded", pool_shards=",".join(addrs),
+                          pool_tenant=f"mig-{seed}")
+    try:
+        st0 = init_fn(jax.random.PRNGKey(tc.seed))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+        train_loop.train(b.model, tc, data, STEPS, relaxed=True, state=st0,
+                         ckpt_manager=mgr)
+        mgr.flush()
+        oracle_a = np.array(mgr.mirror_rows)
+        pool = mgr.pool
+        src = pool.placement.place("embedding-mirror")
+        dst = (src + 1 + seed) % nshards
+        dst = dst if dst != src else (src + 1) % nshards
+
+        def restart(i):
+            servers[i].shutdown(close_device=True)
+            servers[i] = PoolServer(PmemPool.open(imgs[i]), addrs[i]).start()
+
+        # -- phase A: source node dies mid-copy (seeded occurrence) --------
+        state = {"left": seed % 2 + 1}
+
+        def kill_src(point):
+            if point == "migrate.mid-copy":
+                state["left"] -= 1
+                if state["left"] == 0:
+                    servers[src].shutdown(close_device=True)
+
+        pool.migrate_window_hook = kill_src
+        crashed = False
+        try:
+            pool.migrate_domain("embedding-mirror", dst)
+        except PoolError:
+            crashed = True
+        assert crashed, "source kill mid-copy must abort the migration"
+        pool.close()
+        restart(src)
+        rec = recovery.recover(root)
+        assert rec.pool.placement.place("embedding-mirror") == src, \
+            "crash before the flip must leave the domain on the source"
+        assert rec.mirror_step == STEPS - 1
+        np.testing.assert_array_equal(rec.embed_rows, oracle_a)
+        assert "embedding-mirror" not in rec.pool.shard_domains(dst), \
+            "partial destination copy survived the open-time sweep"
+
+        # -- phase B: resume, then the destination dies post-flip ----------
+        fresh = init_fn(jax.random.PRNGKey(tc.seed))
+        st, resume = recovery.resume_train_state(rec, fresh)
+        mgr2 = CheckpointManager(b.model, cc, pool=rec.pool)
+        mgr2.init_mirror(st["embed"], step=rec.mirror_step)
+        train_loop.train(b.model, tc, data, 2, relaxed=True, state=st,
+                         start_step=resume, ckpt_manager=mgr2)
+        mgr2.flush()
+        oracle_b = np.array(mgr2.mirror_rows)
+        pool2 = mgr2.pool
+
+        def kill_dst(point):
+            if point == "migrate.post-flip-pre-gc":
+                servers[dst].shutdown(close_device=True)
+
+        pool2.migrate_window_hook = kill_dst
+        info = pool2.migrate_domain("embedding-mirror", dst)
+        assert info["epoch"] >= 1 and "undo-log" in info["moved"]
+        pool2.close()
+        restart(dst)
+        rec2 = recovery.recover(root)
+        assert rec2.pool.placement.place("embedding-mirror") == dst, \
+            "crash after the flip must land the domain on the destination"
+        np.testing.assert_array_equal(rec2.embed_rows, oracle_b)
+        assert "embedding-mirror" not in rec2.pool.shard_domains(src), \
+            "stale source copy leaked past GC + sweep"
+        # bit-identical resume: the tail replays the uninterrupted run
+        st2, resume2 = recovery.resume_train_state(
+            rec2, init_fn(jax.random.PRNGKey(tc.seed)))
+        n_tail = STEPS - resume2
+        if n_tail > 0:
+            _, tail = train_loop.train(b.model, tc, data, n_tail,
+                                       relaxed=True, state=st2,
+                                       start_step=resume2)
+            if rec2.gap == 0:
+                np.testing.assert_allclose(
+                    np.asarray(tail), np.asarray(full_losses[resume2:]),
+                    rtol=1e-5, atol=1e-6)
+        snap = rec2.pool.metrics.snapshot()
+        rec2.pool.close()
+        return {"backend": "sharded-migrate", "seed": seed,
+                "kind": "migrate-under-fire", "crashed": True,
+                "mirror_step": rec2.mirror_step,
+                "dense_step": rec2.dense_step,
+                "rolled_back": rec2.rolled_back,
+                "migrate_epoch": info["epoch"],
+                "migrate_link_bytes": info["link_bytes"],
+                "migrate_raw_bytes": info["raw_bytes"],
+                "metrics": snap}
+    finally:
+        for server in servers:
+            server.shutdown(close_device=True)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backends", default="pmem,remote")
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--shards", type=int, default=2,
                     help="memory nodes per cell for the sharded backend")
+    ap.add_argument("--migrations", type=int, default=0,
+                    help="run N seeded migrate-under-fire cells (kill the "
+                         "source node mid-copy, then the destination "
+                         "post-flip, with bit-identical resume asserts)")
     ap.add_argument("--out", default="soak_metrics.json")
     args = ap.parse_args(argv)
 
@@ -179,6 +306,24 @@ def main(argv=None):
                 for server in servers:
                     server.shutdown(close_device=True)
                 shutil.rmtree(work, ignore_errors=True)
+
+    for seed in range(args.migrations):
+        work = tempfile.mkdtemp(prefix=f"soak_migrate_{seed}_")
+        try:
+            cell = migration_cell(ctx, seed, work, nshards=args.shards)
+            results.append(cell)
+            print(f"soak[sharded-migrate seed={seed}] OK: "
+                  f"epoch={cell['migrate_epoch']} "
+                  f"link={cell['migrate_link_bytes']}B "
+                  f"mirror@{cell['mirror_step']}", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append({"backend": "sharded-migrate", "seed": seed,
+                             "error": f"{type(e).__name__}: {e}"})
+            print(f"soak[sharded-migrate seed={seed}] FAILED: {e}",
+                  flush=True)
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
 
     report = {"cells": results, "failures": failures,
               "steps_per_cell": STEPS, "points": POINTS}

@@ -225,6 +225,12 @@ class CheckpointConfig:
     pool_quota: int = 0            # remote/sharded: byte quota (per node)
     pool_compress: str = "zlib"    # pool-side compression: none | zlib | int8
                                    # (int8 is lossy — relaxed rollback only)
+    pool_rebalance: float = 0.0    # sharded: high watermark (used/capacity)
+                                   # that triggers live domain migration
+                                   # (0 = rebalancing off)
+    pool_secret: str = ""          # remote/sharded tcp transports: shared
+                                   # secret for the HMAC hello handshake
+                                   # ("" = env REPRO_POOL_SECRET, if set)
 
 
 @dataclass(frozen=True)

@@ -92,7 +92,8 @@ class CheckpointManager:
         self.stats = {"tier_e": 0, "tier_m": 0, "tier_m_skipped": 0,
                       "bytes_e": 0, "bytes_m": 0,
                       "undo_raw_bytes": 0, "undo_stored_bytes": 0,
-                      "dense_stored_bytes": 0}
+                      "dense_stored_bytes": 0,
+                      "migrations": 0, "migration_link_bytes": 0}
         if embed_init is not None:
             self.init_mirror(embed_init)
 
@@ -107,23 +108,32 @@ class CheckpointManager:
                 capacity=capacity_hint, faults=self.faults, addr=addr,
                 tenant=tenant, quota=getattr(self.ccfg, "pool_quota", 0),
                 shards=getattr(self.ccfg, "pool_shards", ""),
-                placement=getattr(self.ccfg, "pool_placement", ""))
+                placement=getattr(self.ccfg, "pool_placement", ""),
+                rebalance=float(getattr(self.ccfg, "pool_rebalance", 0.0)
+                                or 0.0),
+                secret=getattr(self.ccfg, "pool_secret", ""))
             # POOL.json lets recovery reopen the same node(s): pmem by image
             # path, remote by reconnecting to the surviving server under
             # the same tenant AND quota (a server restart re-registers the
-            # tenant from the reconnect handshake). For a sharded pool it
-            # records the RESOLVED topology — ordered shard list + explicit
-            # pins — so recovery reconnects every node and re-derives the
-            # identical domain placement (a domain is never re-placed).
+            # tenant from the reconnect handshake; the tcp shared secret is
+            # re-read from the environment, never persisted). For a sharded
+            # pool it records the RESOLVED placement — ordered shard list,
+            # explicit pins, and the numbered placement-epoch records —
+            # so recovery reconnects every node and replays the epochs to
+            # the identical assignment (a domain is never re-placed or
+            # re-hashed).
             info = {"backend": backend, "addr": addr, "tenant": tenant,
                     "quota": getattr(self.ccfg, "pool_quota", 0)}
-            if backend == "sharded":
-                topo = self.pool.topology
-                info["shards"] = list(topo.shards)
-                info["placement"] = {k: int(v)
-                                     for k, v in topo.pin.items()}
             store.write_json_atomic(
                 os.path.join(self.root, "POOL.json"), info)
+        if getattr(self.pool, "backend", "") == "sharded":
+            # the durable half of every epoch flip routes through here
+            self.pool.epoch_sink = self.record_placement
+            reb = float(getattr(self.ccfg, "pool_rebalance", 0.0) or 0.0)
+            if reb > 0 and self.pool.rebalance is None:
+                from repro.pool.placement import RebalancePolicy
+                self.pool.rebalance = RebalancePolicy(high=reb)
+            self.record_placement()
         self._alloc = PoolAllocator(self.pool)
         self.manifest = JsonRegion.create(self._alloc.domain("manifest"),
                                           "manifest")
@@ -138,6 +148,58 @@ class CheckpointManager:
         if self.faults is not None:
             if self.faults.hit(point) == "crash-after":
                 raise InjectedCrash(point, self.faults.counts[point])
+
+    def record_placement(self, placement=None):
+        """Durably publish the pool's placement map into POOL.json — the
+        commit point of every epoch flip. Superblock-style: the whole new
+        image is written beside the old one and swapped in a single atomic
+        publish, and every epoch record carries its own CRC, so recovery
+        always reads either the pre-flip or the post-flip placement (a torn
+        tail record degrades to the previous epoch, never a re-hash)."""
+        pm = placement if placement is not None else self.pool.placement
+        path = os.path.join(self.root, "POOL.json")
+        try:
+            info = store.read_json(path)
+        except (OSError, ValueError):
+            info = {"backend": "sharded",
+                    "tenant": getattr(self.ccfg, "pool_tenant", "default"),
+                    "quota": getattr(self.ccfg, "pool_quota", 0)}
+        pj = pm.to_json()
+        info.update(shards=pj["shards"], placement=pj["pin"],
+                    epochs=pj["epochs"])
+        store.write_json_atomic(path, info)
+
+    def _maybe_rebalance(self, step: int):
+        """Capacity-watermark rebalancing (writer thread, between tier ops):
+        poll the per-shard used/capacity gauges at the policy's cadence and
+        execute any proposed migration — copy, epoch flip (recorded through
+        ``record_placement``), source GC — then rebind the region handles
+        the move invalidated."""
+        pol = getattr(self.pool, "rebalance", None)
+        if pol is None or not pol.due(step):
+            return
+        for mig in pol.propose(self.pool):
+            info = self.pool.migrate_domain(mig.domain, mig.dst,
+                                            compress=self.compress)
+            self.rebind_domains(info["moved"])
+            self.stats["migrations"] += 1
+            self.stats["migration_link_bytes"] += info["link_bytes"]
+
+    def rebind_domains(self, moved):
+        """Re-resolve region handles after `moved` domains changed shards —
+        their global offsets now encode the destination node."""
+        moved = set(moved)
+        if "embedding-mirror" in moved \
+                and getattr(self, "mirror_region", None) is not None:
+            self.mirror_region = \
+                self._alloc.domain("embedding-mirror").get("rows")
+        if "undo-log" in moved and self.ring is not None:
+            self.ring = UndoRing(self._alloc, self.ccfg.max_undo_logs,
+                                 compress=self.compress)
+        if "manifest" in moved and self.manifest is not None:
+            region = self._alloc.domain("manifest").get("manifest")
+            if region is not None:
+                self.manifest = JsonRegion(region)
 
     @property
     def mirror_rows(self) -> np.ndarray:
@@ -237,6 +299,7 @@ class CheckpointManager:
         self.stats["bytes_e"] += idx.nbytes + new_rows.nbytes
         self.stats["undo_raw_bytes"] += info.get("raw", 0)
         self.stats["undo_stored_bytes"] += info.get("stored", 0)
+        self._maybe_rebalance(step)
 
     def _do_tier_m(self, step: int, dense_np: dict, t_enq: float):
         if (self.ccfg.writer_deadline_s

@@ -62,17 +62,27 @@ def open_pool(root: str,
         return RemotePool(info["addr"], tenant=info.get("tenant", "default"),
                           quota=info.get("quota", 0))
     if info["backend"] == "sharded":
-        # reconnect EVERY node of the recorded topology in order; placement
-        # is re-derived from the same (shards, pins) inputs, so every
-        # domain is found exactly where it was first placed
-        from repro.pool.sharded import PoolTopology, ShardedPool
-        topo = PoolTopology(
-            shards=tuple(info.get("shards") or ()),
-            pin={k: int(v)
-                 for k, v in (info.get("placement") or {}).items()})
-        return ShardedPool(list(topo.shards),
-                           tenant=info.get("tenant", "default"),
-                           quota=info.get("quota", 0), topology=topo)
+        # reconnect EVERY node of the recorded placement in order and
+        # REPLAY the numbered epoch records: placement is re-derived from
+        # the same (shards, pins, epochs) inputs, so every domain is found
+        # exactly where it last lived — never re-placed, never re-hashed
+        # (a torn tail epoch record falls back to the previous epoch).
+        # The open-time sweep then reclaims any copy a crashed migration
+        # stranded on the wrong side of its flip.
+        from repro.pool.placement import PlacementMap
+        from repro.pool.sharded import ShardedPool
+        pmap = PlacementMap.from_json({
+            "shards": info.get("shards"),
+            "pin": info.get("placement"),
+            "epochs": info.get("epochs")})
+        dev = ShardedPool(list(pmap.shards),
+                          tenant=info.get("tenant", "default"),
+                          quota=info.get("quota", 0), placement=pmap)
+        swept = dev.sweep_stale_domains()
+        if swept:
+            print(f"[recovery] swept stale migration copies: "
+                  f"{', '.join(f'{d}@shard{i}' for d, i in swept)}")
+        return dev
     if info["backend"] != "pmem":
         raise PoolError(
             f"pool backend {info['backend']!r} is volatile across processes; "

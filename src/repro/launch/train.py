@@ -10,6 +10,7 @@ checkpoint manager; ``--resume`` recovers from the checkpoint directory
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -55,6 +56,18 @@ def main():
                     default="zlib",
                     help="pool-side compression for undo payloads and dense "
                          "snapshot blobs (int8 is lossy: relaxed rollback)")
+    ap.add_argument("--pool-rebalance", type=float, default=0.0,
+                    metavar="HIGH",
+                    help="sharded backend: enable capacity-watermark "
+                         "rebalancing — when a node's used/capacity crosses "
+                         "HIGH (e.g. 0.75), live-migrate its largest "
+                         "unpinned domain group to the emptiest node "
+                         "(0 = off)")
+    ap.add_argument("--pool-secret",
+                    default=os.environ.get("REPRO_POOL_SECRET", ""),
+                    help="shared secret for the memory-node tcp handshake "
+                         "(HMAC challenge; env REPRO_POOL_SECRET; unix "
+                         "sockets are exempt)")
     ap.add_argument("--dense-interval", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -82,7 +95,9 @@ def main():
                             pool_placement=args.pool_placement,
                             pool_tenant=args.pool_tenant,
                             pool_quota=args.pool_quota,
-                            pool_compress=args.pool_compress)
+                            pool_compress=args.pool_compress,
+                            pool_rebalance=args.pool_rebalance,
+                            pool_secret=args.pool_secret)
     tc = TrainConfig(learning_rate=args.lr, embed_learning_rate=args.embed_lr,
                      checkpoint=ckpt)
     raw = make_batches(cfg, args.batch, args.seq, seed=0)

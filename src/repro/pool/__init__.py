@@ -12,11 +12,15 @@ Layering (bottom up):
                + EmbeddingPoolMirror
   faults.py    deterministic crash / torn-write / dropped-flush injection
   metrics.py   traffic + energy counters (feeds benchmarks/fig13_energy.py)
-  remote.py    RemotePool client + length-prefixed wire protocol
+  remote.py    RemotePool client + length-prefixed wire protocol (optional
+               shared-secret HMAC handshake on tcp transports)
   server.py    standalone memory-node process serving many trainer tenants
-  sharded.py   ShardedPool: N memory nodes behind one device, deterministic
-               domain->shard placement (PoolTopology), per-shard fault and
-               power-event drills, aggregated-yet-attributable metrics
+  placement.py epoch-versioned PlacementMap (domain -> shard, CRC-sealed
+               move records) + capacity-watermark RebalancePolicy
+  sharded.py   ShardedPool: N memory nodes behind one device, placement-
+               routed domain ops, live domain migration with named crash
+               windows, per-shard fault and power-event drills,
+               aggregated-yet-attributable metrics
 """
 from repro.pool.allocator import JsonRegion, PoolAllocator, Region
 from repro.pool.device import (BACKENDS, DramPool, PmemPool, PoolDevice,
@@ -25,17 +29,20 @@ from repro.pool.device import (BACKENDS, DramPool, PmemPool, PoolDevice,
 from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
 from repro.pool.metrics import PoolMetrics
 from repro.pool.nmp import EmbeddingPoolMirror, NmpQueue
-from repro.pool.remote import (PoolConnectionError, RemotePool, WireError,
-                               parse_addr)
-from repro.pool.sharded import PoolTopology, ShardedPool
+from repro.pool.placement import (Migration, PlacementEpoch, PlacementMap,
+                                  PoolTopology, RebalancePolicy)
+from repro.pool.remote import (PoolAuthError, PoolConnectionError,
+                               RemotePool, WireError, parse_addr)
+from repro.pool.sharded import ShardedPool
 
 __all__ = [
     "BACKENDS", "DramPool", "EmbeddingPoolMirror", "FaultEvent",
-    "FaultSchedule", "InjectedCrash", "JsonRegion", "NmpQueue", "PmemPool",
-    "PoolAllocator", "PoolConnectionError", "PoolDevice", "PoolError",
+    "FaultSchedule", "InjectedCrash", "JsonRegion", "Migration", "NmpQueue",
+    "PlacementEpoch", "PlacementMap", "PmemPool", "PoolAllocator",
+    "PoolAuthError", "PoolConnectionError", "PoolDevice", "PoolError",
     "PoolMetrics", "PoolTopology", "QuotaExceededError", "Region",
-    "RemotePool", "ShardedPool", "TenantIsolationError", "WireError",
-    "make_pool", "parse_addr",
+    "RebalancePolicy", "RemotePool", "ShardedPool", "TenantIsolationError",
+    "WireError", "make_pool", "parse_addr",
 ]
 # "PoolServer" is importable too, via the lazy __getattr__ below (kept out
 # of __all__ so static checkers don't flag the deferred name)

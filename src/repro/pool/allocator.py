@@ -283,6 +283,16 @@ class PoolAllocator:
         self._sync()
         return sum(e["nbytes"] for e in self._tenant_entries(tenant))
 
+    def used_bytes(self) -> int:
+        """Live bytes across ALL tenants — the node-fill gauge capacity
+        watermarks (``RebalancePolicy``) read. Counts directory entries,
+        not the bump pointer, so migration GC actually shrinks it."""
+        if self._proxy is not None:
+            raise PoolError("used_bytes is a node-side gauge")
+        self._sync()
+        return sum(e["nbytes"] for dom in self.directory["domains"].values()
+                   for e in dom.values())
+
     def owned_ranges(self, tenant: Optional[str] = None) -> list[tuple]:
         """[start, end) byte ranges the tenant may address directly — the
         server checks every raw read/write/persist/nmp request against these."""

@@ -288,7 +288,8 @@ def make_pool(backend: str, *, path: Optional[str] = None,
               faults: Optional[FaultSchedule] = None,
               addr: Optional[str] = None, tenant: str = "default",
               quota: int = 0, shards=None,
-              placement=None) -> PoolDevice:
+              placement=None, rebalance: float = 0.0,
+              secret: str = "") -> PoolDevice:
     if backend == "dram":
         return DramPool(capacity, faults)
     if backend == "pmem":
@@ -300,7 +301,7 @@ def make_pool(backend: str, *, path: Optional[str] = None,
             raise PoolError("remote backend needs a server addr "
                             "(unix:/path or tcp:host:port)")
         from repro.pool.remote import RemotePool
-        dev = RemotePool(addr, tenant=tenant, quota=quota)
+        dev = RemotePool(addr, tenant=tenant, quota=quota, secret=secret)
         if faults is not None:
             dev.faults = faults
         return dev
@@ -308,10 +309,13 @@ def make_pool(backend: str, *, path: Optional[str] = None,
         if not shards:
             raise PoolError("sharded backend needs shard addrs "
                             "(--pool-shards addr1,addr2,...)")
-        from repro.pool.sharded import PoolTopology, ShardedPool
-        topo = PoolTopology.parse(shards, placement)
-        dev = ShardedPool(list(topo.shards), tenant=tenant, quota=quota,
-                          topology=topo)
+        from repro.pool.placement import PlacementMap, RebalancePolicy
+        from repro.pool.sharded import ShardedPool
+        pmap = PlacementMap.parse(shards, placement)
+        dev = ShardedPool(list(pmap.shards), tenant=tenant, quota=quota,
+                          placement=pmap, secret=secret)
+        if rebalance:
+            dev.rebalance = RebalancePolicy(high=float(rebalance))
         if faults is not None:
             dev.faults = faults
         return dev

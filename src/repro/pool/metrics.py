@@ -49,6 +49,8 @@ class PoolMetrics:
     comp_stored_bytes: int = 0                    # ...and what hit media
     comp_time_s: float = 0.0                      # compression engine busy
     comp: dict = field(default_factory=dict)      # kind -> [raw, stored]
+    used_bytes: int = 0                           # capacity-watermark gauges:
+    capacity_bytes: int = 0                       # live bytes / node capacity
     dropped_flushes: int = 0
     torn_writes: int = 0
     crashes: int = 0
@@ -150,6 +152,8 @@ class PoolMetrics:
         m.comp_time_s = float(snap.get("comp_time_s", 0.0))
         m.comp = {k: [int(v[0]), int(v[1])]
                   for k, v in (snap.get("comp") or {}).items()}
+        m.used_bytes = int(snap.get("used_bytes", 0))
+        m.capacity_bytes = int(snap.get("capacity_bytes", 0))
         m.dropped_flushes = int(snap.get("dropped_flushes", 0))
         m.torn_writes = int(snap.get("torn_writes", 0))
         m.crashes = int(snap.get("crashes", 0))
@@ -170,6 +174,8 @@ class PoolMetrics:
             "comp_ratio": self.comp_ratio(),
             "comp_time_s": self.comp_time_s,
             "comp": {k: list(v) for k, v in self.comp.items()},
+            "used_bytes": self.used_bytes,
+            "capacity_bytes": self.capacity_bytes,
             "dropped_flushes": self.dropped_flushes,
             "torn_writes": self.torn_writes,
             "crashes": self.crashes,

@@ -268,6 +268,49 @@ class NmpQueue:
         self.device.metrics.record_link("link_in", 16 + slots.nbytes)
         return int(slots.size)
 
+    def region_export(self, region: Region, compress: str = "zlib") -> bytes:
+        """Verbatim region image -> one framed, pool-compressed blob (CRC
+        over the stored bytes) ready for the wire — the read half of live
+        domain migration. The node compresses before the image ever leaves
+        it, so migration link bytes scale with the *compressed* size."""
+        if self._remote:
+            out = self.device.nmp("region_export", region, compress=compress)
+            return bytes(np.ascontiguousarray(out).view(np.uint8))
+        raw = bytes(self.device.read(region.off, region.nbytes,
+                                     tag="migrate_export"))
+        framed = pc.frame(raw, mode=compress)
+        m = self.device.metrics
+        if compress != "none":     # engine idle when compression is off
+            m.record_comp(len(raw), len(framed) - pc.FRAME_OVERHEAD,
+                          len(raw) / pc.COMPRESS_BPS, kind="migrate")
+        m.record_link("link_in", 16)
+        m.record_link("link_out", len(framed))
+        return framed
+
+    def region_import(self, region: Region, frame,
+                      point: str = "migrate-import"):
+        """Inverse of ``region_export``: CRC-check + unframe inside the
+        node, land the RAW image verbatim in the region, persist exactly
+        that range. The write half of live migration — the destination copy
+        is bit-identical to the exported source image by construction."""
+        frame = bytes(frame) if isinstance(frame, (bytes, bytearray,
+                                                   memoryview)) \
+            else bytes(np.ascontiguousarray(frame).view(np.uint8))
+        if self._remote:
+            self.device.nmp("region_import", region, blob=frame, point=point)
+            return
+        raw = pc.unframe(frame)                 # BlobCorruptError on a tear
+        if len(raw) != region.nbytes:
+            raise PoolError(f"region_import {region.domain}/{region.name}: "
+                            f"image {len(raw)}B != region {region.nbytes}B")
+        m = self.device.metrics
+        m.record_link("link_in", len(frame))
+        if len(frame) - pc.FRAME_OVERHEAD < len(raw):   # it was compressed
+            m.record_comp(len(raw), len(frame) - pc.FRAME_OVERHEAD,
+                          len(raw) / pc.COMPRESS_BPS, kind="migrate")
+        self.device.write(region.off, raw, tag="migrate_import")
+        self.device.persist(region.off, region.nbytes, point=point)
+
     def blob_put(self, region: Region, blob, *, compress: str = "zlib",
                  point: str = "dense-blob") -> int:
         """Write an opaque blob through the pool's compression engine: the

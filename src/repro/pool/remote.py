@@ -34,7 +34,9 @@ dense snapshot blobs) and ``slot_headers`` (one-round-trip undo-ring scan).
 from __future__ import annotations
 
 import dataclasses
+import hmac
 import json
+import os
 import socket
 import struct
 import threading
@@ -42,6 +44,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.pool.compress import BlobCorruptError as _BlobCorruptError
 from repro.pool.device import (PoolDevice, PoolError, QuotaExceededError,
                                TenantIsolationError)
 from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
@@ -58,6 +61,26 @@ class WireError(PoolError):
 
 class PoolConnectionError(PoolError):
     """The peer vanished (refused, closed mid-op, or timed out)."""
+
+
+class PoolAuthError(PoolError):
+    """The tcp handshake failed the server's shared-secret check (wrong or
+    missing ``--pool-secret`` / ``REPRO_POOL_SECRET``). Carries the server's
+    ``challenge`` nonce when one was issued (the client answers it with
+    HMAC-SHA256(secret, challenge:tenant)). Unix sockets are exempt — the
+    filesystem already gates them."""
+
+    def __init__(self, msg: str, challenge: str = ""):
+        super().__init__(msg)
+        self.challenge = challenge
+
+
+def auth_proof(secret: str, challenge: str, tenant: str) -> str:
+    """The handshake proof: HMAC-SHA256 over the server nonce and the
+    tenant name, so a captured proof neither replays on a later connection
+    nor transplants onto another tenant."""
+    return hmac.new(secret.encode(),
+                    f"{challenge}:{tenant}".encode(), "sha256").hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -137,8 +160,10 @@ def recv_frame(sock: socket.socket):
 
 _ERROR_TYPES = {
     "PoolError": PoolError,
+    "BlobCorruptError": _BlobCorruptError,
     "WireError": WireError,
     "PoolConnectionError": PoolConnectionError,
+    "PoolAuthError": PoolAuthError,
     "QuotaExceededError": QuotaExceededError,
     "TenantIsolationError": TenantIsolationError,
 }
@@ -149,14 +174,20 @@ def error_to_frame(exc: BaseException) -> dict:
         return {"ok": False, "kind": "InjectedCrash", "error": str(exc),
                 "point": exc.point, "occurrence": exc.occurrence}
     kind = type(exc).__name__ if isinstance(exc, PoolError) else "PoolError"
-    return {"ok": False, "kind": kind,
-            "error": str(exc) or type(exc).__name__}
+    out = {"ok": False, "kind": kind,
+           "error": str(exc) or type(exc).__name__}
+    if isinstance(exc, PoolAuthError) and exc.challenge:
+        out["challenge"] = exc.challenge
+    return out
 
 
 def frame_to_error(hdr: dict) -> BaseException:
     kind = hdr.get("kind", "PoolError")
     if kind == "InjectedCrash":
         return InjectedCrash(hdr.get("point", "?"), hdr.get("occurrence", 0))
+    if kind == "PoolAuthError":
+        return PoolAuthError(hdr.get("error", "pool auth failed"),
+                             challenge=hdr.get("challenge", ""))
     return _ERROR_TYPES.get(kind, PoolError)(hdr.get("error", "remote error"))
 
 
@@ -185,12 +216,16 @@ class RemotePool(PoolDevice):
     remote = True
 
     def __init__(self, addr: str, tenant: str = "default", quota: int = 0,
-                 timeout: float = DEFAULT_TIMEOUT):
+                 timeout: float = DEFAULT_TIMEOUT,
+                 secret: Optional[str] = None):
         self.addr = addr
         self.tenant = tenant
         self.closed = False
         self._faults: Optional[FaultSchedule] = None
         self._lock = threading.Lock()
+        # the shared secret never lands in POOL.json — reconnects (recovery,
+        # shard re-dials) pick it up from the environment again
+        self._secret = secret or os.environ.get("REPRO_POOL_SECRET", "")
         kind, target = parse_addr(addr)
         try:
             if kind == "unix":
@@ -202,8 +237,16 @@ class RemotePool(PoolDevice):
         except OSError as e:
             raise PoolConnectionError(
                 f"cannot reach pool server at {addr}: {e}") from e
-        hdr, _ = self._request({"op": "hello", "tenant": tenant,
-                                "quota": int(quota)})
+        hello = {"op": "hello", "tenant": tenant, "quota": int(quota)}
+        try:
+            hdr, _ = self._request(hello)
+        except PoolAuthError as e:
+            # challenge round: answer the nonce with the shared-secret HMAC
+            if not e.challenge or not self._secret:
+                raise
+            hdr, _ = self._request({
+                **hello, "challenge": e.challenge,
+                "auth": auth_proof(self._secret, e.challenge, tenant)})
         self._capacity = int(hdr["capacity"])
         self.device_name = hdr.get("device", "remote")
 
@@ -325,6 +368,12 @@ class RemotePool(PoolDevice):
     def list_regions(self, domain: str) -> dict:
         rh, _ = self._request({"op": "regions", "domain": domain})
         return rh["regions"]
+
+    def list_remote_domains(self) -> list:
+        """This tenant's domains on the node — the open-time sweep's and the
+        rebalance policy's view of what actually lives where."""
+        rh, _ = self._request({"op": "domains"})
+        return list(rh["domains"])
 
     def free_remote_domain(self, domain: str,
                            point: str = "superblock") -> bool:

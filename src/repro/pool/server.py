@@ -43,7 +43,9 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import hmac
 import os
+import secrets as pysecrets
 import signal
 import socket
 import sys
@@ -58,8 +60,9 @@ from repro.pool.device import (DramPool, PmemPool, PoolDevice, PoolError,
 from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
 from repro.pool.metrics import PoolMetrics
 from repro.pool.nmp import NmpQueue
-from repro.pool.remote import (WireError, error_to_frame, format_addr,
-                               parse_addr, recv_frame, send_frame)
+from repro.pool.remote import (PoolAuthError, WireError, auth_proof,
+                               error_to_frame, format_addr, parse_addr,
+                               recv_frame, send_frame)
 
 
 class Tenant:
@@ -82,17 +85,19 @@ class Tenant:
 class PoolServer:
     def __init__(self, device: PoolDevice, addr: str, default_quota: int = 0,
                  conn_timeout: Optional[float] = 600.0,
-                 control_ops: bool = True):
+                 control_ops: bool = True, secret: str = ""):
         self.device = device
         self.default_quota = int(default_quota)
         self.conn_timeout = conn_timeout
         self.control_ops = control_ops
+        self.secret = secret
         self.tenants: dict[str, Tenant] = {}
         self._lock = threading.RLock()       # serialises all device work
         self._nmp = NmpQueue(device)
         self._stop = threading.Event()
         self._conns: set = set()
         kind, target = parse_addr(addr)
+        self._kind = kind
         if kind == "unix":
             with contextlib.suppress(OSError):
                 os.unlink(target)
@@ -148,6 +153,11 @@ class PoolServer:
         if self.conn_timeout:
             conn.settimeout(self.conn_timeout)
         tenant: Optional[Tenant] = None
+        # shared-secret auth is a TCP property: unix sockets are already
+        # gated by filesystem permissions. State is per connection — each
+        # tcp hello must answer a fresh nonce, so proofs never replay.
+        auth = {"required": bool(self.secret) and self._kind == "tcp",
+                "challenge": None}
         try:
             while not self._stop.is_set():
                 try:
@@ -169,6 +179,8 @@ class PoolServer:
                     return
                 try:
                     if op == "hello":
+                        if auth["required"]:
+                            self._check_auth(auth, hdr)
                         tenant = self._hello(hdr)
                         rh, rbody = {"capacity": self.device.capacity,
                                      "device": self.device.profile.name,
@@ -194,6 +206,26 @@ class PoolServer:
                 conn.close()
             except OSError:
                 pass
+
+    def _check_auth(self, auth: dict, hdr: dict):
+        """HMAC challenge handshake for tcp hellos. First hello without a
+        valid proof gets a nonce back (typed ``PoolAuthError``); the client
+        re-hellos with ``auth = HMAC-SHA256(secret, challenge:tenant)``. A
+        wrong proof is a hard reject — no second nonce on that attempt."""
+        proof = hdr.get("auth")
+        tenant = str(hdr.get("tenant") or "default")
+        if proof and auth["challenge"] \
+                and hdr.get("challenge") == auth["challenge"]:
+            expect = auth_proof(self.secret, auth["challenge"], tenant)
+            auth["challenge"] = None           # single use either way
+            if hmac.compare_digest(expect, str(proof)):
+                auth["required"] = False
+                return
+            raise PoolAuthError("pool auth failed: wrong secret")
+        auth["challenge"] = pysecrets.token_hex(16)
+        raise PoolAuthError("pool auth required: answer the challenge with "
+                            "HMAC-SHA256(secret, challenge:tenant)",
+                            challenge=auth["challenge"])
 
     def _hello(self, hdr: dict) -> Tenant:
         name = str(hdr.get("tenant") or "default")
@@ -309,6 +341,11 @@ class PoolServer:
         ents = tenant.alloc.domain(hdr["domain"]).regions()
         return {"regions": {n: _entry(r) for n, r in ents.items()}}, b""
 
+    def _op_domains(self, tenant, hdr, body):
+        """This tenant's domains on the node (open-time sweep + rebalance
+        policy discovery)."""
+        return {"domains": tenant.alloc.tenant_domains()}, b""
+
     def _op_free(self, tenant, hdr, body):
         freed = tenant.alloc.free_domain(
             hdr["domain"], point=hdr.get("point", "superblock"))
@@ -324,6 +361,10 @@ class PoolServer:
     def _op_metrics(self, tenant, hdr, body):
         if hdr.get("reset"):
             tenant.metrics.reset()
+        # capacity-watermark gauges are node-wide facts sampled at snapshot
+        # time (any tenant's allocator sees the shared directory)
+        tenant.metrics.used_bytes = tenant.alloc.used_bytes()
+        tenant.metrics.capacity_bytes = self.device.capacity
         if hdr.get("scope") == "all":
             self._check_control(tenant, "metrics:all")  # cross-tenant view
             return {"tenants": {n: t.metrics.snapshot()
@@ -388,6 +429,14 @@ class PoolServer:
                                      int(hdr["slot_bytes"]),
                                      point=point or "undo-gc")
             return {"shape": None, "stats": {"cleared": n}}, b""
+        elif kind == "region_export":
+            framed = self._nmp.region_export(
+                region, compress=hdr.get("compress", "zlib"))
+            return {"shape": [len(framed)], "dtype": "uint8"}, framed
+        elif kind == "region_import":
+            self._nmp.region_import(region, body[pos:],
+                                    point=point or "migrate-import")
+            return {"shape": None}, b""
         elif kind == "blob_put":
             stored = self._nmp.blob_put(
                 region, body[pos:], compress=hdr.get("compress", "zlib"),
@@ -440,6 +489,11 @@ def main(argv=None):
     ap.add_argument("--no-control-ops", action="store_true",
                     help="deny node-wide control ops (crash / set-faults / "
                          "ensure / all-tenant metrics) to tenants")
+    ap.add_argument("--pool-secret",
+                    default=os.environ.get("REPRO_POOL_SECRET", ""),
+                    help="shared secret for the tcp hello handshake (HMAC "
+                         "challenge); env REPRO_POOL_SECRET. Unix sockets "
+                         "are exempt (filesystem-gated)")
     ap.add_argument("--conn-timeout", type=float, default=600.0,
                     help="per-connection idle timeout in seconds "
                          "(0 = never drop quiet trainers)")
@@ -474,7 +528,8 @@ def main(argv=None):
     server = PoolServer(device, args.addr,
                         default_quota=args.default_quota,
                         control_ops=not args.no_control_ops,
-                        conn_timeout=args.conn_timeout or None)
+                        conn_timeout=args.conn_timeout or None,
+                        secret=args.pool_secret)
     stop = threading.Event()
 
     def _sig(signum, frame):

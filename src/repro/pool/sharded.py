@@ -8,24 +8,36 @@ the (proxy-mode) allocator carries a global offset that encodes its owning
 shard. Raw ``read``/``write``/``persist`` and every near-memory op route by
 offset; domain-level ops (alloc/get/free) route by *placement*.
 
-Placement (``PoolTopology``) is deterministic by construction — a pure
-CRC32 hash of the domain name over the shard count, overridable per domain
-with explicit pins — so the same topology + the same domain names always
-produce the same assignment, across processes and across restarts
-(recovery must never re-place a domain). ``undo-log`` aliases to
-``embedding-mirror`` by default so the fused ``undo_log_append`` op finds
-its mirror and its log slot on the SAME node; near-memory execution stays
-near the right memory. If a placement (or an explicit pin) does separate
-the two regions of a fused op, the op degrades to a correct-but-chatty
-host-driven path (snapshot from the mirror shard, slot write to the log
-shard) instead of failing — the crash window keeps its named fault point.
+Placement is an epoch-versioned ``PlacementMap`` (``pool/placement.py``):
+deterministic by construction — a pure CRC32 hash of the domain name over
+the shard count, overridable per domain with explicit pins — and versioned
+by *placement epochs*, the numbered move records live migration appends.
+The same (shards, pins, epochs) inputs always produce the same assignment,
+across processes and across restarts (recovery must never re-place or
+re-hash a domain). ``undo-log`` aliases to ``embedding-mirror`` by default
+so the fused ``undo_log_append`` op finds its mirror and its log slot on
+the SAME node; migration preserves the invariant by moving the alias group
+in one epoch. If a placement (or an explicit pin) does separate the two
+regions of a fused op, the op degrades to a correct-but-chatty host-driven
+path instead of failing.
+
+Live migration (``migrate_domain``) streams a verbatim region-image copy to
+the destination node via the ``region_export``/``region_import`` near-memory
+ops (compressed frames, CRC over the stored bytes), then flips the
+placement — appending an epoch and publishing it through ``epoch_sink`` in
+one atomic write — and only then garbage-collects the source copy. Named
+fault windows (``migrate.pre-copy``, ``migrate.mid-copy``,
+``migrate.post-copy-pre-flip``, ``migrate.post-flip-pre-gc``) bracket every
+step, so a crash anywhere recovers bit-identically to exactly one side of
+the flip; ``sweep_stale_domains`` reclaims the copy the crash stranded
+(by-name frees — the undo-ring grow pattern — so it can never double-free).
 
 A domain never spans shards: its superblock entry, its regions, and all
 their bytes live wholly inside the owning shard's own allocator directory.
-Tenancy therefore stays per shard (namespaced keys, quotas, owned-range
-isolation are enforced by each node exactly as for a single node), and
-metrics stay attributable: ``metrics`` aggregates every shard's counters
-into one ``PoolMetrics`` while ``shard_metrics()`` keeps the per-node view.
+Tenancy therefore stays per shard, and metrics stay attributable:
+``metrics`` aggregates every shard's counters into one ``PoolMetrics``
+while ``shard_metrics()`` keeps the per-node view — now including the
+used/capacity gauges ``RebalancePolicy`` watermarks feed on.
 
 Fault injection and power events are per shard: ``crash_shard(i)`` /
 ``set_shard_faults(i, schedule)`` drill one node while the others keep
@@ -35,87 +47,29 @@ serving; the plain ``crash()``/``faults`` forms fan out to every shard
 from __future__ import annotations
 
 import dataclasses
-import zlib
-from typing import Optional, Sequence, Union
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.pool.allocator import Region
 from repro.pool.device import PoolDevice, PoolError, make_pool
 from repro.pool.faults import FaultSchedule, InjectedCrash
 from repro.pool.metrics import OpStat, PoolMetrics
+from repro.pool.nmp import NmpQueue
+from repro.pool.placement import (Migration, PlacementMap, PoolTopology,
+                                  RebalancePolicy)
+
+__all__ = ["SHARD_SPAN", "Migration", "PlacementMap", "PoolTopology",
+           "RebalancePolicy", "ShardedPool", "merge_metrics"]
 
 # Each shard's offset window in the global address space. Large enough that
 # no single emulated node ever grows past it; small enough that global
 # offsets stay exact python ints (they are never packed into float64).
 SHARD_SPAN = 1 << 44
 
-
-@dataclasses.dataclass(frozen=True)
-class PoolTopology:
-    """Deterministic domain -> shard placement over an ordered shard list.
-
-    ``shards`` is the ordered tuple of node addresses (order is identity:
-    shard i is always the i-th address — recovery reconnects by index).
-    ``pin`` maps a domain name to an explicit shard index; everything else
-    hashes. ``ALIAS`` makes co-location a property of the *policy*, not of
-    luck: ``undo-log`` places wherever ``embedding-mirror`` places unless
-    pinned apart explicitly.
-    """
-
-    shards: tuple = ()
-    pin: dict = dataclasses.field(default_factory=dict)
-
-    ALIAS = {"undo-log": "embedding-mirror"}
-
-    @property
-    def nshards(self) -> int:
-        return len(self.shards)
-
-    def place(self, domain: str) -> int:
-        if self.nshards == 0:
-            raise PoolError("empty topology: no shards")
-        if domain in self.pin:
-            idx = int(self.pin[domain])
-            if not 0 <= idx < self.nshards:
-                raise PoolError(f"pin {domain!r} -> shard {idx} out of "
-                                f"range (have {self.nshards} shards)")
-            return idx
-        key = self.ALIAS.get(domain, domain)
-        if key != domain and key in self.pin:
-            return self.place(key)
-        return zlib.crc32(key.encode()) % self.nshards
-
-    def to_json(self) -> dict:
-        return {"shards": list(self.shards),
-                "pin": {k: int(v) for k, v in self.pin.items()}}
-
-    @classmethod
-    def from_json(cls, obj: dict) -> "PoolTopology":
-        return cls(shards=tuple(obj.get("shards") or ()),
-                   pin={k: int(v) for k, v in (obj.get("pin") or {}).items()})
-
-    @classmethod
-    def parse(cls, shards: Union[str, Sequence[str]],
-              placement: Union[str, dict, None] = None) -> "PoolTopology":
-        """Build from CLI-ish inputs: ``shards`` is a list of addresses or
-        one comma-separated string; ``placement`` is a dict or a
-        ``dom=idx,dom=idx`` string of explicit pins."""
-        if isinstance(shards, str):
-            shards = [s.strip() for s in shards.split(",") if s.strip()]
-        pin: dict = {}
-        if isinstance(placement, dict):
-            pin = {k: int(v) for k, v in placement.items()}
-        elif placement:
-            for part in placement.split(","):
-                part = part.strip()
-                if not part:
-                    continue
-                dom, _, idx = part.partition("=")
-                if not idx.lstrip("-").isdigit():
-                    raise PoolError(f"bad placement spec {part!r} "
-                                    f"(want domain=shard_index)")
-                pin[dom.strip()] = int(idx)
-        return cls(shards=tuple(shards), pin=pin)
+# The migration windows, in protocol order (also the crash-matrix axis).
+MIGRATE_WINDOWS = ("migrate.pre-copy", "migrate.mid-copy",
+                   "migrate.post-copy-pre-flip", "migrate.post-flip-pre-gc")
 
 
 class _Shard:
@@ -135,7 +89,6 @@ class _Shard:
             from repro.pool.allocator import PoolAllocator
             self.alloc = PoolAllocator(device, tenant=tenant or None,
                                        quota=quota)
-            from repro.pool.nmp import NmpQueue
             self.nmp = NmpQueue(device)
 
     def rebuild(self):
@@ -169,6 +122,11 @@ class _Shard:
                     "shape": list(r.shape)}
                 for n, r in self.alloc._regions(domain).items()}
 
+    def list_domains(self) -> list:
+        if self.remote:
+            return self.device.list_remote_domains()
+        return self.alloc.tenant_domains()
+
     def free_domain(self, domain, point) -> bool:
         if self.remote:
             return self.device.free_remote_domain(domain, point)
@@ -179,11 +137,23 @@ class _Shard:
             return self.device.free_remote_region(domain, name, point)
         return self.alloc._free_region(domain, name, point)
 
+    def region(self, domain: str, name: str, ent: dict) -> Region:
+        """Shard-local Region handle (offsets inside this node's device)."""
+        return Region(self.device, domain, name, ent["off"], ent["nbytes"],
+                      ent["dtype"], tuple(ent["shape"]))
+
+    def queue(self) -> NmpQueue:
+        """Near-memory dispatch against THIS node (local or over its wire)."""
+        return self.nmp if not self.remote else NmpQueue(self.device)
+
     # -- metrics --------------------------------------------------------------
     def metrics_snapshot(self) -> dict:
         if self.remote:
             return self.device.metrics_snapshot()
-        return self.device.metrics.snapshot()
+        m = self.device.metrics
+        m.used_bytes = self.alloc.used_bytes()      # capacity-watermark gauges
+        m.capacity_bytes = self.device.capacity
+        return m.snapshot()
 
     def reset_metrics(self):
         if self.remote:
@@ -212,6 +182,8 @@ def merge_metrics(snapshots: Sequence[dict],
             ent = agg.comp.setdefault(kind, [0, 0])
             ent[0] += raw
             ent[1] += stored
+        agg.used_bytes += m.used_bytes
+        agg.capacity_bytes += m.capacity_bytes
         agg.dropped_flushes += m.dropped_flushes
         agg.torn_writes += m.torn_writes
         agg.crashes += m.crashes
@@ -231,36 +203,55 @@ class ShardedPool(PoolDevice):
 
     def __init__(self, shards: Sequence, tenant: str = "default",
                  quota: int = 0, pin: Optional[dict] = None,
-                 topology: Optional[PoolTopology] = None):
-        if topology is None:
+                 topology: Optional[PlacementMap] = None,
+                 placement: Optional[PlacementMap] = None,
+                 secret: str = ""):
+        placement = placement if placement is not None else topology
+        if placement is None:
             addrs = [s if isinstance(s, str) else
                      getattr(s, "addr", f"<local:{i}>")
                      for i, s in enumerate(shards)]
-            topology = PoolTopology(shards=tuple(addrs),
-                                    pin=dict(pin or {}))
+            placement = PlacementMap(shards=tuple(addrs),
+                                     pin=dict(pin or {}))
         if not shards:
             raise PoolError("sharded backend needs at least one shard")
-        self.topology = topology
+        self.placement = placement
         self.tenant = tenant
         self.closed = False
         self._faults: Optional[FaultSchedule] = None
+        self._secret = secret
+        # rebalancing hooks: a policy (attached by make_pool / the manager)
+        # proposes migrations off the watermark gauges; the sink is the
+        # durable half of the epoch flip (the manager points it at
+        # POOL.json); the window hook lets drills act at a named window
+        # (kill -9 a node mid-copy) without patching the protocol
+        self.rebalance: Optional[RebalancePolicy] = None
+        self.epoch_sink: Optional[Callable[[PlacementMap], None]] = None
+        self.migrate_window_hook: Optional[Callable[[str], None]] = None
         self.shards: list[_Shard] = []
         for i, spec in enumerate(shards):
             if isinstance(spec, str):
                 dev = make_pool("remote", addr=spec, tenant=tenant,
-                                quota=quota)
+                                quota=quota, secret=secret)
             else:
                 dev = spec
             self.shards.append(_Shard(i, dev, tenant, quota))
         # fail fast on a policy that strands the fused op cross-shard
-        # *silently*: an explicit pin may separate mirror and log (the op
-        # falls back to the host-driven path), but that is a choice the
-        # topology records, never an accident of hashing
-        if (self.topology.place("undo-log")
-                != self.topology.place("embedding-mirror")
-                and "undo-log" not in self.topology.pin):
-            raise PoolError("topology separates undo-log from "
+        # *silently*: an explicit pin (or an explicit single-domain move)
+        # may separate mirror and log — the op falls back to the
+        # host-driven path — but that is a choice the placement records,
+        # never an accident of hashing
+        if (self.placement.place("undo-log")
+                != self.placement.place("embedding-mirror")
+                and self.placement.explicit("undo-log") is None):
+            raise PoolError("placement separates undo-log from "
                             "embedding-mirror without an explicit pin")
+
+    @property
+    def topology(self) -> PlacementMap:
+        """The placement map (historic name, kept for callers that predate
+        the epoch-versioned refactor)."""
+        return self.placement
 
     # -- address space ---------------------------------------------------------
     @property
@@ -322,6 +313,22 @@ class ShardedPool(PoolDevice):
         shard.device.crash()
         shard.rebuild()
 
+    def reconnect_shard(self, i: int):
+        """Re-dial shard ``i`` after its node restarted (the old client
+        connection is fenced after any mid-exchange transport failure)."""
+        addr = self.placement.shards[i] if i < len(self.placement.shards) \
+            else None
+        if not isinstance(addr, str) or addr.startswith("<local"):
+            raise PoolError(f"shard {i} has no reconnectable address")
+        old = self.shards[i]
+        try:
+            old.device.close()
+        except PoolError:
+            pass
+        dev = make_pool("remote", addr=addr, tenant=self.tenant,
+                        quota=old.quota, secret=self._secret)
+        self.shards[i] = _Shard(i, dev, self.tenant, old.quota)
+
     @property
     def faults(self) -> Optional[FaultSchedule]:
         return self._faults
@@ -329,7 +336,9 @@ class ShardedPool(PoolDevice):
     @faults.setter
     def faults(self, schedule: Optional[FaultSchedule]):
         # fan out to every node: each shard counts its own occurrences (a
-        # point fires on the n-th hit at the node that serves it)
+        # point fires on the n-th hit at the node that serves it). The
+        # pool-level copy serves the migration windows and the cross-shard
+        # fallback path, which execute here, not inside any one node.
         for shard in self.shards:
             if shard.remote:
                 shard.device.faults = schedule
@@ -359,7 +368,7 @@ class ShardedPool(PoolDevice):
                               if not s.get("unreachable")])
 
     def shard_metrics(self) -> list[dict]:
-        """Per-node counter snapshots, index-aligned with the topology. A
+        """Per-node counter snapshots, index-aligned with the placement. A
         node that cannot be reached (killed, partitioned, fenced) yields
         ``{"unreachable": True, ...}`` instead of failing the whole view —
         the surviving shards' counters must stay observable mid-drill."""
@@ -384,29 +393,154 @@ class ShardedPool(PoolDevice):
     # -- allocator proxy (PoolAllocator routes through these) ------------------
     def alloc_region(self, domain: str, name: str, shape, dtype: str,
                      point: str = "superblock") -> dict:
-        i = self.topology.place(domain)
+        i = self.placement.place(domain)
         ent = self.shards[i].alloc_region(domain, name, shape, dtype, point)
         return self._globalize(i, ent)
 
     def get_region(self, domain: str, name: str) -> Optional[dict]:
-        i = self.topology.place(domain)
+        i = self.placement.place(domain)
         ent = self.shards[i].get_region(domain, name)
         return None if ent is None else self._globalize(i, ent)
 
     def list_regions(self, domain: str) -> dict:
-        i = self.topology.place(domain)
+        i = self.placement.place(domain)
         return {n: self._globalize(i, e)
                 for n, e in self.shards[i].list_regions(domain).items()}
 
     def free_remote_domain(self, domain: str,
                            point: str = "superblock") -> bool:
-        return self.shards[self.topology.place(domain)] \
+        return self.shards[self.placement.place(domain)] \
             .free_domain(domain, point)
 
     def free_remote_region(self, domain: str, name: str,
                            point: str = "superblock") -> bool:
-        return self.shards[self.topology.place(domain)] \
+        return self.shards[self.placement.place(domain)] \
             .free_region(domain, name, point)
+
+    # -- live migration --------------------------------------------------------
+    def _hit(self, point: str):
+        """Named migration window: drills may act here (window hook), and a
+        pool-level fault schedule may crash here — both sides of every
+        window are part of the recovery contract."""
+        if self.migrate_window_hook is not None:
+            self.migrate_window_hook(point)
+        f = self._faults
+        if f is not None and f.hit(point) == "crash-after":
+            raise InjectedCrash(point, f.counts[point])
+
+    def _alias_group(self, domain: str) -> list[str]:
+        """`domain` plus every alias follower currently co-located with it —
+        the set one epoch must move together so the fused-op co-location
+        invariant survives the migration."""
+        group = [domain]
+        for follower, leader in self.placement.ALIAS.items():
+            if leader == domain and follower != domain \
+                    and self.placement.place(follower) \
+                    == self.placement.place(domain):
+                group.append(follower)
+        return group
+
+    def migrate_domain(self, domain: str, dst: int,
+                       compress: str = "zlib") -> dict:
+        """Move `domain` (and its co-located alias group) to shard `dst`:
+        verbatim region-image copy (compressed frames, CRC over the stored
+        bytes), then the atomic epoch flip, then source GC. A crash at any
+        window leaves the domain wholly on exactly one side of the flip;
+        the stranded copy is reclaimed by ``sweep_stale_domains``."""
+        if not 0 <= dst < self.nshards:
+            raise PoolError(f"migrate {domain!r}: destination shard {dst} "
+                            f"out of range (have {self.nshards})")
+        src = self.placement.place(domain)
+        if src == dst:
+            return {"epoch": self.placement.epoch, "moved": (), "src": src,
+                    "dst": dst, "regions": 0, "link_bytes": 0,
+                    "raw_bytes": 0}
+        group = self._alias_group(domain)
+        src_shard, dst_shard = self.shards[src], self.shards[dst]
+        src_q, dst_q = src_shard.queue(), dst_shard.queue()
+        self._hit("migrate.pre-copy")
+        link_bytes = raw_bytes = nregions = 0
+        for dom in group:
+            ents = src_shard.list_regions(dom)
+            for name in sorted(ents):
+                ent = ents[name]
+                frame = src_q.region_export(src_shard.region(dom, name, ent),
+                                            compress=compress)
+                self._hit("migrate.mid-copy")
+                dent = dst_shard.alloc_region(dom, name,
+                                              tuple(ent["shape"]),
+                                              ent["dtype"], "migrate-alloc")
+                dst_q.region_import(dst_shard.region(dom, name, dent), frame,
+                                    point="migrate-import")
+                link_bytes += len(frame)
+                raw_bytes += int(ent["nbytes"])
+                nregions += 1
+        self._hit("migrate.post-copy-pre-flip")
+        # THE flip: new epoch in memory, then one atomic durable publish.
+        # Until the sink returns, recovery still reads the previous epoch
+        # (domain on src, untouched); after it, the new one (domain on dst,
+        # bit-identical image). There is no third state.
+        self.placement = self.placement.with_epoch(
+            {d: dst for d in group},
+            reason=f"migrate {domain}: shard {src} -> {dst}")
+        if self.epoch_sink is not None:
+            self.epoch_sink(self.placement)
+        self._hit("migrate.post-flip-pre-gc")
+        for dom in group:
+            src_shard.free_domain(dom, "migrate-gc")
+        return {"epoch": self.placement.epoch, "moved": tuple(group),
+                "src": src, "dst": dst, "regions": nregions,
+                "link_bytes": link_bytes, "raw_bytes": raw_bytes}
+
+    def sweep_stale_domains(self) -> list[tuple[str, int]]:
+        """Open-time sweep: free any copy of a domain living on a shard the
+        placement does not assign it to — the half-copy a crash-before-flip
+        stranded on the destination, or the source image a crash between
+        flip and GC leaked. Frees are by NAME against each node's own
+        directory (the undo-ring grow pattern), so a copy already freed —
+        by the crashed migration, or by a previous sweep — is a directory
+        miss, never a double-free. Unreachable nodes are skipped; a later
+        open sweeps them."""
+        swept = []
+        for i, shard in enumerate(self.shards):
+            try:
+                domains = shard.list_domains()
+            except PoolError:
+                continue
+            for dom in domains:
+                if self.placement.place(dom) != i \
+                        and shard.free_domain(dom, "migrate-sweep"):
+                    swept.append((dom, i))
+        return swept
+
+    def shard_domains(self, i: int) -> list:
+        """Tenant-visible domains materialised on shard ``i`` (wherever the
+        placement says they belong) — the sweep's and the policy's raw
+        view."""
+        return self.shards[i].list_domains()
+
+    def domain_groups(self, i: int) -> list[tuple[str, tuple, int]]:
+        """Alias-complete domain groups wholly placed on shard ``i`` with
+        their byte sizes: ``[(lead, (members...), nbytes), ...]`` — the
+        movable units ``RebalancePolicy`` chooses between."""
+        try:
+            doms = [d for d in self.shard_domains(i)
+                    if self.placement.place(d) == i]
+        except PoolError:
+            return []
+        out = []
+        followers = self.placement.ALIAS
+        for dom in sorted(doms):
+            leader = followers.get(dom)
+            if leader is not None and leader in doms:
+                continue                     # rides with its leader
+            group = [dom] + [f for f, ld in followers.items()
+                             if ld == dom and f in doms]
+            nbytes = sum(int(ent["nbytes"])
+                         for g in group
+                         for ent in self.shards[i].list_regions(g).values())
+            out.append((dom, tuple(group), nbytes))
+        return out
 
     # -- near-memory ops -------------------------------------------------------
     def _localize_region(self, region, shard: _Shard, local_off: int):
@@ -471,6 +605,12 @@ class ShardedPool(PoolDevice):
                 slot_bytes=int(extra["slot_bytes"]), idx=idx, new_rows=rows,
                 compress=extra.get("compress", "zlib"),
                 apply_point=point or "mirror-apply")
+        if kind == "region_export":
+            return q.region_export(region,
+                                   compress=extra.get("compress", "zlib"))
+        if kind == "region_import":
+            q.region_import(region, blob, point=point or "migrate-import")
+            return None
         if kind == "blob_put":
             return {"stored": q.blob_put(region, blob,
                                          compress=extra.get("compress",
@@ -486,7 +626,6 @@ class ShardedPool(PoolDevice):
         mirror shard and lands on the log shard. Chatty by design; the
         default placement never takes this path."""
         from repro.pool import undo_codec as uc
-        from repro.pool.nmp import NmpQueue
 
         q = NmpQueue(self)           # routes each piece to its owner
         old = q.undo_snapshot(mirror, idx)

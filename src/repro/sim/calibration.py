@@ -1,0 +1,88 @@
+"""Measured pool batches for simulator calibration and energy rows.
+
+One RM1-shaped training batch replayed against an emulated ``repro.pool``
+device — THE measurement rig shared by ``benchmarks/fig11_breakdown.py``
+(``--calibrate-from-pool`` feeding ``engine.calibrate_from_pool``),
+``benchmarks/fig12_timeline.py``, and ``benchmarks/fig13_energy.py`` (the
+measured wire-vs-pool energy cells), so every figure that quotes "measured
+pool counters" measures the *same* batch protocol.
+
+Capture modes:
+
+  * ``wire`` — the pre-fix tier-E path: the undo image round-trips to the
+    host (``nmp.undo_snapshot`` out, host-driven log write back in),
+    uncompressed;
+  * ``pool`` — the paper's active design: one fused ``undo_log_append``
+    captures, compresses (zlib) and commits the image inside the memory
+    node; only (idx, new_rows) cross the link.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def embedding_like_table(rng, shape) -> np.ndarray:
+    """Embedding-like (not max-entropy) values: quantised mantissas, the
+    compressible structure trained tables actually have."""
+    return (rng.integers(-512, 512, shape) / 256.0).astype(np.float32)
+
+
+def measured_pool_batch(backend: str = "pmem", mode: str = "pool", *,
+                        dim: int = 32, n_tables: int = 20,
+                        rows_per: int = 2048, batch: int = 256,
+                        n_sparse: int = 8, path: Optional[str] = None,
+                        with_blob: bool = False):
+    """Run one measured batch (near-memory bag lookup + tier-E capture in
+    `mode`, optionally a dense ``blob_put``) on a fresh ``backend`` device
+    and return its ``PoolMetrics``. The one-time mirror load and the
+    ring-sizing warmup are excluded from the counters."""
+    from repro.core.checkpoint.undo_log import UndoRing
+    from repro.pool import (DramPool, EmbeddingPoolMirror, NmpQueue,
+                            PmemPool, PoolAllocator)
+
+    capacity = n_tables * rows_per * dim * 8
+    if backend == "dram":
+        dev = DramPool(capacity=capacity)
+    else:
+        if not path:
+            raise ValueError("pmem measurement needs a file path")
+        dev = PmemPool(path, capacity=capacity)
+    rng = np.random.default_rng(0)
+    table = embedding_like_table(rng, (n_tables, rows_per, dim))
+    mir = EmbeddingPoolMirror(dev, table)
+    alloc = PoolAllocator(dev)
+    ring = UndoRing(alloc, max_logs=4,
+                    compress="none" if mode == "wire" else "zlib")
+    dense = alloc.domain("dense").alloc("slot0", shape=(1 << 16,),
+                                        dtype="uint8") if with_blob else None
+    ids = rng.integers(0, rows_per, (batch, n_tables, n_sparse))
+    flat_idx = np.unique(ids + np.arange(n_tables)[None, :, None]
+                         * rows_per)
+    flat = table.reshape(-1, dim)
+    new_rows = (flat[flat_idx] * 0.999).astype(np.float32)
+    # warmup sizes the ring so growth stays out of the measured window
+    ring.append(0, flat_idx, flat[flat_idx])
+    dev.metrics.reset()          # count the batch, not the warmup/load
+
+    reduced = mir.bag_lookup(ids)                  # near-memory reduce
+    if mode == "wire":
+        # before: image out over the link, logged from the host.
+        # device.write only meters media, so charge the write-back leg
+        # (idx + old rows crossing back in) explicitly — the round-trip
+        # the fused op exists to kill
+        old = mir.nmp.undo_snapshot(mir.region, flat_idx)
+        ring.append(1, flat_idx, old)
+        dev.metrics.record_link("link_in", flat_idx.nbytes + old.nbytes)
+        mir.nmp.row_update(mir.region, flat_idx, new_rows,
+                           point="mirror-apply")
+    else:
+        # after: fused server-side capture + pool-side compression
+        ring.log_and_apply(1, mir.region, flat_idx, new_rows)
+    if dense is not None:
+        NmpQueue(dev).blob_put(dense, np.zeros(1 << 14, np.uint8).tobytes())
+    assert reduced.shape == (batch, n_tables, dim)
+    m = dev.metrics
+    dev.close()
+    return m

@@ -1,0 +1,401 @@
+"""Epoch-versioned placement + live domain migration.
+
+Covers the PlacementMap contract (epoch replay in order, torn tail record
+falling back to the previous epoch — never a re-hash), the migration
+crash-window matrix ({pre-copy, mid-copy, post-copy-pre-flip,
+post-flip-pre-gc} x {sharded over pmem, sharded over remote}) with
+bit-identical recovery, the domain wholly on exactly one shard, and the
+open-time sweep reclaiming whatever the crash stranded (no double-free),
+plus the capacity-watermark RebalancePolicy end to end through the
+checkpoint manager (gauge trigger -> migration -> epoch in POOL.json ->
+recovery on the final shard)."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import CheckpointConfig, TrainConfig
+from repro.core.checkpoint import recovery
+from repro.core.checkpoint.manager import CheckpointManager
+from repro.core.checkpoint.undo_log import UndoRing
+from repro.data.synthetic import make_batches
+from repro.pool import (DramPool, FaultSchedule, InjectedCrash, PlacementMap,
+                        PmemPool, PoolAllocator, PoolError, PoolServer,
+                        RebalancePolicy, ShardedPool)
+from repro.pool.sharded import MIGRATE_WINDOWS, SHARD_SPAN
+from repro.training import train_loop
+
+COMPRESS = os.environ.get("REPRO_POOL_COMPRESS", "zlib")
+# the CI `rebalance` cell turns the watermark policy on for the whole
+# sharded suite; tests here force it on regardless
+REBALANCE = float(os.environ.get("REPRO_POOL_REBALANCE", "0") or 0)
+
+
+# ---------------------------------------------------------------------------
+# PlacementMap: epoch replay + torn-record fallback
+# ---------------------------------------------------------------------------
+
+
+def test_epochs_replay_in_order_and_newest_wins():
+    pm = PlacementMap(shards=("a", "b", "c"))
+    home = pm.place("embedding-mirror")
+    pm1 = pm.with_epoch({"embedding-mirror": (home + 1) % 3,
+                         "undo-log": (home + 1) % 3}, reason="mv1")
+    pm2 = pm1.with_epoch({"embedding-mirror": (home + 2) % 3,
+                          "undo-log": (home + 2) % 3}, reason="mv2")
+    assert (pm.epoch, pm1.epoch, pm2.epoch) == (0, 1, 2)
+    assert pm2.place("embedding-mirror") == (home + 2) % 3
+    assert pm2.place("undo-log") == pm2.place("embedding-mirror")
+    # untouched domains keep their hash placement across epochs
+    assert pm2.place("manifest") == pm.place("manifest")
+    # the json roundtrip preserves the full history
+    back = PlacementMap.from_json(pm2.to_json())
+    assert back == pm2
+    assert back.place("embedding-mirror") == (home + 2) % 3
+
+
+def test_torn_epoch_record_falls_back_never_rehashes():
+    pm = PlacementMap(shards=("a", "b", "c"))
+    home = pm.place("embedding-mirror")
+    moved1, moved2 = (home + 1) % 3, (home + 2) % 3
+    pm2 = pm.with_epoch({"embedding-mirror": moved1, "undo-log": moved1}) \
+            .with_epoch({"embedding-mirror": moved2, "undo-log": moved2})
+    obj = pm2.to_json()
+    # tear the NEWEST record: fall back to epoch 1 (moved1), not the hash
+    obj["epochs"][-1]["crc"] ^= 0x1
+    got = PlacementMap.from_json(obj)
+    assert got.epoch == 1
+    assert got.place("embedding-mirror") == moved1 != home
+    # a malformed record ends the replay the same way
+    obj2 = pm2.to_json()
+    obj2["epochs"][-1] = {"garbage": True}
+    assert PlacementMap.from_json(obj2).epoch == 1
+    # an out-of-sequence record is not trusted either
+    obj3 = pm2.to_json()
+    obj3["epochs"] = [obj3["epochs"][1]]     # epoch 2 without epoch 1
+    got3 = PlacementMap.from_json(obj3)
+    assert got3.epoch == 0 and got3.place("embedding-mirror") == home
+
+
+def test_recovery_lands_every_domain_on_its_final_shard(tmp_path):
+    """A POOL.json containing multiple epochs: recovery replays them in
+    order and every domain lands on its FINAL shard (both content and
+    directory placement), without re-placing anything."""
+    servers = _start_servers(tmp_path, 3)
+    try:
+        addrs = [s.addr for s in servers]
+        root = str(tmp_path / "ck")
+        cc = CheckpointConfig(directory=root, dense_interval=1,
+                              pool_backend="sharded",
+                              pool_shards=",".join(addrs),
+                              pool_compress=COMPRESS)
+        mgr, data, tc, b, init_fn = _train_manager(cc, steps=3)
+        pool = mgr.pool
+        home = pool.placement.place("embedding-mirror")
+        hop1, hop2 = (home + 1) % 3, (home + 2) % 3
+        for dst in (hop1, hop2):       # two epochs of movement
+            info = pool.migrate_domain("embedding-mirror", dst,
+                                       compress=COMPRESS)
+            mgr.rebind_domains(info["moved"])
+        # keep checkpointing after the moves: the rebound handles must
+        # route tier-E to the new shard
+        rng = np.random.default_rng(1)
+        d = mgr.mirror_region.shape[-1]
+        idx = np.unique(rng.integers(0, mgr.mirror_region.shape[0], 16)) \
+            .astype(np.int64)
+        rows = rng.standard_normal((idx.size, d)).astype(np.float32)
+        mgr._do_tier_e(3, idx, rows)
+        mirror_after = np.array(mgr.mirror_rows)
+        mgr.pool.close()
+        epochs = json.load(open(os.path.join(root, "POOL.json")))["epochs"]
+        assert [e["epoch"] for e in epochs] == [1, 2]
+        rec = recovery.recover(root)
+        assert rec.pool.placement.epoch == 2
+        assert rec.pool.placement.place("embedding-mirror") == hop2
+        assert rec.pool.placement.place("undo-log") == hop2
+        np.testing.assert_array_equal(rec.embed_rows, mirror_after)
+        # the directory agrees with the placement: region offsets encode
+        # the final shard's window, and no other shard holds a copy
+        mirror = PoolAllocator(rec.pool).domain("embedding-mirror") \
+            .get("rows")
+        assert int(mirror.off) // SHARD_SPAN == hop2
+        for i in range(3):
+            if i != hop2:
+                assert "embedding-mirror" not in rec.pool.shard_domains(i)
+        rec.pool.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
+
+
+# ---------------------------------------------------------------------------
+# the migration crash-window matrix
+# ---------------------------------------------------------------------------
+
+
+def _start_servers(tmp_path, n, tag=""):
+    servers = []
+    for i in range(n):
+        dev = PmemPool(str(tmp_path / f"node{tag}{i}.img"), 1 << 21)
+        servers.append(PoolServer(
+            dev, f"unix:{tmp_path}/n{tag}{i}.sock").start())
+    return servers
+
+
+def _train_manager(cc, steps=3):
+    b = get_arch("tinyllama-1.1b", smoke=True)
+    tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
+    data = make_batches(b.model, 4, 16, seed=3)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+    train_loop.train(b.model, tc, data, steps, relaxed=True, state=st0,
+                     ckpt_manager=mgr)
+    mgr.flush()
+    return mgr, data, tc, b, init_fn
+
+
+def _domain_bytes(pool, domain):
+    """Every region's bytes for `domain`, read through placement routing."""
+    out = {}
+    for name, r in PoolAllocator(pool).domain(domain).regions().items():
+        out[name] = bytes(pool.read(r.off, r.nbytes, tag="oracle"))
+    return out
+
+
+@pytest.mark.parametrize("flavor", ["pmem", "remote"])
+@pytest.mark.parametrize("window", MIGRATE_WINDOWS)
+def test_migration_crash_window_matrix(tmp_path, rng, window, flavor):
+    """Crash at every named migration window, on sharded-over-pmem
+    (in-process devices) and sharded-over-remote (memory-node servers):
+    recovery is bit-identical, the domain group lives wholly on exactly one
+    shard — the pre-flip source or the post-flip destination — and the
+    open-time sweep reclaims the stranded copy (asserted, and re-sweeping
+    frees nothing twice)."""
+    paths = [str(tmp_path / f"m{i}.img") for i in range(2)]
+    servers = []
+    if flavor == "pmem":
+        pool = ShardedPool([PmemPool(p, 1 << 20) for p in paths])
+    else:
+        servers = [PoolServer(PmemPool(p, 1 << 20),
+                              f"unix:{tmp_path}/m{i}.sock").start()
+                   for i, p in enumerate(paths)]
+        pool = ShardedPool([s.addr for s in servers])
+    sink_file = str(tmp_path / "placement.json")
+
+    def sink(pm):
+        with open(sink_file + ".tmp", "w") as f:
+            json.dump(pm.to_json(), f)
+        os.replace(sink_file + ".tmp", sink_file)
+
+    pool.epoch_sink = sink
+    sink(pool.placement)
+    a = PoolAllocator(pool)
+    tab = rng.standard_normal((96, 8)).astype(np.float32)
+    mirror = a.domain("embedding-mirror").alloc("rows", shape=tab.shape,
+                                                dtype="float32")
+    mirror.write_array(tab)
+    mirror.persist(point="mirror-load")
+    ring = UndoRing(a, max_logs=4, compress=COMPRESS)
+    idx = np.unique(rng.integers(0, 96, 20))
+    new = rng.standard_normal((idx.size, 8)).astype(np.float32)
+    ring.log_and_apply(0, mirror, idx, new)
+    src = pool.placement.place("embedding-mirror")
+    dst = 1 - src
+    oracle = {d: _domain_bytes(pool, d)
+              for d in ("embedding-mirror", "undo-log")}
+
+    # mid-copy crashes on the SECOND window hit, so the first region has
+    # already landed on the destination — the partial copy the sweep must
+    # find; every other window fires on its first (only) hit
+    occ = 2 if window == "migrate.mid-copy" else 1
+    pool.faults = FaultSchedule.crash_at(window, occurrence=occ)
+    with pytest.raises(InjectedCrash):
+        pool.migrate_domain("embedding-mirror", dst, compress=COMPRESS)
+    pool.close()                               # process death: cache gone
+
+    # ---- restart: reopen nodes, replay the placement record, sweep ------
+    if flavor == "remote":
+        for i, s in enumerate(servers):
+            s.shutdown(close_device=True)
+            servers[i] = PoolServer(PmemPool.open(paths[i]),
+                                    s.addr).start()
+        shards2 = [s.addr for s in servers]
+    else:
+        shards2 = [PmemPool.open(p) for p in paths]
+    pmap = PlacementMap.from_json(json.load(open(sink_file)))
+    pool2 = ShardedPool(shards2, placement=pmap)
+    swept = pool2.sweep_stale_domains()
+
+    flipped = window == "migrate.post-flip-pre-gc"
+    owner = dst if flipped else src
+    stale = src if flipped else dst
+    assert pool2.placement.place("embedding-mirror") == owner
+    assert pool2.placement.place("undo-log") == owner
+    assert pool2.placement.epoch == (1 if flipped else 0)
+    # the stranded side was swept (pre-copy strands nothing on dst)
+    if window != "migrate.pre-copy":
+        assert any(s == stale for _, s in swept), \
+            f"window {window}: nothing swept off shard {stale} ({swept})"
+    assert "embedding-mirror" not in pool2.shard_domains(stale)
+    assert "undo-log" not in pool2.shard_domains(stale)
+    # sweeping again frees nothing (by-name frees can never double-free)
+    assert pool2.sweep_stale_domains() == []
+
+    # bit-identical content on the surviving side
+    for dom, regions in oracle.items():
+        got = _domain_bytes(pool2, dom)
+        assert set(got) == set(regions), f"{dom}: region set changed"
+        for name, blob in regions.items():
+            assert got[name] == blob, f"{dom}/{name} not bit-identical"
+    # and the ring still rolls back: committed entry readable, rows intact
+    ring2 = UndoRing(PoolAllocator(pool2), 4, compress=COMPRESS)
+    got_idx, got_rows, _ = ring2.read(0)
+    np.testing.assert_array_equal(got_idx, idx)
+    np.testing.assert_array_equal(got_rows, tab[idx])
+    pool2.close()
+    for s in servers:
+        s.shutdown(close_device=True)
+
+
+def test_migration_preserves_fused_append_link_bound(tmp_path, rng):
+    """After a live migration the fused undo capture still runs wholly on
+    the (new) owning shard: per-step trainer link bytes stay
+    <= idx + new_rows + O(header)."""
+    servers = _start_servers(tmp_path, 2, tag="lb")
+    try:
+        addrs = [s.addr for s in servers]
+        cc = CheckpointConfig(directory=str(tmp_path / "ck"),
+                              dense_interval=0, pool_backend="sharded",
+                              pool_shards=",".join(addrs),
+                              pool_compress=COMPRESS)
+        b = get_arch("tinyllama-1.1b", smoke=True)
+        tc = TrainConfig(checkpoint=cc)
+        init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+        st0 = init_fn(jax.random.PRNGKey(0))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+        d = mgr.mirror_region.shape[-1]
+        nrows = mgr.mirror_region.shape[0]
+        idx = np.unique(rng.integers(0, nrows, 32)).astype(np.int64)
+        new = rng.standard_normal((idx.size, d)).astype(np.float32)
+        mgr._do_tier_e(0, idx, new)                 # ring creation
+        src = mgr.pool.placement.place("embedding-mirror")
+        info = mgr.pool.migrate_domain("embedding-mirror", 1 - src,
+                                       compress=COMPRESS)
+        mgr.rebind_domains(info["moved"])
+        assert int(mgr.mirror_region.off) // SHARD_SPAN == 1 - src
+        mgr.pool.reset_metrics()
+        sent = 0
+        for step in (1, 2, 3):
+            mgr._do_tier_e(step, idx, new)
+            sent += idx.nbytes + new.nbytes
+        m = mgr.pool.metrics
+        assert m.link_bytes() <= sent + 3 * 4096, \
+            f"fused capture left the owning shard after migration " \
+            f"({m.link_bytes()}B link > {sent}B operands)"
+        assert m.media_bytes("undo_snapshot") == 3 * idx.size * d * 4
+        mgr.pool.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
+
+
+# ---------------------------------------------------------------------------
+# capacity watermarks end to end
+# ---------------------------------------------------------------------------
+
+
+def test_watermark_policy_migrates_under_pressure(tmp_path):
+    """3 shards, rebalancing on: overfill the mirror's shard past the high
+    watermark with pinned ballast; the policy must migrate the mirror (its
+    aliased undo-log in the SAME epoch — pinned ballast is never moved),
+    training continues through the move, and a fresh recovery lands on the
+    destination bit-identically."""
+    servers = _start_servers(tmp_path, 3, tag="wm")
+    try:
+        addrs = [s.addr for s in servers]
+        root = str(tmp_path / "ck")
+        cc = CheckpointConfig(directory=root, dense_interval=0,
+                              pool_backend="sharded",
+                              pool_shards=",".join(addrs),
+                              pool_compress=COMPRESS,
+                              pool_rebalance=REBALANCE or 0.7)
+        mgr, data, tc, b, init_fn = _train_manager(cc, steps=2)
+        pool = mgr.pool
+        assert pool.rebalance is not None
+        pool.rebalance.check_every = 2
+        hot = pool.placement.place("embedding-mirror")
+        # pin ballast onto the hot shard and size it to cross the watermark
+        pool.placement = pool.placement.with_pin("ballast", hot)
+        mgr.record_placement()
+        snap = pool.shard_metrics()[hot]
+        need = int(pool.rebalance.high * snap["capacity_bytes"]
+                   - snap["used_bytes"]) + (64 << 10)
+        PoolAllocator(pool).domain("ballast").alloc(
+            "fill", shape=(max(need, 1),), dtype="uint8")
+        fill = pool.shard_metrics()[hot]
+        assert fill["used_bytes"] / fill["capacity_bytes"] \
+            >= pool.rebalance.high
+        # train on: the writer thread polls the gauges and migrates
+        st = init_fn(jax.random.PRNGKey(tc.seed))
+        train_loop.train(b.model, tc, data, 6, relaxed=True, state=st,
+                         ckpt_manager=mgr)
+        mgr.flush()
+        assert mgr.stats["migrations"] >= 1
+        new_home = pool.placement.place("embedding-mirror")
+        assert new_home != hot
+        assert pool.placement.place("undo-log") == new_home
+        # mirror and undo-log moved in the SAME epoch; ballast never moved
+        last = pool.placement.epochs[-1]
+        assert {"embedding-mirror", "undo-log"} <= set(last.moves)
+        assert pool.placement.place("ballast") == hot
+        mirror_after = np.array(mgr.mirror_rows)
+        mgr.pool.close()
+        rec = recovery.recover(root)
+        assert rec.pool.placement.place("embedding-mirror") == new_home
+        np.testing.assert_array_equal(rec.embed_rows, mirror_after)
+        for i in range(3):
+            if i != new_home:
+                assert "embedding-mirror" not in rec.pool.shard_domains(i)
+        rec.pool.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
+
+
+def test_reconnect_shard_after_node_restart(tmp_path, rng):
+    """The operator path the drills script by hand: a node dies and
+    restarts over its image; the fenced client is re-dialed in place and
+    the shard serves the same bytes at the same offsets."""
+    img = str(tmp_path / "rc0.img")
+    servers = [PoolServer(PmemPool(img, 1 << 20),
+                          f"unix:{tmp_path}/rc0.sock").start(),
+               PoolServer(PmemPool(str(tmp_path / "rc1.img"), 1 << 20),
+                          f"unix:{tmp_path}/rc1.sock").start()]
+    try:
+        pool = ShardedPool([s.addr for s in servers], pin={"d": 0})
+        r = PoolAllocator(pool).domain("d").alloc("x", shape=(32,),
+                                                  dtype="float32")
+        v = rng.standard_normal(32).astype(np.float32)
+        r.write_array(v)
+        r.persist(point="p")
+        servers[0].shutdown(close_device=True)      # node dies...
+        with pytest.raises(PoolError):
+            pool.read(r.off, r.nbytes)              # ...client is fenced
+        servers[0] = PoolServer(PmemPool.open(img),
+                                servers[0].addr).start()
+        pool.reconnect_shard(0)
+        got = np.frombuffer(bytes(pool.read(r.off, r.nbytes)), np.float32)
+        np.testing.assert_array_equal(got, v)
+        # only remote shards can re-dial
+        local = ShardedPool([DramPool(1 << 18)])
+        with pytest.raises(PoolError):
+            local.reconnect_shard(0)
+        pool.close()
+        local.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)

@@ -12,10 +12,11 @@ import numpy as np
 import pytest
 
 from repro.pool import (DramPool, FaultSchedule, InjectedCrash, NmpQueue,
-                        PmemPool, PoolAllocator, PoolConnectionError,
-                        PoolError, PoolServer, QuotaExceededError,
-                        RemotePool, TenantIsolationError, WireError,
-                        make_pool)
+                        PmemPool, PoolAllocator, PoolAuthError,
+                        PoolConnectionError, PoolError, PoolServer,
+                        QuotaExceededError, RemotePool,
+                        TenantIsolationError, WireError, make_pool,
+                        parse_addr)
 from repro.pool.allocator import DATA_START
 from repro.pool.remote import recv_frame, send_frame
 
@@ -490,3 +491,90 @@ def test_manager_recovery_survives_trainer_death(tmp_path):
         rec.pool.close()
     finally:
         srv.shutdown(close_device=True)
+
+
+# -- shared-secret auth (tcp transport) --------------------------------------
+
+
+@pytest.fixture
+def secure_tcp_server():
+    srv = PoolServer(DramPool(1 << 18), "tcp:127.0.0.1:0",
+                     secret="hunter2").start()
+    yield srv
+    srv.shutdown(close_device=True)
+
+
+def test_tcp_auth_good_secret_round_trips(secure_tcp_server, rng):
+    """The HMAC challenge handshake admits the right secret and the
+    connection then behaves exactly like an unauthenticated one."""
+    dev = RemotePool(secure_tcp_server.addr, tenant="t", timeout=20.0,
+                     secret="hunter2")
+    r = PoolAllocator(dev).domain("d").alloc("x", shape=(8, 4),
+                                             dtype="float32")
+    v = rng.standard_normal((8, 4)).astype(np.float32)
+    r.write_array(v)
+    r.persist(point="p")
+    np.testing.assert_array_equal(r.read_array(), v)
+    out = NmpQueue(dev).gather(r, np.array([1, 3]))
+    np.testing.assert_array_equal(out, v[[1, 3]])
+    dev.close()
+
+
+def test_tcp_auth_wrong_secret_rejected(secure_tcp_server):
+    with pytest.raises(PoolAuthError):
+        RemotePool(secure_tcp_server.addr, tenant="t", timeout=20.0,
+                   secret="wrong")
+
+
+def test_tcp_auth_missing_secret_rejected(secure_tcp_server, monkeypatch):
+    monkeypatch.delenv("REPRO_POOL_SECRET", raising=False)
+    with pytest.raises(PoolAuthError):
+        RemotePool(secure_tcp_server.addr, tenant="t", timeout=20.0)
+
+
+def test_tcp_auth_secret_from_environment(secure_tcp_server, monkeypatch):
+    """make_pool / recovery reconnects carry no secret argument — the env
+    var (never POOL.json) supplies it."""
+    monkeypatch.setenv("REPRO_POOL_SECRET", "hunter2")
+    dev = make_pool("remote", addr=secure_tcp_server.addr, tenant="t")
+    assert PoolAllocator(dev).domain("d").get("nothing") is None
+    dev.close()
+
+
+def test_unix_socket_exempt_from_secret(tmp_path):
+    """Unix transports are filesystem-gated: a server started with a secret
+    still admits local unix clients without a handshake."""
+    srv = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/sec.sock",
+                     secret="hunter2").start()
+    try:
+        dev = RemotePool(srv.addr, tenant="t", timeout=20.0)
+        assert dev.capacity > 0
+        dev.close()
+    finally:
+        srv.shutdown(close_device=True)
+
+
+def test_auth_challenge_is_single_use_per_attempt(secure_tcp_server):
+    """A replayed or transplanted proof fails: each hello attempt answers a
+    fresh nonce, and the proof binds the tenant name."""
+    from repro.pool.remote import auth_proof
+    kind, target = parse_addr(secure_tcp_server.addr)
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.settimeout(20.0)
+    s.connect(target)
+    send_frame(s, {"op": "hello", "tenant": "a"})
+    hdr, _ = recv_frame(s)
+    assert hdr["kind"] == "PoolAuthError" and hdr["challenge"]
+    # right secret, wrong tenant binding -> rejected
+    proof = auth_proof("hunter2", hdr["challenge"], "someone-else")
+    send_frame(s, {"op": "hello", "tenant": "a",
+                   "challenge": hdr["challenge"], "auth": proof})
+    hdr2, _ = recv_frame(s)
+    assert not hdr2.get("ok") and hdr2["kind"] == "PoolAuthError"
+    # the old nonce is dead: replaying the correct computation now fails too
+    good = auth_proof("hunter2", hdr["challenge"], "a")
+    send_frame(s, {"op": "hello", "tenant": "a",
+                   "challenge": hdr["challenge"], "auth": good})
+    hdr3, _ = recv_frame(s)
+    assert not hdr3.get("ok") and hdr3["kind"] == "PoolAuthError"
+    s.close()

@@ -24,6 +24,10 @@ from repro.pool.sharded import SHARD_SPAN
 from repro.training import train_loop
 
 COMPRESS = os.environ.get("REPRO_POOL_COMPRESS", "zlib")
+# the CI `rebalance` cell arms the capacity-watermark policy across the
+# whole matrix: migrations may fire mid-drill and recovery must still be
+# bit-identical (0 = off, the default cells)
+REBALANCE = float(os.environ.get("REPRO_POOL_REBALANCE", "0") or 0)
 STEPS = 6
 SCENARIOS = ("kill-shard", "torn-shard", "partition", "all-restart")
 MANAGER_DOMAINS = ("embedding-mirror", "undo-log", "manifest", "dense")
@@ -297,7 +301,8 @@ def _sharded_cc(root, addrs):
     return CheckpointConfig(directory=root, dense_interval=1,
                             pool_backend="sharded",
                             pool_shards=",".join(addrs),
-                            pool_compress=COMPRESS)
+                            pool_compress=COMPRESS,
+                            pool_rebalance=REBALANCE)
 
 
 def _train_expect_failure(b, tc, cc, data, init_fn, upto, inject):
@@ -324,7 +329,8 @@ def _recover_and_resume(ref, root, resume_steps=3):
     fresh = init_fn(jax.random.PRNGKey(tc.seed))
     st, resume = recovery.resume_train_state(rec, fresh)
     cc = CheckpointConfig(directory=root, dense_interval=1,
-                          pool_backend="sharded", pool_compress=COMPRESS)
+                          pool_backend="sharded", pool_compress=COMPRESS,
+                          pool_rebalance=REBALANCE)
     mgr = CheckpointManager(b.model, cc, pool=rec.pool)
     mgr.init_mirror(st["embed"], step=rec.mirror_step)
     _, tail = train_loop.train(b.model, tc, data, resume_steps, relaxed=True,
