@@ -1,0 +1,188 @@
+"""Standing pool/serve perf harness -> ``BENCH_pool.json``.
+
+Per backend, two serving cells (hot-row cache on / off) run the same
+skewed request stream against a pool-resident embedding mirror with
+trainer commits interleaved, measuring:
+
+  * serve QPS and p50/p99 request latency (wall clock),
+  * pool ops/s (media-op count over the measured window),
+  * link bytes per 1k looked-up rows (the cache's traffic saving),
+  * cache hit rate and commit-driven invalidations.
+
+The JSON is flat and append-friendly so CI can diff the perf trajectory
+per PR. ``--smoke`` shrinks the stream for the CI matrix cell; the rows()
+hook prints the same numbers as ``benchmarks.run`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.bench_pool --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.checkpoint.undo_log import UndoRing
+from repro.pool import (DramPool, PmemPool, PoolAllocator, PoolServer,
+                        ShardedPool, make_pool)
+from repro.serve import EmbeddingServeTier
+
+V, D = 1 << 13, 64
+HOT = 512            # skewed stream: 80% of ids from this hot set
+CACHE_ROWS = 1024
+
+
+def _mkpool(backend: str, root: str):
+    if backend == "dram":
+        return DramPool(1 << 22), []
+    if backend == "pmem":
+        return PmemPool(os.path.join(root, f"bench_{backend}.img"),
+                        1 << 22), []
+    if backend == "remote":
+        srv = PoolServer(DramPool(1 << 22),
+                         f"unix:{root}/bench.sock").start()
+        return make_pool("remote", addr=srv.addr), [srv]
+    if backend == "sharded":
+        srvs = [PoolServer(DramPool(1 << 22),
+                           f"unix:{root}/bench{i}.sock").start()
+                for i in range(2)]
+        return ShardedPool([s.addr for s in srvs]), srvs
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _pool_snapshot(pool) -> dict:
+    return pool.metrics.snapshot()
+
+
+def _media_ops(snap: dict) -> int:
+    return sum(int(s["ops"]) for s in (snap.get("media") or {}).values())
+
+
+def bench_cell(backend: str, cache_rows: int, *, batches: int,
+               batch_requests: int, root: str, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    pool, servers = _mkpool(backend, root)
+    try:
+        alloc = PoolAllocator(pool)
+        table = rng.standard_normal((V, D)).astype(np.float32)
+        region = alloc.domain("embedding-mirror").alloc(
+            "rows", shape=(V, D), dtype="float32")
+        region.write_array(table)
+        region.persist(point="mirror-load")
+        ring = UndoRing(PoolAllocator(pool), max_logs=16)
+        tier = EmbeddingServeTier(pool, cache_rows=cache_rows)
+
+        hot = rng.choice(V, size=HOT, replace=False)
+
+        def requests():
+            reqs = []
+            for _ in range(batch_requests):
+                k = int(rng.integers(8, 48))
+                ids = np.where(rng.random(k) < 0.8, rng.choice(hot, k),
+                               rng.integers(0, V, k))
+                reqs.append(ids.astype(np.int64))
+            return reqs
+
+        # warm-up (jit-free, but populates the cache + undo meta)
+        tier.serve_batch(requests())
+        if hasattr(pool, "reset_metrics"):
+            pool.reset_metrics()        # remote/sharded: server-side counters
+        else:
+            pool.metrics.reset()
+        tier.metrics.reset()
+        base = _pool_snapshot(pool)
+        rows_before = tier.rows_served
+        t0 = time.perf_counter()
+        for b in range(batches):
+            tier.serve_batch(requests())
+            if b % 4 == 3:          # trainer commits every 4th batch
+                step = b // 4
+                touched = np.unique(rng.choice(hot, 32))
+                new_rows = rng.standard_normal(
+                    (touched.size, D)).astype(np.float32)
+                ring.log_and_apply(step, region, touched, new_rows)
+        wall = time.perf_counter() - t0
+        snap = _pool_snapshot(pool)
+        s = tier.stats()
+        nrows = tier.rows_served - rows_before
+        link_bytes = int(snap["link_bytes"]) - int(base["link_bytes"])
+        ops = _media_ops(snap) - _media_ops(base)
+        return {
+            "backend": backend,
+            "cache_rows": cache_rows,
+            "requests": batches * batch_requests,
+            "rows": nrows,
+            "qps": round(batches * batch_requests / wall, 1),
+            "p50_ms": round(s["p50_ms"], 4),
+            "p99_ms": round(s["p99_ms"], 4),
+            "pool_ops_per_s": round(ops / wall, 1),
+            "link_bytes_per_1k_lookups": round(link_bytes * 1000 / max(1, nrows), 1),
+            "hit_rate": round(s["hit_rate"], 4),
+            "invalidations": s["invalidations"],
+        }
+    finally:
+        pool.close()
+        for srv in servers:
+            try:
+                srv.shutdown()
+            except Exception:
+                pass
+
+
+def run(backends, *, smoke: bool = False, seed: int = 0) -> dict:
+    batches = 8 if smoke else 64
+    batch_requests = 8 if smoke else 32
+    root = tempfile.mkdtemp(prefix="bench_pool_")
+    cells = []
+    for backend in backends:
+        for cache_rows in (CACHE_ROWS, 0):
+            cells.append(bench_cell(backend, cache_rows, batches=batches,
+                                    batch_requests=batch_requests,
+                                    root=root, seed=seed))
+    return {
+        "bench": "pool_serve",
+        "smoke": smoke,
+        "table": {"rows": V, "dim": D},
+        "cells": cells,
+    }
+
+
+def rows(smoke: bool = True):
+    """benchmarks.run hook: the same cells as CSV rows."""
+    out = []
+    res = run(["dram", "pmem"], smoke=smoke)
+    for c in res["cells"]:
+        tag = f"pool.{c['backend']}.cache{'on' if c['cache_rows'] else 'off'}"
+        out.append((f"{tag}.qps", c["qps"],
+                    f"p50={c['p50_ms']}ms|p99={c['p99_ms']}ms"))
+        out.append((f"{tag}.link_bytes_per_1k", c["link_bytes_per_1k_lookups"],
+                    f"hit_rate={c['hit_rate']}"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default="dram,pmem",
+                    help="comma list: dram,pmem,remote,sharded")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_pool.json")
+    args = ap.parse_args()
+    backends = [b.strip() for b in args.backends.split(",") if b.strip()]
+    res = run(backends, smoke=args.smoke, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+        f.write("\n")
+    for c in res["cells"]:
+        print(f"[bench_pool] {c['backend']:7s} cache={c['cache_rows']:<5d} "
+              f"qps={c['qps']:<9} p50={c['p50_ms']}ms p99={c['p99_ms']}ms "
+              f"link/1k={c['link_bytes_per_1k_lookups']}B "
+              f"hit={c['hit_rate']}")
+    print(f"[bench_pool] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig9a_accuracy_gap, fig11_breakdown, fig12_timeline,
-                        fig13_energy, real_steps, roofline, table2_devices)
+from benchmarks import (bench_pool, fig9a_accuracy_gap, fig11_breakdown,
+                        fig12_timeline, fig13_energy, real_steps, roofline,
+                        table2_devices)
 
 BENCHES = {
     "table2": table2_devices,
@@ -22,6 +23,7 @@ BENCHES = {
     "fig9a": fig9a_accuracy_gap,
     "real": real_steps,
     "roofline": roofline,
+    "pool": bench_pool,
 }
 
 

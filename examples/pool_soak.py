@@ -251,6 +251,115 @@ def migration_cell(ctx, seed, work, nshards=2):
             server.shutdown(close_device=True)
 
 
+def serve_cell(ctx, seed, work, nshards=2):
+    """Seeded serve-under-fire drill (one cell): train on an N-node sharded
+    pool with a commit-refreshed read replica while a pool-backed serving
+    tier (``repro.serve``) reads the live mirror in the same process:
+
+      * every tier-E commit fires a hook that serves the freshly touched
+        rows back through the cached tier and asserts they equal the
+        mirror (serve-after-commit coherence under real training);
+      * after training, the PRIMARY memory node is killed: the tier must
+        fail reads over to the replica shard and keep returning exact
+        values within the configured staleness bound;
+      * the node restarts over its pmem image, recovery reopens the
+        topology, and a fresh tier's reads must match the recovered
+        mirror bit-exactly.
+    """
+    from repro.pool.placement import PlacementMap
+    from repro.serve import EmbeddingServeTier, ReplicaReader, \
+        make_commit_hook
+
+    b, tc, data, init_fn, full_losses = ctx
+    rng = np.random.default_rng(100 + seed)
+    servers, addrs, imgs = [], [], []
+    for i in range(nshards):
+        imgs.append(os.path.join(work, f"srv{i}.img"))
+        dev = PmemPool(imgs[i], 1 << 22)
+        servers.append(PoolServer(
+            dev, "unix:" + os.path.join(work, f"srv{i}.sock")).start())
+        addrs.append(servers[i].addr)
+    primary = PlacementMap(shards=tuple(addrs)).place("embedding-mirror")
+    dst = (primary + 1) % nshards
+    root = os.path.join(work, "ck")
+    cc = CheckpointConfig(directory=root, dense_interval=1,
+                          pool_backend="sharded", pool_shards=",".join(addrs),
+                          pool_tenant=f"serve-{seed}",
+                          pool_replica=dst, pool_replica_every=1)
+    try:
+        st0 = init_fn(jax.random.PRNGKey(tc.seed))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+        assert mgr.pool.placement.place("embedding-mirror") == primary
+        nrows = mgr.mirror_region.shape[0]
+        tier = EmbeddingServeTier(mgr.pool, cache_rows=128)
+        mgr.add_commit_hook(make_commit_hook(tier.cache, tier.tailer))
+        served = {"batches": 0}
+
+        def serve_probe(step, idx):
+            # read back the rows this commit just touched (plus noise):
+            # the cached tier must return the freshly applied values
+            ids = np.concatenate([
+                np.asarray(idx, np.int64)[:8],
+                rng.integers(0, nrows, 8)]).astype(np.int64)
+            out = tier.serve_batch([ids])[0]
+            np.testing.assert_array_equal(out, mgr.mirror_rows[ids])
+            served["batches"] += 1
+
+        mgr.add_commit_hook(serve_probe)
+        train_loop.train(b.model, tc, data, STEPS, relaxed=True, state=st0,
+                         ckpt_manager=mgr)
+        mgr.flush()
+        assert served["batches"] == STEPS
+        assert mgr.stats["replica_refreshes"] == STEPS
+        oracle = np.array(mgr.mirror_rows)
+        pool = mgr.pool
+
+        # -- kill -9 the primary memory node: the replica keeps serving ----
+        tier.replica = ReplicaReader(pool)
+        ids = rng.integers(0, nrows, 32).astype(np.int64)
+        np.testing.assert_array_equal(tier.serve_batch([ids])[0],
+                                      oracle[ids])
+        servers[primary].shutdown(close_device=True)
+        tier.cache.clear()
+        out = tier.serve_batch([ids])[0]
+        np.testing.assert_array_equal(out, oracle[ids])
+        assert tier.failovers >= 1, "primary kill never exercised failover"
+        lag = tier.staleness_bound()
+        assert lag <= cc.pool_replica_every, \
+            f"staleness {lag} exceeds the declared bound"
+        try:
+            pool.close()
+        except PoolError:
+            pass
+
+        # -- node restart + recovery: fresh tier serves the exact mirror ---
+        servers[primary] = PoolServer(PmemPool.open(imgs[primary]),
+                                      addrs[primary]).start()
+        rec = recovery.recover(root)
+        assert rec.mirror_step == STEPS - 1
+        rtier = EmbeddingServeTier(rec.pool, cache_rows=128)
+        got = rtier.serve_batch([ids])[0]
+        np.testing.assert_array_equal(got, np.asarray(rec.embed_rows)[ids])
+        np.testing.assert_array_equal(got, oracle[ids])
+        snap = rec.pool.metrics.snapshot()
+        stats = tier.stats()
+        rec.pool.close()
+        return {"backend": "sharded-serve", "seed": seed,
+                "kind": "serve-under-fire", "crashed": True,
+                "mirror_step": rec.mirror_step,
+                "dense_step": rec.dense_step,
+                "rolled_back": rec.rolled_back,
+                "serve_batches": served["batches"] + 3,
+                "failovers": stats["failovers"],
+                "hit_rate": stats["hit_rate"],
+                "invalidations": stats["invalidations"],
+                "staleness_bound": lag,
+                "metrics": snap}
+    finally:
+        for server in servers:
+            server.shutdown(close_device=True)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backends", default="pmem,remote")
@@ -261,6 +370,12 @@ def main(argv=None):
                     help="run N seeded migrate-under-fire cells (kill the "
                          "source node mid-copy, then the destination "
                          "post-flip, with bit-identical resume asserts)")
+    ap.add_argument("--serve", type=int, default=0,
+                    help="run N seeded serve-under-fire cells (pool-backed "
+                         "serving tier reads the live mirror during "
+                         "training, primary node killed, replica must keep "
+                         "serving within the staleness bound, recovery "
+                         "reads bit-exact)")
     ap.add_argument("--out", default="soak_metrics.json")
     args = ap.parse_args(argv)
 
@@ -321,6 +436,25 @@ def main(argv=None):
             failures.append({"backend": "sharded-migrate", "seed": seed,
                              "error": f"{type(e).__name__}: {e}"})
             print(f"soak[sharded-migrate seed={seed}] FAILED: {e}",
+                  flush=True)
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
+
+    for seed in range(args.serve):
+        work = tempfile.mkdtemp(prefix=f"soak_serve_{seed}_")
+        try:
+            cell = serve_cell(ctx, seed, work, nshards=args.shards)
+            results.append(cell)
+            print(f"soak[sharded-serve seed={seed}] OK: "
+                  f"batches={cell['serve_batches']} "
+                  f"failovers={cell['failovers']} "
+                  f"hit_rate={cell['hit_rate']:.2f} "
+                  f"lag<={cell['staleness_bound']}", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append({"backend": "sharded-serve", "seed": seed,
+                             "error": f"{type(e).__name__}: {e}"})
+            print(f"soak[sharded-serve seed={seed}] FAILED: {e}",
                   flush=True)
         finally:
             shutil.rmtree(work, ignore_errors=True)

@@ -3,26 +3,143 @@ shared stepped loop (the decode_* dry-run cells run this same serve_step at
 production shapes).
 
     PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-3b
+
+With ``--pool-backend`` the example becomes the pool-serving drill instead:
+embedding lookups are served straight from the trainer's pool-resident
+mirror through ``repro.serve.EmbeddingServeTier`` — batched deduplicated
+gathers, a trainer-coherent hot-row cache (commit N evicts exactly the rows
+it touched, asserted via the cache counters), and on the sharded backend a
+read-replica that keeps serving within its declared staleness bound after
+the primary mirror shard is killed mid-drill.
+
+    PYTHONPATH=src python examples/serve_batched.py --pool-backend sharded
 """
 import argparse
+import os
+import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_arch
-from repro.data.synthetic import make_batches
-from repro.models.registry import get_api
-from repro.training.serve_loop import make_serve_fns, serve_extras
+import numpy as np
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    args = ap.parse_args()
+def _mkpool(backend: str, root: str):
+    """Build the drill's pool; remote/sharded spin in-process memory-node
+    servers over unix sockets (the kill -9 drill stops them). Returns
+    (pool, [servers])."""
+    from repro.pool import DramPool, PmemPool, PoolServer, ShardedPool, \
+        make_pool
+    if backend == "dram":
+        return DramPool(1 << 20), []
+    if backend == "pmem":
+        return PmemPool(os.path.join(root, "pool.img"), 1 << 20), []
+    if backend == "remote":
+        srv = PoolServer(DramPool(1 << 20),
+                         f"unix:{root}/serve.sock").start()
+        return make_pool("remote", addr=srv.addr), [srv]
+    if backend == "sharded":
+        srvs = [PoolServer(DramPool(1 << 20),
+                           f"unix:{root}/serve{i}.sock").start()
+                for i in range(2)]
+        return ShardedPool([s.addr for s in srvs]), srvs
+    raise SystemExit(f"unknown pool backend {backend!r}")
+
+
+def pool_main(args):
+    from repro.core.checkpoint.undo_log import UndoRing
+    from repro.pool import PoolAllocator
+    from repro.serve import EmbeddingServeTier, ReplicaReader
+
+    rng = np.random.default_rng(0)
+    root = tempfile.mkdtemp(prefix="serve_pool_")
+    pool, servers = _mkpool(args.pool_backend, root)
+    alloc = PoolAllocator(pool)
+
+    # the "trainer's" mirror: V x d rows living in the pool
+    V, d = 1 << 12, 32
+    table = rng.standard_normal((V, d)).astype(np.float32)
+    region = alloc.domain("embedding-mirror").alloc(
+        "rows", shape=(V, d), dtype="float32")
+    region.write_array(table)
+    region.persist(point="mirror-load")
+    ring = UndoRing(PoolAllocator(pool), max_logs=16)
+
+    tier = EmbeddingServeTier(pool, cache_rows=args.cache_rows,
+                              replica=False)
+    print(f"[pool-serve] backend={args.pool_backend} table={V}x{d} "
+          f"cache={args.cache_rows} rows")
+
+    # hot-skewed request stream: zipf-ish over a small hot set
+    hot = rng.choice(V, size=256, replace=False)
+    def make_requests(n):
+        reqs = []
+        for _ in range(n):
+            k = int(rng.integers(4, 32))
+            ids = np.where(rng.random(k) < 0.8, rng.choice(hot, k),
+                           rng.integers(0, V, k))
+            reqs.append(ids.astype(np.int64))
+        return reqs
+
+    for step in range(args.steps):
+        # serve a few batches...
+        for _ in range(4):
+            out = tier.serve_batch(make_requests(args.batch))
+        # ...then the trainer commits step N touching a known row set
+        touched = np.unique(rng.choice(hot, 8))
+        inval_before = tier.metrics.cache_invalidations
+        expect = sum(1 for i in touched if int(i) in tier.cache._rows)
+        new_rows = rng.standard_normal((touched.size, d)).astype(np.float32)
+        ring.log_and_apply(step, region, touched, new_rows)
+        info = tier.poll_coherence()
+        got = tier.metrics.cache_invalidations - inval_before
+        assert got == expect, (got, expect)
+        # post-commit reads see the new rows (coherence, not just eviction)
+        rows = tier.serve_batch([touched])[0]
+        np.testing.assert_allclose(rows, new_rows, rtol=0, atol=0)
+        table[touched] = new_rows
+        print(f"[pool-serve] step {step}: commit touched {touched.size} "
+              f"rows, evicted exactly {got} cached")
+
+    if args.pool_backend == "sharded":
+        primary = pool.placement.place("embedding-mirror")
+        dst = 1 - primary
+        last_commit = args.steps - 1
+        pool.replicate_domain("embedding-mirror", dst,
+                              watermark=last_commit)
+        tier.replica = ReplicaReader(pool)
+        print(f"[pool-serve] replica on shard {dst} "
+              f"(watermark step {last_commit})")
+        servers[primary].shutdown()        # kill -9 the primary mirror node
+        print(f"[pool-serve] killed primary shard {primary}")
+        reqs = make_requests(args.batch)
+        out = tier.serve_batch(reqs)
+        for r, ids in zip(out, reqs):
+            np.testing.assert_allclose(r, table[ids], rtol=0, atol=0)
+        lag = tier.staleness_bound()
+        assert tier.failovers >= 1, "expected replica failover"
+        assert lag <= 1, f"staleness {lag} commits > declared bound"
+        print(f"[pool-serve] replica served {len(reqs)} requests after "
+              f"primary death (staleness <= {max(lag, 0)} commit)")
+
+    s = tier.stats()
+    print(f"[pool-serve] {s['requests']} requests, {s['rows']} rows | "
+          f"qps={s['qps']:.0f} p50={s['p50_ms']:.2f}ms "
+          f"p99={s['p99_ms']:.2f}ms | hit_rate={s['hit_rate']:.2f} "
+          f"inval={s['invalidations']} failovers={s['failovers']}")
+    for srv in servers:
+        try:
+            srv.shutdown()
+        except Exception:
+            pass
+
+
+def llm_main(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.data.synthetic import make_batches
+    from repro.models.registry import get_api
+    from repro.training.serve_loop import make_serve_fns, serve_extras
 
     bundle = get_arch(args.arch, smoke=True)
     cfg = bundle.model
@@ -57,6 +174,26 @@ def main():
     print(f"[decode] {args.batch}x{args.new_tokens} tokens in {dt*1e3:.1f}ms "
           f"-> {args.batch*args.new_tokens/dt:.0f} tok/s")
     print("[sample]", toks[0].tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--pool-backend", default="",
+                    help="dram|pmem|remote|sharded: run the pool-serving "
+                         "drill instead of the LLM decode loop")
+    ap.add_argument("--cache-rows", type=int, default=512)
+    ap.add_argument("--steps", type=int, default=4,
+                    help="pool drill: trainer commits interleaved with "
+                         "serving")
+    args = ap.parse_args()
+    if args.pool_backend:
+        pool_main(args)
+    else:
+        llm_main(args)
 
 
 if __name__ == "__main__":

@@ -231,6 +231,11 @@ class CheckpointConfig:
     pool_secret: str = ""          # remote/sharded tcp transports: shared
                                    # secret for the HMAC hello handshake
                                    # ("" = env REPRO_POOL_SECRET, if set)
+    pool_replica: int = -1         # sharded: shard index holding the read
+                                   # replica of the embedding mirror
+                                   # (-1 = no replica)
+    pool_replica_every: int = 1    # refresh the replica every K committed
+                                   # steps (the serving staleness bound)
 
 
 @dataclass(frozen=True)

@@ -93,7 +93,9 @@ class CheckpointManager:
                       "bytes_e": 0, "bytes_m": 0,
                       "undo_raw_bytes": 0, "undo_stored_bytes": 0,
                       "dense_stored_bytes": 0,
-                      "migrations": 0, "migration_link_bytes": 0}
+                      "migrations": 0, "migration_link_bytes": 0,
+                      "replica_refreshes": 0, "replica_link_bytes": 0}
+        self._commit_hooks: list = []
         if embed_init is not None:
             self.init_mirror(embed_init)
 
@@ -184,6 +186,31 @@ class CheckpointManager:
             self.rebind_domains(info["moved"])
             self.stats["migrations"] += 1
             self.stats["migration_link_bytes"] += info["link_bytes"]
+
+    def add_commit_hook(self, fn):
+        """Register fn(step, idx) to run on the writer thread right after a
+        tier-E commit's manifest advance — the point at which step N's rows
+        are durably applied to the mirror. The serving tier uses this to
+        invalidate exactly the touched hot-cache rows."""
+        self._commit_hooks.append(fn)
+
+    def _maybe_replicate(self, step: int):
+        """Refresh the read-replica of the embedding mirror (sharded only):
+        export the mirror regions to the pinned replica shard and stamp the
+        commit watermark. Runs on the writer thread at the configured
+        cadence — the cadence IS the replica's declared staleness bound."""
+        dst = int(getattr(self.ccfg, "pool_replica", -1))
+        if dst < 0 or getattr(self.pool, "backend", "") != "sharded":
+            return
+        every = max(1, int(getattr(self.ccfg, "pool_replica_every", 1)))
+        if step % every != 0:
+            return
+        info = self.pool.replicate_domain("embedding-mirror", dst,
+                                          compress=self.compress,
+                                          watermark=step)
+        self.stats["replica_refreshes"] += 1
+        self.stats["replica_link_bytes"] += info["link_bytes"]
+        self.pool.metrics.record_replica(info["link_bytes"])
 
     def rebind_domains(self, moved):
         """Re-resolve region handles after `moved` domains changed shards —
@@ -299,6 +326,9 @@ class CheckpointManager:
         self.stats["bytes_e"] += idx.nbytes + new_rows.nbytes
         self.stats["undo_raw_bytes"] += info.get("raw", 0)
         self.stats["undo_stored_bytes"] += info.get("stored", 0)
+        for hook in self._commit_hooks:
+            hook(step, idx)
+        self._maybe_replicate(step)
         self._maybe_rebalance(step)
 
     def _do_tier_m(self, step: int, dense_np: dict, t_enq: float):

@@ -70,7 +70,10 @@ class UndoRing:
         else:
             self.slot_bytes = 0
             self.gen = -1
-        self._sweep_stale_rings()
+        # a readonly opener (the serving tier tailing commits) may not free
+        # anything — leaked generations are the writer's to reclaim
+        if not getattr(alloc, "readonly", False):
+            self._sweep_stale_rings()
 
     # -- layout --------------------------------------------------------------
     def _sweep_stale_rings(self):
@@ -251,6 +254,9 @@ class UndoRing:
                                 point="undo-gc")
 
 
-def open_ring(device: PoolDevice, max_logs: int = 64) -> UndoRing:
-    """Recovery-time accessor: attach to an existing undo domain."""
-    return UndoRing(PoolAllocator(device), max_logs)
+def open_ring(device: PoolDevice, max_logs: int = 64,
+              readonly: bool = False) -> UndoRing:
+    """Recovery-time accessor: attach to an existing undo domain. With
+    ``readonly`` the ring is a pure reader (the serving tier's commit
+    tailer): it never sweeps, grows, or writes."""
+    return UndoRing(PoolAllocator(device, readonly=readonly), max_logs)

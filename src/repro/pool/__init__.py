@@ -33,16 +33,17 @@ from repro.pool.placement import (Migration, PlacementEpoch, PlacementMap,
                                   PoolTopology, RebalancePolicy)
 from repro.pool.remote import (PoolAuthError, PoolConnectionError,
                                RemotePool, WireError, parse_addr)
-from repro.pool.sharded import ShardedPool
+from repro.pool.sharded import REPLICA_SUFFIX, ShardedPool, replica_domain
 
 __all__ = [
     "BACKENDS", "DramPool", "EmbeddingPoolMirror", "FaultEvent",
     "FaultSchedule", "InjectedCrash", "JsonRegion", "Migration", "NmpQueue",
     "PlacementEpoch", "PlacementMap", "PmemPool", "PoolAllocator",
     "PoolAuthError", "PoolConnectionError", "PoolDevice", "PoolError",
-    "PoolMetrics", "PoolTopology", "QuotaExceededError", "Region",
-    "RebalancePolicy", "RemotePool", "ShardedPool", "TenantIsolationError",
-    "WireError", "make_pool", "parse_addr",
+    "PoolMetrics", "PoolTopology", "QuotaExceededError", "REPLICA_SUFFIX",
+    "Region", "RebalancePolicy", "RemotePool", "ShardedPool",
+    "TenantIsolationError", "WireError", "make_pool", "parse_addr",
+    "replica_domain",
 ]
 # "PoolServer" is importable too, via the lazy __getattr__ below (kept out
 # of __all__ so static checkers don't flag the deferred name)

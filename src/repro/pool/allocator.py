@@ -41,7 +41,8 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.pool.device import PoolDevice, PoolError, QuotaExceededError
+from repro.pool.device import (PoolDevice, PoolError, QuotaExceededError,
+                               TenantIsolationError)
 
 _MAGIC = b"RPPL"
 SUPER_SLOT = 32 << 10
@@ -131,10 +132,17 @@ class Domain:
 
 class PoolAllocator:
     def __init__(self, device: PoolDevice, tenant: Optional[str] = None,
-                 quota: int = 0):
+                 quota: int = 0, readonly: bool = False):
         self.device = device
         self.tenant = tenant
         self.quota = int(quota)
+        # read-only posture (the serving tier): reopening existing regions
+        # is allowed, but anything that would mutate the directory — a NEW
+        # alloc, a free — is a typed isolation error. With a remote device
+        # the flag also rides on the connection (hello readonly=True) and
+        # the server enforces the same contract wire-side.
+        self.readonly = bool(readonly) or bool(getattr(device, "readonly",
+                                                       False))
         if getattr(device, "remote", False):
             # proxy mode: the server's tenant-scoped allocator owns the
             # directory; every alloc/get/regions/free is a wire op
@@ -206,6 +214,10 @@ class PoolAllocator:
         ent = dom.get(rname)
         if ent and ent["dtype"] == dtype and tuple(ent["shape"]) == shape:
             return self._region(dname, rname, ent)   # idempotent reopen
+        if self.readonly:
+            raise TenantIsolationError(
+                f"readonly tenant: alloc of new region {dname}/{rname} "
+                f"denied (only idempotent reopens are allowed)")
         if self.tenant and self.quota:
             # net growth: a reshaped region replaces (leaks) the old entry
             used = self.tenant_used() - (ent["nbytes"] if ent else 0)
@@ -243,6 +255,9 @@ class PoolAllocator:
         honest alternative to same-name realloc: callers that outgrow a
         region must free-then-alloc so quota accounting and the directory
         never silently orphan the old entry."""
+        if self.readonly:
+            raise TenantIsolationError(
+                f"readonly tenant: free of region {dname}/{rname} denied")
         if self._proxy is not None:
             return self._proxy.free_remote_region(dname, rname, point)
         self._sync()
@@ -255,6 +270,9 @@ class PoolAllocator:
     def free_domain(self, dname: str, point: str = "superblock") -> bool:
         """Drop a domain's directory entries (the data bytes are leaked —
         emulator; what matters is the tenant can no longer address them)."""
+        if self.readonly:
+            raise TenantIsolationError(
+                f"readonly tenant: free of domain {dname} denied")
         if self._proxy is not None:
             return self._proxy.free_remote_domain(dname, point)
         self._sync()

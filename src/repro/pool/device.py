@@ -289,7 +289,7 @@ def make_pool(backend: str, *, path: Optional[str] = None,
               addr: Optional[str] = None, tenant: str = "default",
               quota: int = 0, shards=None,
               placement=None, rebalance: float = 0.0,
-              secret: str = "") -> PoolDevice:
+              secret: str = "", readonly: bool = False) -> PoolDevice:
     if backend == "dram":
         return DramPool(capacity, faults)
     if backend == "pmem":
@@ -301,7 +301,8 @@ def make_pool(backend: str, *, path: Optional[str] = None,
             raise PoolError("remote backend needs a server addr "
                             "(unix:/path or tcp:host:port)")
         from repro.pool.remote import RemotePool
-        dev = RemotePool(addr, tenant=tenant, quota=quota, secret=secret)
+        dev = RemotePool(addr, tenant=tenant, quota=quota, secret=secret,
+                         readonly=readonly)
         if faults is not None:
             dev.faults = faults
         return dev
@@ -313,7 +314,7 @@ def make_pool(backend: str, *, path: Optional[str] = None,
         from repro.pool.sharded import ShardedPool
         pmap = PlacementMap.parse(shards, placement)
         dev = ShardedPool(list(pmap.shards), tenant=tenant, quota=quota,
-                          placement=pmap, secret=secret)
+                          placement=pmap, secret=secret, readonly=readonly)
         if rebalance:
             dev.rebalance = RebalancePolicy(high=float(rebalance))
         if faults is not None:

@@ -54,6 +54,11 @@ class PoolMetrics:
     dropped_flushes: int = 0
     torn_writes: int = 0
     crashes: int = 0
+    cache_hits: int = 0                           # serve-tier hot-row cache
+    cache_misses: int = 0
+    cache_invalidations: int = 0                  # rows evicted by commits
+    replica_refreshes: int = 0                    # read-replica copy rounds
+    replica_bytes: int = 0                        # ...and bytes they moved
 
     def reset(self):
         """Zero the traffic counters (fault/crash tallies are kept) — e.g.
@@ -65,6 +70,25 @@ class PoolMetrics:
         self.comp_stored_bytes = 0
         self.comp_time_s = 0.0
         self.comp.clear()
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_invalidations = 0
+        self.replica_refreshes = 0
+        self.replica_bytes = 0
+
+    def record_cache(self, hits: int = 0, misses: int = 0,
+                     invalidations: int = 0):
+        self.cache_hits += int(hits)
+        self.cache_misses += int(misses)
+        self.cache_invalidations += int(invalidations)
+
+    def cache_hit_rate(self) -> float:
+        tot = self.cache_hits + self.cache_misses
+        return self.cache_hits / tot if tot else 0.0
+
+    def record_replica(self, nbytes: int):
+        self.replica_refreshes += 1
+        self.replica_bytes += int(nbytes)
 
     def record(self, kind: str, nbytes: int, time_s: float):
         self.media.setdefault(kind, OpStat()).add(nbytes, time_s)
@@ -157,6 +181,11 @@ class PoolMetrics:
         m.dropped_flushes = int(snap.get("dropped_flushes", 0))
         m.torn_writes = int(snap.get("torn_writes", 0))
         m.crashes = int(snap.get("crashes", 0))
+        m.cache_hits = int(snap.get("cache_hits", 0))
+        m.cache_misses = int(snap.get("cache_misses", 0))
+        m.cache_invalidations = int(snap.get("cache_invalidations", 0))
+        m.replica_refreshes = int(snap.get("replica_refreshes", 0))
+        m.replica_bytes = int(snap.get("replica_bytes", 0))
         return m
 
     def snapshot(self) -> dict:
@@ -179,6 +208,12 @@ class PoolMetrics:
             "dropped_flushes": self.dropped_flushes,
             "torn_writes": self.torn_writes,
             "crashes": self.crashes,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_invalidations": self.cache_invalidations,
+            "cache_hit_rate": self.cache_hit_rate(),
+            "replica_refreshes": self.replica_refreshes,
+            "replica_bytes": self.replica_bytes,
             "energy_j": self.energy(),
         }
 
@@ -198,6 +233,14 @@ class PoolMetrics:
                          f"ratio={self.comp_ratio():.4f}")
         lines.append("  energy[J]: " + "  ".join(
             f"{k}={v:.6f}" for k, v in e.items()))
+        if self.cache_hits or self.cache_misses or self.cache_invalidations:
+            lines.append(f"  serve cache: hits={self.cache_hits} "
+                         f"misses={self.cache_misses} "
+                         f"inval={self.cache_invalidations} "
+                         f"hit_rate={self.cache_hit_rate():.4f}")
+        if self.replica_refreshes:
+            lines.append(f"  replica: refreshes={self.replica_refreshes} "
+                         f"bytes={self.replica_bytes}")
         if self.dropped_flushes or self.torn_writes or self.crashes:
             lines.append(f"  faults: dropped={self.dropped_flushes} "
                          f"torn={self.torn_writes} crashes={self.crashes}")

@@ -217,9 +217,10 @@ class RemotePool(PoolDevice):
 
     def __init__(self, addr: str, tenant: str = "default", quota: int = 0,
                  timeout: float = DEFAULT_TIMEOUT,
-                 secret: Optional[str] = None):
+                 secret: Optional[str] = None, readonly: bool = False):
         self.addr = addr
         self.tenant = tenant
+        self.readonly = bool(readonly)
         self.closed = False
         self._faults: Optional[FaultSchedule] = None
         self._lock = threading.Lock()
@@ -238,6 +239,10 @@ class RemotePool(PoolDevice):
             raise PoolConnectionError(
                 f"cannot reach pool server at {addr}: {e}") from e
         hello = {"op": "hello", "tenant": tenant, "quota": int(quota)}
+        if self.readonly:
+            # a serving connection: the server denies every mutating op on
+            # this connection with a typed TenantIsolationError
+            hello["readonly"] = True
         try:
             hdr, _ = self._request(hello)
         except PoolAuthError as e:

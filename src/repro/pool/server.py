@@ -153,6 +153,12 @@ class PoolServer:
         if self.conn_timeout:
             conn.settimeout(self.conn_timeout)
         tenant: Optional[Tenant] = None
+        # per-connection posture: hello readonly=True marks a serving
+        # connection — every mutating op on it is denied with a typed
+        # TenantIsolationError. Connection-level, not tenant-level: the
+        # Tenant object is shared by name, and a trainer and a server may
+        # legitimately share a tenant namespace with different postures.
+        readonly = False
         # shared-secret auth is a TCP property: unix sockets are already
         # gated by filesystem permissions. State is per connection — each
         # tcp hello must answer a fresh nonce, so proofs never replay.
@@ -182,13 +188,17 @@ class PoolServer:
                         if auth["required"]:
                             self._check_auth(auth, hdr)
                         tenant = self._hello(hdr)
+                        readonly = bool(hdr.get("readonly"))
                         rh, rbody = {"capacity": self.device.capacity,
                                      "device": self.device.profile.name,
-                                     "tenant": tenant.name}, b""
+                                     "tenant": tenant.name,
+                                     "readonly": readonly}, b""
                     elif tenant is None:
                         raise TenantIsolationError(
                             "no tenant identity: send hello first")
                     else:
+                        if readonly:
+                            self._check_readonly(tenant, op, hdr)
                         rh, rbody = self._dispatch(tenant, op, hdr, body)
                     rh["ok"] = True
                     send_frame(conn, rh, rbody)
@@ -268,6 +278,35 @@ class PoolServer:
             raise TenantIsolationError(
                 f"tenant {tenant.name!r}: node-wide control op {op!r} is "
                 f"disabled on this server (--no-control-ops)")
+
+    # every op that mutates tenant data or the directory. Reads, persist
+    # (a flush cannot corrupt), metrics, and control ops stay allowed —
+    # control ops have their own gate (--no-control-ops).
+    _READONLY_DENIED_OPS = frozenset({"write", "free", "free-region"})
+    _READONLY_DENIED_NMP = frozenset({"row_update", "scatter_add",
+                                      "undo_log_append", "slot_clear",
+                                      "region_import", "blob_put"})
+
+    def _check_readonly(self, tenant: Tenant, op: str, hdr: dict):
+        """Readonly-connection gate: deny anything mutating. ``alloc`` is
+        allowed only as an idempotent reopen of an existing, shape- and
+        dtype-identical region (how a serving tier resolves its handles)."""
+        denied = op in self._READONLY_DENIED_OPS
+        what = op
+        if op == "nmp" and hdr.get("kind") in self._READONLY_DENIED_NMP:
+            denied = True
+            what = f"nmp:{hdr.get('kind')}"
+        if op == "alloc":
+            with self._lock:
+                region = tenant.alloc.domain(hdr["domain"]).get(hdr["name"])
+            if region is None or region.dtype != hdr["dtype"] \
+                    or list(region.shape) != [int(s) for s in hdr["shape"]]:
+                denied = True
+                what = f"alloc:{hdr['domain']}/{hdr['name']}"
+        if denied:
+            raise TenantIsolationError(
+                f"tenant {tenant.name!r}: mutating op {what!r} denied on a "
+                f"readonly connection")
 
     # -- ops ---------------------------------------------------------------------
     def _op_read(self, tenant, hdr, body):

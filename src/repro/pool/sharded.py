@@ -51,7 +51,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.pool.allocator import Region
+from repro.pool.allocator import JsonRegion, Region
 from repro.pool.device import PoolDevice, PoolError, make_pool
 from repro.pool.faults import FaultSchedule, InjectedCrash
 from repro.pool.metrics import OpStat, PoolMetrics
@@ -59,8 +59,9 @@ from repro.pool.nmp import NmpQueue
 from repro.pool.placement import (Migration, PlacementMap, PoolTopology,
                                   RebalancePolicy)
 
-__all__ = ["SHARD_SPAN", "Migration", "PlacementMap", "PoolTopology",
-           "RebalancePolicy", "ShardedPool", "merge_metrics"]
+__all__ = ["REPLICA_SUFFIX", "SHARD_SPAN", "Migration", "PlacementMap",
+           "PoolTopology", "RebalancePolicy", "ShardedPool", "merge_metrics",
+           "replica_domain"]
 
 # Each shard's offset window in the global address space. Large enough that
 # no single emulated node ever grows past it; small enough that global
@@ -71,6 +72,18 @@ SHARD_SPAN = 1 << 44
 MIGRATE_WINDOWS = ("migrate.pre-copy", "migrate.mid-copy",
                    "migrate.post-copy-pre-flip", "migrate.post-flip-pre-gc")
 
+# Read-replica copies live under this suffix: ``embedding-mirror@replica``
+# is a pinned, refresh-on-commit copy of ``embedding-mirror`` on another
+# node. The replica refresh windows mirror the migration ones so fault
+# drills can kill either side mid-refresh.
+REPLICA_SUFFIX = "@replica"
+REPLICA_WINDOWS = ("replica.pre-copy", "replica.mid-copy",
+                   "replica.post-copy")
+
+
+def replica_domain(domain: str) -> str:
+    return domain + REPLICA_SUFFIX
+
 
 class _Shard:
     """One member node: a device plus its domain-op surface. For a remote
@@ -79,16 +92,17 @@ class _Shard:
     node's directory (rebuilt on crash, exactly like the server does)."""
 
     def __init__(self, index: int, device: PoolDevice, tenant: str,
-                 quota: int):
+                 quota: int, readonly: bool = False):
         self.index = index
         self.device = device
         self.tenant = tenant
         self.quota = quota
+        self.readonly = readonly
         self.remote = bool(getattr(device, "remote", False))
         if not self.remote:
             from repro.pool.allocator import PoolAllocator
             self.alloc = PoolAllocator(device, tenant=tenant or None,
-                                       quota=quota)
+                                       quota=quota, readonly=readonly)
             self.nmp = NmpQueue(device)
 
     def rebuild(self):
@@ -97,7 +111,8 @@ class _Shard:
         if not self.remote:
             from repro.pool.allocator import PoolAllocator
             self.alloc = PoolAllocator(self.device, tenant=self.tenant or None,
-                                       quota=self.quota)
+                                       quota=self.quota,
+                                       readonly=self.readonly)
 
     # -- domain ops (entry dicts, shard-local offsets) -----------------------
     def alloc_region(self, domain, name, shape, dtype, point) -> dict:
@@ -187,6 +202,11 @@ def merge_metrics(snapshots: Sequence[dict],
         agg.dropped_flushes += m.dropped_flushes
         agg.torn_writes += m.torn_writes
         agg.crashes += m.crashes
+        agg.cache_hits += m.cache_hits
+        agg.cache_misses += m.cache_misses
+        agg.cache_invalidations += m.cache_invalidations
+        agg.replica_refreshes += m.replica_refreshes
+        agg.replica_bytes += m.replica_bytes
     return agg
 
 
@@ -205,7 +225,7 @@ class ShardedPool(PoolDevice):
                  quota: int = 0, pin: Optional[dict] = None,
                  topology: Optional[PlacementMap] = None,
                  placement: Optional[PlacementMap] = None,
-                 secret: str = ""):
+                 secret: str = "", readonly: bool = False):
         placement = placement if placement is not None else topology
         if placement is None:
             addrs = [s if isinstance(s, str) else
@@ -217,6 +237,7 @@ class ShardedPool(PoolDevice):
             raise PoolError("sharded backend needs at least one shard")
         self.placement = placement
         self.tenant = tenant
+        self.readonly = bool(readonly)
         self.closed = False
         self._faults: Optional[FaultSchedule] = None
         self._secret = secret
@@ -232,10 +253,12 @@ class ShardedPool(PoolDevice):
         for i, spec in enumerate(shards):
             if isinstance(spec, str):
                 dev = make_pool("remote", addr=spec, tenant=tenant,
-                                quota=quota, secret=secret)
+                                quota=quota, secret=secret,
+                                readonly=self.readonly)
             else:
                 dev = spec
-            self.shards.append(_Shard(i, dev, tenant, quota))
+            self.shards.append(_Shard(i, dev, tenant, quota,
+                                      readonly=self.readonly))
         # fail fast on a policy that strands the fused op cross-shard
         # *silently*: an explicit pin (or an explicit single-domain move)
         # may separate mirror and log — the op falls back to the
@@ -326,8 +349,10 @@ class ShardedPool(PoolDevice):
         except PoolError:
             pass
         dev = make_pool("remote", addr=addr, tenant=self.tenant,
-                        quota=old.quota, secret=self._secret)
-        self.shards[i] = _Shard(i, dev, self.tenant, old.quota)
+                        quota=old.quota, secret=self._secret,
+                        readonly=self.readonly)
+        self.shards[i] = _Shard(i, dev, self.tenant, old.quota,
+                                readonly=self.readonly)
 
     @property
     def faults(self) -> Optional[FaultSchedule]:
@@ -491,6 +516,62 @@ class ShardedPool(PoolDevice):
         return {"epoch": self.placement.epoch, "moved": tuple(group),
                 "src": src, "dst": dst, "regions": nregions,
                 "link_bytes": link_bytes, "raw_bytes": raw_bytes}
+
+    def replicate_domain(self, domain: str, dst: int,
+                         compress: str = "zlib",
+                         watermark: Optional[int] = None) -> dict:
+        """Refresh (or create) the read replica of `domain` on shard `dst`:
+        a verbatim region-image copy under ``<domain>@replica`` — same
+        export/import machinery as migration, but the placement never flips
+        and the source is never GC'd. The replica domain is pinned to `dst`
+        (operator intent: the rebalancer never moves it, the open-time
+        sweep never reclaims it) and the pin is published through
+        ``epoch_sink`` so recovery keeps honoring it.
+
+        ``watermark`` (the committed step this copy reflects) lands in a
+        JsonRegion inside the replica domain AFTER every import persisted,
+        so a crash mid-refresh leaves the replica claiming the PREVIOUS
+        watermark over data that is at least that fresh — the staleness
+        bound a serving fleet reads is always conservative. A primary that
+        dies mid-refresh (export fails) leaves the replica intact at its
+        old watermark; the declared lag bound is one refresh interval."""
+        if not 0 <= dst < self.nshards:
+            raise PoolError(f"replicate {domain!r}: destination shard {dst} "
+                            f"out of range (have {self.nshards})")
+        src = self.placement.place(domain)
+        replica = replica_domain(domain)
+        if self.placement.explicit(replica) != dst:
+            self.placement = self.placement.with_pin(replica, dst)
+            if self.epoch_sink is not None:
+                self.epoch_sink(self.placement)
+        src_shard, dst_shard = self.shards[src], self.shards[dst]
+        src_q, dst_q = src_shard.queue(), dst_shard.queue()
+        self._hit("replica.pre-copy")
+        link_bytes = raw_bytes = nregions = 0
+        ents = src_shard.list_regions(domain)
+        for name in sorted(ents):
+            ent = ents[name]
+            frame = src_q.region_export(src_shard.region(domain, name, ent),
+                                        compress=compress)
+            self._hit("replica.mid-copy")
+            dent = dst_shard.alloc_region(replica, name,
+                                          tuple(ent["shape"]),
+                                          ent["dtype"], "replica-alloc")
+            dst_q.region_import(dst_shard.region(replica, name, dent), frame,
+                                point="replica-import")
+            link_bytes += len(frame)
+            raw_bytes += int(ent["nbytes"])
+            nregions += 1
+        self._hit("replica.post-copy")
+        if watermark is not None:
+            went = dst_shard.alloc_region(replica, "watermark", (8 << 10,),
+                                          "uint8", "replica-alloc")
+            wm = JsonRegion(dst_shard.region(replica, "watermark", went))
+            wm.write({"step": int(watermark)}, point="replica-watermark")
+        return {"replica": replica, "src": src, "dst": dst,
+                "regions": nregions, "link_bytes": link_bytes,
+                "raw_bytes": raw_bytes,
+                "watermark": watermark if watermark is not None else -1}
 
     def sweep_stale_domains(self) -> list[tuple[str, int]]:
         """Open-time sweep: free any copy of a domain living on a shard the

@@ -1,0 +1,24 @@
+"""repro.serve — pool-backed embedding serving tier.
+
+Reads the trainer's pool-resident embedding mirror directly (no export /
+reload pipeline):
+
+  cache.py      trainer-coherent hot-row LRU (counters in ``PoolMetrics``)
+  batcher.py    request coalescing: dedup + one ``gather`` per batch
+  coherence.py  commit-driven invalidation (undo-log tailer / commit hook)
+  replica.py    reads from the pinned ``@replica`` domain (sharded pools)
+  frontend.py   ``EmbeddingServeTier`` — the composed serving surface,
+                API-compatible with ``EmbeddingPoolMirror`` so
+                ``embedding_ops.attach_pool`` accepts it
+"""
+from repro.pool.sharded import REPLICA_SUFFIX, replica_domain
+from repro.serve.batcher import RequestBatcher
+from repro.serve.cache import HotRowCache
+from repro.serve.coherence import CommitTailer, make_commit_hook
+from repro.serve.frontend import EmbeddingServeTier
+from repro.serve.replica import ReplicaReader
+
+__all__ = [
+    "CommitTailer", "EmbeddingServeTier", "HotRowCache", "REPLICA_SUFFIX",
+    "ReplicaReader", "RequestBatcher", "make_commit_hook", "replica_domain",
+]

@@ -1,0 +1,53 @@
+"""Request batching + id coalescing for pool reads.
+
+Serving requests arrive as small per-request id lists; issuing one pool
+``gather`` per request would pay one link round-trip each. The batcher
+concatenates a batch of requests, deduplicates the ids (``np.unique``), takes
+what it can from the hot-row cache, and fetches the rest with ONE gather —
+then reassembles per-request row blocks via the inverse mapping. Link traffic
+is bounded by *unique cold* rows per batch, not by total requested rows.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.cache import HotRowCache
+
+
+class RequestBatcher:
+    def __init__(self, gather: Callable[[np.ndarray], np.ndarray],
+                 cache: Optional[HotRowCache] = None):
+        self.gather = gather          # uniq ids -> float32 [n, d] from pool
+        self.cache = cache
+
+    def lookup_batch(self, requests: Sequence) -> list[np.ndarray]:
+        """requests: list of per-request id arrays. Returns the per-request
+        row blocks, in order, each shaped ids.shape + (d,)."""
+        reqs = [np.asarray(r, dtype=np.int64) for r in requests]
+        if not reqs:
+            return []
+        flat = np.concatenate([r.reshape(-1) for r in reqs])
+        uniq, inverse = np.unique(flat, return_inverse=True)
+        rows = self._fetch_unique(uniq)
+        out, pos = [], 0
+        for r in reqs:
+            n = r.size
+            block = rows[inverse[pos:pos + n]]
+            out.append(block.reshape(r.shape + (rows.shape[-1],)))
+            pos += n
+        return out
+
+    def _fetch_unique(self, uniq: np.ndarray) -> np.ndarray:
+        if self.cache is None:
+            return np.asarray(self.gather(uniq))
+        hits, missing = self.cache.get_many(uniq)
+        if missing:
+            miss_ids = np.asarray(missing, dtype=np.int64)
+            fetched = np.asarray(self.gather(miss_ids))
+            self.cache.put_many(missing, fetched)
+            for k, i in enumerate(missing):
+                hits[i] = fetched[k]
+        # uniq is sorted and hits now covers it completely
+        return np.stack([hits[int(i)] for i in uniq])

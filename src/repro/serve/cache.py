@@ -1,0 +1,79 @@
+"""Trainer-coherent hot-row cache for the pool-backed serving tier.
+
+A plain LRU over *row bytes*: key = flat row id, value = the float32 row as
+last gathered from the embedding mirror. The cache is write-never — rows only
+enter via ``put_many`` after a pool gather, and leave via LRU pressure or
+``invalidate``. Coherence is the caller's job: the commit tailer
+(``serve.coherence``) evicts exactly the rows each committed training step
+touched, so a hit is always the post-commit row image.
+
+Counters go through ``PoolMetrics.record_cache`` so hit/miss/invalidation
+rates land in the same snapshot/report machinery as the pool traffic they
+offset.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+from repro.pool.metrics import PoolMetrics
+
+
+class HotRowCache:
+    def __init__(self, capacity_rows: int = 4096,
+                 metrics: Optional[PoolMetrics] = None):
+        self.capacity = max(1, int(capacity_rows))
+        self.metrics = metrics
+        self._rows: OrderedDict[int, np.ndarray] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def get_many(self, ids) -> tuple[dict, list]:
+        """Split `ids` into ({id: row} hits, [missing ids]). Hits are moved
+        to the MRU end; rows returned are the cached arrays (read-only by
+        convention — callers copy before mutating)."""
+        hits: dict[int, np.ndarray] = {}
+        missing: list[int] = []
+        for i in ids:
+            i = int(i)
+            row = self._rows.get(i)
+            if row is None:
+                missing.append(i)
+            else:
+                self._rows.move_to_end(i)
+                hits[i] = row
+        if self.metrics is not None:
+            self.metrics.record_cache(hits=len(hits), misses=len(missing))
+        return hits, missing
+
+    def put_many(self, ids, rows: np.ndarray):
+        """Insert gathered rows (rows[k] is the row for ids[k]); evicts LRU
+        entries beyond capacity."""
+        rows = np.asarray(rows)
+        for k, i in enumerate(ids):
+            self._rows[int(i)] = np.array(rows[k], copy=True)
+            self._rows.move_to_end(int(i))
+        while len(self._rows) > self.capacity:
+            self._rows.popitem(last=False)
+
+    def invalidate(self, ids) -> int:
+        """Drop exactly `ids` (the rows a committed step touched). Returns
+        how many were actually cached — the serving tier asserts on this to
+        prove invalidation is exact, not a flush."""
+        n = 0
+        for i in np.asarray(ids).reshape(-1):
+            if self._rows.pop(int(i), None) is not None:
+                n += 1
+        if self.metrics is not None and n:
+            self.metrics.record_cache(invalidations=n)
+        return n
+
+    def clear(self) -> int:
+        n = len(self._rows)
+        self._rows.clear()
+        if self.metrics is not None and n:
+            self.metrics.record_cache(invalidations=n)
+        return n

@@ -1,0 +1,82 @@
+"""Commit-driven cache invalidation: tail the trainer's undo log.
+
+The serving tier never sees trainer writes directly — but every tier-E commit
+leaves a durable record in the undo ring (slot header carries the step, the
+payload carries exactly the touched ``idx``). The tailer polls
+``committed_steps()`` (ONE strided ``slot_headers`` near-memory read), and
+for each step newer than its watermark decodes the payload's idx and evicts
+exactly those rows from the hot cache. No extra trainer->server channel, no
+broadcast flush: invalidation precision equals the undo log's precision.
+
+The tailer opens the ring READONLY (``open_ring(readonly=True)``) — it may
+share the pool connection of a readonly tenant and must never sweep, grow,
+or GC the writer's ring.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.checkpoint.undo_log import UndoRing, open_ring
+from repro.pool.device import PoolDevice
+from repro.serve.cache import HotRowCache
+
+
+class CommitTailer:
+    def __init__(self, ring: UndoRing, cache: HotRowCache,
+                 start_step: int = -1):
+        self.ring = ring
+        self.cache = cache
+        self.watermark = int(start_step)
+
+    @classmethod
+    def attach(cls, device: PoolDevice, cache: HotRowCache,
+               max_logs: int = 64, start_step: int = -1) -> "CommitTailer":
+        return cls(open_ring(device, max_logs, readonly=True), cache,
+                   start_step)
+
+    def _rebind(self) -> bool:
+        """The writer creates the ring lazily (first commit) and may grow it
+        (generation flip) at any time — re-read meta and rebind the region
+        handle whenever the generation moved. Readonly-safe: a meta read
+        plus a directory get, nothing else."""
+        m = self.ring.meta.read()
+        if m is None:
+            return False
+        if self.ring.ring is None or m["gen"] != self.ring.gen:
+            self.ring.gen = m["gen"]
+            self.ring.nslots = m["nslots"]
+            self.ring.slot_bytes = m["slot_bytes"]
+            self.ring.ring = self.ring.domain.get(f"ring{self.ring.gen}")
+        return self.ring.ring is not None
+
+    def poll(self) -> dict:
+        """Evict the rows of every commit newer than the watermark. A slot
+        the writer already GC'd (or overwrote) between the header scan and
+        the payload read just decodes to None — its rows were older than
+        max_undo_logs steps, far beyond any cache entry's usefulness, so we
+        advance past it; a ``clear()`` would be the conservative fallback
+        but it never triggers at realistic poll cadences."""
+        if not self._rebind():
+            return {"steps": 0, "evicted": 0, "watermark": self.watermark}
+        steps = [s for s in self.ring.committed_steps() if s > self.watermark]
+        evicted = 0
+        for step in sorted(steps):
+            rec = self.ring.read(step)
+            if rec is not None:
+                idx, _old_rows, _old_acc = rec
+                evicted += self.cache.invalidate(idx)
+            self.watermark = step
+        return {"steps": len(steps), "evicted": evicted,
+                "watermark": self.watermark}
+
+
+def make_commit_hook(cache: HotRowCache, tailer: Optional[CommitTailer] = None):
+    """In-process fast path: a ``CheckpointManager.add_commit_hook`` callback
+    that evicts a commit's touched rows directly (same precision as the
+    tailer, zero polling latency). Keeps the tailer's watermark in step so a
+    later poll doesn't re-evict."""
+    def hook(step: int, idx):
+        cache.invalidate(idx)
+        if tailer is not None and step > tailer.watermark:
+            tailer.watermark = int(step)
+    return hook

@@ -1,0 +1,197 @@
+"""Pool-backed embedding serving tier (the paper's disaggregated pool doing
+double duty: the trainer checkpoints INTO it, the serving fleet reads OUT of
+it — no export/reload pipeline in between).
+
+``EmbeddingServeTier`` reads the trainer's ``embedding-mirror/rows`` region
+directly:
+
+  * batched reads — per-request id lists are coalesced, deduplicated, and
+    fetched with one ``gather`` near-memory op (``serve.batcher``);
+  * hot-row cache — an LRU over row bytes kept trainer-coherent by evicting
+    exactly the rows each committed step touched (``serve.coherence``:
+    in-process commit hook, or the undo-log tailer across processes);
+  * replica failover — when a ``ReplicaReader`` is attached (sharded pools),
+    a primary-side ``PoolError`` fails the read over to the pinned replica
+    shard, whose watermark bounds the staleness the caller is served.
+
+The tier is API-compatible with ``EmbeddingPoolMirror`` (``lookup`` /
+``bag_lookup`` / ``shape`` / ``metrics``), so ``embedding_ops.attach_pool``
+accepts it and jitted serving models read the pool through the cache
+transparently.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.checkpoint.undo_log import open_ring
+from repro.pool.allocator import PoolAllocator, Region
+from repro.pool.device import PoolDevice, PoolError, TenantIsolationError
+from repro.pool.metrics import PoolMetrics
+from repro.pool.nmp import NmpQueue
+from repro.serve.batcher import RequestBatcher
+from repro.serve.cache import HotRowCache
+from repro.serve.coherence import CommitTailer
+from repro.serve.replica import ReplicaReader
+
+_LAT_WINDOW = 10000        # latency samples kept for the percentile stats
+
+
+class EmbeddingServeTier:
+    def __init__(self, pool: PoolDevice, *, domain: str = "embedding-mirror",
+                 region_name: str = "rows", cache_rows: int = 4096,
+                 tail_commits: bool = True, max_undo_logs: int = 64,
+                 replica: "bool | ReplicaReader" = False,
+                 metrics: Optional[PoolMetrics] = None):
+        self.pool = pool
+        self.domain = domain
+        self.region_name = region_name
+        self.metrics = metrics if metrics is not None \
+            else PoolMetrics(device_name="serve")
+        self.alloc = PoolAllocator(pool)
+        self.nmp = NmpQueue(pool)
+        self.region: Optional[Region] = \
+            self.alloc.domain(domain).get(region_name)
+        # cache_rows <= 0 disables the hot-row cache entirely (the bench's
+        # cache-off cells): every unique id per batch hits the pool
+        self.cache: Optional[HotRowCache] = \
+            HotRowCache(cache_rows, metrics=self.metrics) \
+            if cache_rows > 0 else None
+        self.batcher = RequestBatcher(self._gather, self.cache)
+        self._tail_commits = tail_commits and self.cache is not None
+        self._max_undo_logs = max_undo_logs
+        self.tailer: Optional[CommitTailer] = None
+        if self._tail_commits:
+            self._attach_tailer()
+        self.replica: Optional[ReplicaReader] = None
+        if isinstance(replica, ReplicaReader):
+            self.replica = replica
+        elif replica:
+            self.replica = ReplicaReader(pool, domain=domain,
+                                         name=region_name)
+        self.failovers = 0
+        self.requests = 0
+        self.rows_served = 0
+        self._serve_time_s = 0.0
+        self._lat_s: list[float] = []
+
+    # -- plumbing ------------------------------------------------------------
+    def _attach_tailer(self) -> bool:
+        """The undo ring may not exist yet (serving came up before the
+        trainer's first commit) — attach lazily and retry per batch."""
+        try:
+            self.tailer = CommitTailer.attach(self.pool, self.cache,
+                                              self._max_undo_logs)
+            return True
+        except (TenantIsolationError, PoolError):
+            return False
+
+    def _resolve(self) -> Region:
+        if self.region is None:
+            self.region = self.alloc.domain(self.domain).get(self.region_name)
+        if self.region is None:
+            raise PoolError(f"serve: no {self.domain}/{self.region_name} "
+                            f"region in the pool (trainer not initialised?)")
+        return self.region
+
+    def _gather(self, idx: np.ndarray) -> np.ndarray:
+        """Primary-path gather with replica failover: a dead/partitioned
+        primary shard fails the op; the replica's region routes (by offset)
+        to its own node, so the read proceeds at bounded staleness."""
+        try:
+            return self.nmp.gather(self._resolve(), idx)
+        except PoolError:
+            if self.replica is None:
+                raise
+            self.failovers += 1
+            return self.replica.gather(idx)
+
+    def poll_coherence(self) -> dict:
+        """Tail the trainer's committed steps and evict exactly their rows.
+        Called automatically before every served batch; callable directly
+        for tests and tighter staleness control."""
+        if self.tailer is None and self._tail_commits \
+                and not self._attach_tailer():
+            return {"steps": 0, "evicted": 0, "watermark": -1}
+        if self.tailer is None:
+            return {"steps": 0, "evicted": 0, "watermark": -1}
+        try:
+            return self.tailer.poll()
+        except PoolError:
+            # the undo log is co-located with the primary mirror — with the
+            # primary down there are no new commits to tail either, so the
+            # cache stays coherent at the last polled watermark
+            return {"steps": 0, "evicted": 0,
+                    "watermark": self.tailer.watermark}
+
+    # -- serving -------------------------------------------------------------
+    def serve_batch(self, requests: Sequence) -> list[np.ndarray]:
+        """One serving iteration: coherence poll, then batched cached
+        lookup. Returns per-request row blocks."""
+        t0 = time.perf_counter()
+        self.poll_coherence()
+        out = self.batcher.lookup_batch(requests)
+        dt = time.perf_counter() - t0
+        self._serve_time_s += dt
+        self.requests += len(requests)
+        self.rows_served += sum(int(np.asarray(r).size) for r in requests)
+        self._lat_s.append(dt)
+        if len(self._lat_s) > _LAT_WINDOW:
+            del self._lat_s[:len(self._lat_s) - _LAT_WINDOW]
+        return out
+
+    # -- EmbeddingPoolMirror API (embedding_ops.attach_pool compat) ----------
+    @property
+    def shape(self):
+        return self._resolve().shape
+
+    def lookup(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids)
+        return self.serve_batch([ids])[0]
+
+    def bag_lookup(self, ids: np.ndarray, combine: str = "sum") -> np.ndarray:
+        """Bag lookups reduce pool-side — the reduced vectors are request-
+        specific, not row-cacheable, so they bypass the cache but keep the
+        coherence poll and the replica failover."""
+        self.poll_coherence()
+        ids = np.asarray(ids)
+        try:
+            return self.nmp.bag_gather(self._resolve(), ids, combine=combine)
+        except PoolError:
+            if self.replica is None:
+                raise
+            self.failovers += 1
+            return self.replica.bag_gather(ids, combine=combine)
+
+    # -- observability -------------------------------------------------------
+    def staleness_bound(self) -> int:
+        """Commits the replica may lag the primary by right now: latest
+        tailed commit − replica watermark (0 when no replica in play)."""
+        if self.replica is None or self.tailer is None:
+            return 0
+        wm = self.replica.watermark()
+        if wm < 0 or self.tailer.watermark < 0:
+            return 0
+        return max(0, self.tailer.watermark - wm)
+
+    def stats(self) -> dict:
+        lat = np.sort(np.asarray(self._lat_s)) if self._lat_s else None
+        return {
+            "requests": self.requests,
+            "rows": self.rows_served,
+            "qps": (self.requests / self._serve_time_s
+                    if self._serve_time_s > 0 else 0.0),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3)
+            if lat is not None else 0.0,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3)
+            if lat is not None else 0.0,
+            "hit_rate": self.metrics.cache_hit_rate(),
+            "cache_hits": self.metrics.cache_hits,
+            "cache_misses": self.metrics.cache_misses,
+            "invalidations": self.metrics.cache_invalidations,
+            "failovers": self.failovers,
+            "watermark": self.tailer.watermark
+            if self.tailer is not None else -1,
+        }

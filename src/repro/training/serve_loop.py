@@ -1,13 +1,20 @@
 """Serving steps: prefill (fill KV caches / recurrent state) and decode
 (one new token against a seq_len-deep cache). These are what the ``decode_*``
 and ``long_*`` dry-run cells lower.
+
+``pool_serving`` / ``make_pool_serve_fns`` hook the pool-backed embedding
+serving tier (``repro.serve``) into the model path: inside the context, any
+``embedding_ops.lookup``/``bag_lookup`` a jitted serve step issues reads the
+trainer's pool-resident mirror through the tier's batched, cached path.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.registry import get_api
 from repro.models import whisper as whisper_mod
@@ -44,6 +51,36 @@ def serve_extras(cfg, params, batch):
         enc = whisper_mod.encode(params, cfg, batch["frames"])
         return {"xkv": whisper_mod.cross_kv(params, cfg, enc)}
     return {}
+
+
+@contextlib.contextmanager
+def pool_serving(tier):
+    """Route embedding lookups through a pool-backed serving tier
+    (``repro.serve.EmbeddingServeTier`` — or any ``EmbeddingPoolMirror``-
+    compatible object) for the duration of the context."""
+    from repro.core import embedding_ops
+    embedding_ops.attach_pool(tier)
+    try:
+        with embedding_ops.lookup_mode("pool"):
+            yield tier
+    finally:
+        embedding_ops.detach_pool()
+
+
+def make_pool_serve_fns(tier):
+    """Host-side embedding serving closures over a pool-backed tier:
+    (lookup, bag_lookup, serve_batch) — the non-jit path for request
+    frontends that batch ids themselves."""
+    def lookup(ids):
+        return tier.lookup(np.asarray(ids))
+
+    def bag_lookup(ids, combine: str = "sum"):
+        return tier.bag_lookup(np.asarray(ids), combine=combine)
+
+    def serve_batch(requests):
+        return tier.serve_batch([np.asarray(r) for r in requests])
+
+    return lookup, bag_lookup, serve_batch
 
 
 def greedy_generate(cfg, params, prompt_tokens, num_new: int, *,

@@ -1,0 +1,288 @@
+"""repro.serve: batched cached reads over the pool, commit-driven cache
+coherence, read-replica failover, readonly tenant isolation, and the
+checkpoint manager's replica refresh.
+
+Backend-parametrized tests honor REPRO_POOL_BACKENDS like test_pool.py."""
+import os
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.checkpoint.undo_log import UndoRing, open_ring
+from repro.pool import (DramPool, NmpQueue, PmemPool, PoolAllocator,
+                        PoolError, PoolServer, RemotePool, ShardedPool,
+                        TenantIsolationError, replica_domain)
+from repro.serve import (CommitTailer, EmbeddingServeTier, HotRowCache,
+                         ReplicaReader, RequestBatcher, make_commit_hook)
+
+BACKENDS = [b.strip() for b in os.environ.get(
+    "REPRO_POOL_BACKENDS", "dram,pmem").split(",") if b.strip()]
+
+_SOCK_SEQ = [0]
+
+
+def mkpool(backend, tmp_path, capacity=1 << 18):
+    if backend == "dram":
+        return DramPool(capacity)
+    if backend == "pmem":
+        return PmemPool(str(tmp_path / "pool.img"), capacity)
+    if backend == "remote":
+        _SOCK_SEQ[0] += 1
+        srv = PoolServer(DramPool(capacity),
+                         f"unix:{tmp_path}/s{_SOCK_SEQ[0]}.sock").start()
+        dev = RemotePool(srv.addr)
+        dev._test_server = srv
+        return dev
+    if backend == "sharded":
+        _SOCK_SEQ[0] += 1
+        seq = _SOCK_SEQ[0]
+        srvs = [PoolServer(DramPool(capacity),
+                           f"unix:{tmp_path}/s{seq}n{i}.sock").start()
+                for i in range(2)]
+        dev = ShardedPool([s.addr for s in srvs])
+        dev._test_servers = srvs
+        return dev
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def seed_mirror(pool, V=64, d=8):
+    rows = np.arange(V * d, dtype=np.float32).reshape(V, d)
+    reg = PoolAllocator(pool).domain("embedding-mirror").alloc(
+        "rows", shape=(V, d), dtype="float32")
+    reg.write_array(rows)
+    reg.persist(point="mirror-load")
+    return reg, rows
+
+
+# -- cache / batcher units ----------------------------------------------------
+
+def test_hot_row_cache_lru_and_counters():
+    from repro.pool import PoolMetrics
+    m = PoolMetrics(device_name="serve")
+    c = HotRowCache(2, metrics=m)
+    c.put_many([1, 2], np.ones((2, 4), np.float32))
+    hits, missing = c.get_many([1, 2, 3])
+    assert set(hits) == {1, 2} and missing == [3]
+    c.put_many([3], np.ones((1, 4)))       # get_many MRU'd 1 then 2 -> 1 LRU
+    assert len(c) == 2
+    hits, missing = c.get_many([1])
+    assert missing == [1]                  # 1 was the LRU, evicted
+    assert m.cache_hits == 2 and m.cache_misses == 2
+    assert c.invalidate([2, 99]) == 1      # only 2 was cached
+    assert m.cache_invalidations == 1
+
+
+def test_batcher_dedup_one_gather():
+    calls = []
+
+    def gather(idx):
+        calls.append(np.array(idx))
+        return np.asarray(idx, np.float32)[:, None] * np.ones(4, np.float32)
+
+    b = RequestBatcher(gather, HotRowCache(64))
+    out = b.lookup_batch([np.array([5, 3, 5]), np.array([[3, 7], [7, 5]])])
+    assert len(calls) == 1                       # ONE gather for the batch
+    assert sorted(calls[0].tolist()) == [3, 5, 7]  # deduplicated
+    np.testing.assert_allclose(out[0][:, 0], [5, 3, 5])
+    assert out[1].shape == (2, 2, 4)
+    np.testing.assert_allclose(out[1][..., 0], [[3, 7], [7, 5]])
+    # second batch over the same ids: served fully from cache
+    b.lookup_batch([np.array([3, 5, 7])])
+    assert len(calls) == 1
+
+
+# -- serve-after-commit coherence (all backends) ------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_serve_sees_committed_rows_exact_invalidation(backend, tmp_path):
+    pool = mkpool(backend, tmp_path)
+    reg, rows = seed_mirror(pool)
+    ring = UndoRing(PoolAllocator(pool), max_logs=8)
+    tier = EmbeddingServeTier(pool, cache_rows=32)
+
+    out = tier.serve_batch([np.array([1, 2, 3]), np.array([2, 3, 4])])
+    np.testing.assert_array_equal(out[0], rows[[1, 2, 3]])
+    assert tier.metrics.cache_misses == 4        # unique ids, one gather
+
+    # trainer commits step 0 touching rows {2, 9}: 2 is cached, 9 is not
+    new = np.full((2, 8), 42.0, np.float32)
+    ring.log_and_apply(0, reg, np.array([2, 9]), new)
+    info = tier.poll_coherence()
+    assert info["steps"] == 1 and info["watermark"] == 0
+    assert info["evicted"] == 1                  # exactly the cached row
+    assert tier.metrics.cache_invalidations == 1
+
+    out = tier.serve_batch([np.array([2, 9, 1])])
+    np.testing.assert_array_equal(out[0][0], new[0])   # fresh row 2
+    np.testing.assert_array_equal(out[0][1], new[1])   # fresh row 9
+    np.testing.assert_array_equal(out[0][2], rows[1])  # untouched row
+    pool.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tailer_follows_ring_growth(backend, tmp_path):
+    pool = mkpool(backend, tmp_path)
+    reg, rows = seed_mirror(pool)
+    ring = UndoRing(PoolAllocator(pool), max_logs=4)
+    tier = EmbeddingServeTier(pool, cache_rows=32)
+    tier.serve_batch([np.arange(8)])
+    ring.log_and_apply(0, reg, np.array([1]),
+                       np.zeros((1, 8), np.float32))
+    assert tier.poll_coherence()["steps"] == 1
+    # a much bigger entry forces a ring grow (generation flip)
+    big = np.arange(48)
+    ring.log_and_apply(1, reg, big,
+                       np.zeros((big.size, 8), np.float32))
+    info = tier.poll_coherence()
+    assert info["watermark"] == 1                # tailer rebound to new gen
+    pool.close()
+
+
+def test_commit_hook_invalidates_inline():
+    cache = HotRowCache(8)
+    cache.put_many([1, 2, 3], np.ones((3, 4), np.float32))
+    tailer = types.SimpleNamespace(watermark=-1)
+    hook = make_commit_hook(cache, tailer)
+    hook(5, np.array([2, 7]))
+    assert len(cache) == 2 and tailer.watermark == 5
+    hits, missing = cache.get_many([2])
+    assert missing == [2]
+
+
+# -- readonly tenant isolation ------------------------------------------------
+
+def test_readonly_tenant_denied_mutations(tmp_path):
+    srv = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/ro.sock").start()
+    rw = RemotePool(srv.addr)
+    reg, rows = seed_mirror(rw)
+    ring = UndoRing(PoolAllocator(rw), max_logs=4)
+    ring.log_and_apply(0, reg, np.array([1]), np.ones((1, 8), np.float32))
+
+    ro = RemotePool(srv.addr, readonly=True)
+    alloc = PoolAllocator(ro)
+    # reads + idempotent reopen work
+    r = alloc.domain("embedding-mirror").get("rows")
+    assert r is not None
+    q = NmpQueue(ro)
+    np.testing.assert_array_equal(q.gather(r, np.array([3])),
+                                  rw.read(reg.off + 3 * 32, 32)
+                                  .view(np.float32).reshape(1, 8))
+    reopened = alloc.domain("embedding-mirror").alloc(
+        "rows", shape=r.shape, dtype="float32")
+    assert reopened.off == r.off
+    # every mutating op is denied with the typed error
+    with pytest.raises(TenantIsolationError):
+        ro.write(r.off, b"\x00" * 8)
+    with pytest.raises(TenantIsolationError):
+        q.row_update(r, np.array([0]), np.zeros((1, 8), np.float32))
+    with pytest.raises(TenantIsolationError):
+        q.scatter_add(r, np.array([0]), np.zeros((1, 8), np.float32))
+    with pytest.raises(TenantIsolationError):
+        alloc.domain("embedding-mirror").alloc("new", shape=(4,),
+                                               dtype="float32")
+    with pytest.raises(TenantIsolationError):
+        alloc.domain("embedding-mirror").free_region("rows")
+    ro_ring = open_ring(ro, max_logs=4, readonly=True)
+    with pytest.raises(TenantIsolationError):
+        ro_ring.log_and_apply(1, r, np.array([0]),
+                              np.zeros((1, 8), np.float32))
+    # the readonly opener still tails commits
+    tailer = CommitTailer(ro_ring, HotRowCache(4))
+    assert tailer.poll()["watermark"] == 0
+    # ...and the read-write tenant is unaffected
+    ring.log_and_apply(1, reg, np.array([2]), np.ones((1, 8), np.float32))
+    srv.shutdown(close_device=True)
+
+
+def test_readonly_local_allocator_guards():
+    pool = DramPool(1 << 18)
+    PoolAllocator(pool).domain("d").alloc("x", shape=(4,), dtype="float32")
+    ro = PoolAllocator(pool, readonly=True)
+    assert ro.domain("d").get("x") is not None
+    with pytest.raises(TenantIsolationError):
+        ro.domain("d").alloc("y", shape=(4,), dtype="float32")
+    with pytest.raises(TenantIsolationError):
+        ro.domain("d").free_region("x")
+    with pytest.raises(TenantIsolationError):
+        ro.free_domain("d")
+
+
+# -- read replica (sharded) ---------------------------------------------------
+
+def _sharded_with_replica(tmp_path, V=64, d=8):
+    pool = mkpool("sharded", tmp_path)
+    reg, rows = seed_mirror(pool, V, d)
+    ring = UndoRing(PoolAllocator(pool), max_logs=8)
+    ring.log_and_apply(0, reg, np.array([5]),
+                       np.full((1, d), 5.5, np.float32))
+    rows = np.array(rows)
+    rows[5] = 5.5
+    primary = pool.placement.place("embedding-mirror")
+    dst = 1 - primary
+    pool.replicate_domain("embedding-mirror", dst, watermark=0)
+    return pool, reg, rows, ring, primary, dst
+
+
+def test_replica_survives_primary_kill(tmp_path):
+    pool, reg, rows, ring, primary, dst = _sharded_with_replica(tmp_path)
+    tier = EmbeddingServeTier(pool, cache_rows=16, replica=True)
+    assert tier.replica.watermark() == 0
+    out = tier.serve_batch([np.array([5, 1])])
+    np.testing.assert_array_equal(out[0], rows[[5, 1]])
+
+    pool._test_servers[primary].shutdown()       # kill -9 the primary node
+    tier.cache.clear()
+    out = tier.serve_batch([np.array([5, 2])])   # replica serves, same data
+    np.testing.assert_array_equal(out[0], rows[[5, 2]])
+    assert tier.failovers >= 1
+    assert tier.staleness_bound() <= 1           # the declared lag bound
+    b = tier.bag_lookup(np.array([[1, 2]]))
+    np.testing.assert_allclose(b[0], rows[1] + rows[2])
+    pool._test_servers[dst].shutdown(close_device=True)
+
+
+def test_replica_pin_survives_sweep(tmp_path):
+    pool, reg, rows, ring, primary, dst = _sharded_with_replica(tmp_path)
+    assert pool.placement.explicit(replica_domain("embedding-mirror")) == dst
+    assert pool.sweep_stale_domains() == []      # pin protects the replica
+    rr = ReplicaReader(pool)
+    np.testing.assert_array_equal(rr.gather([5])[0], rows[5])
+    pool.close()
+
+
+def test_replica_refresh_advances_watermark(tmp_path):
+    pool, reg, rows, ring, primary, dst = _sharded_with_replica(tmp_path)
+    ring.log_and_apply(1, reg, np.array([7]),
+                       np.full((1, 8), 7.7, np.float32))
+    info = pool.replicate_domain("embedding-mirror", dst, watermark=1)
+    assert info["regions"] >= 1 and info["link_bytes"] > 0
+    rr = ReplicaReader(pool)
+    assert rr.watermark() == 1
+    np.testing.assert_allclose(rr.gather([7])[0], 7.7)
+    pool.close()
+
+
+def test_manager_replicates_on_commit(tmp_path):
+    from repro.configs.base import CheckpointConfig
+    from repro.core.checkpoint.manager import CheckpointManager
+
+    pool = mkpool("sharded", tmp_path)
+    dst = 1 - pool.placement.place("embedding-mirror")
+    ccfg = CheckpointConfig(directory=str(tmp_path / "ckpt"),
+                            pool_backend="sharded", max_undo_logs=8,
+                            pool_replica=dst, pool_replica_every=1)
+    cfg = types.SimpleNamespace(arch_type="transformer")
+    table = np.arange(32 * 4, dtype=np.float32).reshape(32, 4)
+    mgr = CheckpointManager(cfg, ccfg, pool=pool,
+                            embed_init={"table": table})
+    seen = []
+    mgr.add_commit_hook(lambda step, idx: seen.append((step, list(idx))))
+    mgr._do_tier_e(0, np.array([3]), np.full((1, 4), 9.0, np.float32))
+    assert seen == [(0, [3])]
+    assert mgr.stats["replica_refreshes"] == 1
+    assert mgr.stats["replica_link_bytes"] > 0
+    rr = ReplicaReader(pool)
+    assert rr.watermark() == 0
+    np.testing.assert_allclose(rr.gather([3])[0], 9.0)
+    mgr.close()
