@@ -9,6 +9,14 @@ trainer commits interleaved, measuring:
   * link bytes per 1k looked-up rows (the cache's traffic saving),
   * cache hit rate and commit-driven invalidations.
 
+Wire-v2 cells ride along:
+
+  * ``pipeline`` — raw pool read ops/s at in-flight depths 1/4/8 on the
+    remote and sharded backends, plus the client channel's per-op latency
+    percentiles (the tagged-frame pipelining win),
+  * ``batch_frames`` — link bytes for N single region reads vs ONE
+    scatter-gather batch frame carrying the same N reads.
+
 The JSON is flat and append-friendly so CI can diff the perf trajectory
 per PR. ``--smoke`` shrinks the stream for the CI matrix cell; the rows()
 hook prints the same numbers as ``benchmarks.run`` CSV lines.
@@ -20,8 +28,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import socket
+import subprocess
+import sys
 import tempfile
 import time
+from collections import deque
 
 import numpy as np
 
@@ -132,9 +144,134 @@ def bench_cell(backend: str, cache_rows: int, *, batches: int,
                 pass
 
 
+def _spawn_node(root: str, name: str) -> tuple[str, subprocess.Popen]:
+    """A memory node as its OWN process (deployment shape — an in-process
+    server thread would share the client's GIL and hide the pipelining
+    win)."""
+    addr = f"unix:{root}/{name}.sock"
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.pool.server", "--addr", addr,
+         "--backend", "dram", "--capacity", str(1 << 22)],
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    deadline = time.time() + 15
+    while True:
+        # the socket file appears at bind() but accepts only after
+        # listen(): probe with a real connect before handing it out
+        if os.path.exists(addr[5:]):
+            probe = socket.socket(socket.AF_UNIX)
+            try:
+                probe.connect(addr[5:])
+                return addr, proc
+            except OSError:
+                pass
+            finally:
+                probe.close()
+        if proc.poll() is not None or time.time() > deadline:
+            raise RuntimeError(f"pool-server {name} failed to start")
+        time.sleep(0.02)
+
+
+def _mkpool_proc(backend: str, root: str, tag: str):
+    procs = []
+    if backend == "remote":
+        addr, p = _spawn_node(root, f"{tag}0")
+        procs.append(p)
+        return make_pool("remote", addr=addr), procs
+    addrs = []
+    for i in range(2):
+        addr, p = _spawn_node(root, f"{tag}{i}")
+        addrs.append(addr)
+        procs.append(p)
+    return make_pool("sharded", shards=",".join(addrs)), procs
+
+
+def bench_pipeline(backend: str, depth: int, *, nops: int,
+                   root: str) -> dict:
+    """Raw pool-read throughput with ``depth`` requests in flight on one
+    connection — depth 1 is the old one-at-a-time wire discipline, depth
+    8 is the pipelined v2 channel earning its keep. Nodes run
+    out-of-process (the deployment shape)."""
+    pool, servers = _mkpool_proc(backend, root, f"pipe-{backend}-{depth}-")
+    try:
+        alloc = PoolAllocator(pool)
+        region = alloc.domain("pipe-bench").alloc(
+            "blk", shape=(1 << 16,), dtype="uint8")
+        pool.write(region.off, np.zeros(1 << 16, np.uint8))
+        offs = [region.off + (i % 512) * 128 for i in range(nops)]
+        t0 = time.perf_counter()
+        pending: deque = deque()
+        for off in offs:
+            pending.append(pool.read_async(off, 128))
+            while len(pending) >= depth:
+                pending.popleft().result()
+        while pending:
+            pending.popleft().result()
+        wall = time.perf_counter() - t0
+        cell = {
+            "backend": backend,
+            "depth": depth,
+            "ops": nops,
+            "ops_per_s": round(nops / wall, 1),
+            "wall_s": round(wall, 4),
+        }
+        if hasattr(pool, "latency_stats"):
+            lat = pool.latency_stats()
+            # sharded: per-shard dicts keyed by index — fold shard 0 in
+            if lat and "read" not in lat:
+                lat = next(iter(lat.values()), {})
+            read = lat.get("read")
+            if read:
+                cell["read_p50_us"] = round(read["p50_s"] * 1e6, 1)
+                cell["read_p99_us"] = round(read["p99_s"] * 1e6, 1)
+        if hasattr(pool, "wire_stats"):
+            ws = pool.wire_stats()
+            if "wire" not in ws:                   # sharded: per-node
+                ws = next(iter(ws.values()), {})
+            cell["wire"] = ws.get("wire")
+        return cell
+    finally:
+        pool.close()
+        for p in servers:
+            p.terminate()
+            p.wait(timeout=10)
+
+
+def bench_batch_frames(root: str, *, n: int = 64,
+                       nbytes: int = 256) -> dict:
+    """Link bytes for N single reads vs the same N in ONE scatter-gather
+    batch frame (framing + header amortisation)."""
+    pool, servers = _mkpool_proc("remote", root, "batch-")
+    try:
+        region = PoolAllocator(pool).domain("batch-bench").alloc(
+            "blk", shape=(n * nbytes,), dtype="uint8")
+        pool.write(region.off, np.zeros(n * nbytes, np.uint8))
+        reqs = [(region.off + i * nbytes, nbytes) for i in range(n)]
+
+        def link_delta(fn):
+            ws0 = pool.wire_stats()
+            fn()
+            ws1 = pool.wire_stats()
+            return (ws1["tx_bytes"] - ws0["tx_bytes"]
+                    + ws1["rx_bytes"] - ws0["rx_bytes"])
+
+        singles = link_delta(
+            lambda: [pool.read(off, nb) for off, nb in reqs])
+        batched = link_delta(lambda: pool.read_batch(reqs))
+        return {"n": n, "bytes_per_read": nbytes,
+                "link_bytes_singles": int(singles),
+                "link_bytes_batch": int(batched),
+                "savings_ratio": round(singles / max(1, batched), 3)}
+    finally:
+        pool.close()
+        for p in servers:
+            p.terminate()
+            p.wait(timeout=10)
+
+
 def run(backends, *, smoke: bool = False, seed: int = 0) -> dict:
     batches = 8 if smoke else 64
     batch_requests = 8 if smoke else 32
+    nops = 256 if smoke else 2048
     root = tempfile.mkdtemp(prefix="bench_pool_")
     cells = []
     for backend in backends:
@@ -142,11 +279,19 @@ def run(backends, *, smoke: bool = False, seed: int = 0) -> dict:
             cells.append(bench_cell(backend, cache_rows, batches=batches,
                                     batch_requests=batch_requests,
                                     root=root, seed=seed))
+    pipeline = [bench_pipeline(backend, depth, nops=nops, root=root)
+                for backend in backends
+                if backend in ("remote", "sharded")
+                for depth in (1, 4, 8)]
+    batch_frames = bench_batch_frames(root) \
+        if any(b in ("remote", "sharded") for b in backends) else None
     return {
         "bench": "pool_serve",
         "smoke": smoke,
         "table": {"rows": V, "dim": D},
         "cells": cells,
+        "pipeline": pipeline,
+        "batch_frames": batch_frames,
     }
 
 
@@ -181,6 +326,19 @@ def main():
               f"qps={c['qps']:<9} p50={c['p50_ms']}ms p99={c['p99_ms']}ms "
               f"link/1k={c['link_bytes_per_1k_lookups']}B "
               f"hit={c['hit_rate']}")
+    for c in res["pipeline"]:
+        extra = ""
+        if "read_p50_us" in c:
+            extra = (f" read_p50={c['read_p50_us']}us "
+                     f"p99={c['read_p99_us']}us")
+        print(f"[bench_pool] {c['backend']:7s} pipeline depth={c['depth']} "
+              f"ops/s={c['ops_per_s']}{extra}")
+    bf = res["batch_frames"]
+    if bf:
+        print(f"[bench_pool] batch frame: {bf['n']}x{bf['bytes_per_read']}B "
+              f"singles={bf['link_bytes_singles']}B "
+              f"batch={bf['link_bytes_batch']}B "
+              f"({bf['savings_ratio']}x less link traffic)")
     print(f"[bench_pool] wrote {args.out}")
 
 

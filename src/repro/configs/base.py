@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Sequence
+from typing import Any, Optional, Sequence
 
 import jax.numpy as jnp
 
@@ -236,6 +236,12 @@ class CheckpointConfig:
                                    # (-1 = no replica)
     pool_replica_every: int = 1    # refresh the replica every K committed
                                    # steps (the serving staleness bound)
+    pool_timeout: Optional[float] = None
+                                   # remote/sharded: rescale the per-op-class
+                                   # wire deadlines (control/data/bulk/
+                                   # keepalive) around this many seconds;
+                                   # None keeps the protocol registry's
+                                   # defaults
 
 
 @dataclass(frozen=True)

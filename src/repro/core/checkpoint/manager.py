@@ -113,7 +113,8 @@ class CheckpointManager:
                 placement=getattr(self.ccfg, "pool_placement", ""),
                 rebalance=float(getattr(self.ccfg, "pool_rebalance", 0.0)
                                 or 0.0),
-                secret=getattr(self.ccfg, "pool_secret", ""))
+                secret=getattr(self.ccfg, "pool_secret", ""),
+                timeout=getattr(self.ccfg, "pool_timeout", None))
             # POOL.json lets recovery reopen the same node(s): pmem by image
             # path, remote by reconnecting to the surviving server under
             # the same tenant AND quota (a server restart re-registers the

@@ -62,6 +62,11 @@ class UndoRing:
         self.meta = JsonRegion.create(self.domain, "meta", nbytes=4 << 10)
         m = self.meta.read()
         self.ring: Optional[Region] = None
+        # writer-tracked liveness (slot -> step of the entry it holds):
+        # None = unknown (attached to a pre-existing ring), rebuilt by the
+        # first gc with ONE header scan; every append afterwards keeps it
+        # current so steady-state gc is a single slot_clear round trip
+        self._live: Optional[dict[int, int]] = None
         if m is not None:
             self.nslots = m["nslots"]
             self.slot_bytes = m["slot_bytes"]
@@ -120,6 +125,7 @@ class UndoRing:
         self.gen += 1
         self.ring, self.slot_bytes = self._alloc_ring(self.gen, need)
         self._flip_meta()
+        self._live = {}
 
     def _slot_off(self, step: int) -> int:
         return self.ring.off + (step % self.nslots) * self.slot_bytes
@@ -149,6 +155,7 @@ class UndoRing:
         self._ensure_capacity(uc.slot_nbytes(idx.size, old_rows.shape[-1],
                                              old_acc is not None))
         self._write_slot(step, idx, old_rows, old_acc)
+        self._note_live(step)
 
     def log_and_apply(self, step: int, mirror: Region, idx: np.ndarray,
                       new_rows: np.ndarray) -> dict:
@@ -159,10 +166,12 @@ class UndoRing:
         new_rows = np.asarray(new_rows, np.float32).reshape(idx.size, -1)
         self._ensure_capacity(uc.slot_nbytes(idx.size, new_rows.shape[-1],
                                              False))
-        return self.nmp.undo_log_append(
+        stats = self.nmp.undo_log_append(
             mirror, self.ring, step=step, slot_off=self._slot_off(step),
             slot_bytes=self.slot_bytes, idx=idx, new_rows=new_rows,
             compress=self.compress)
+        self._note_live(step)
+        return stats
 
     def _read_slot_verbatim(self, step: int) -> Optional[bytes]:
         """CRC-checked copy of a committed slot's stored bytes, with the
@@ -200,6 +209,7 @@ class UndoRing:
         for step, buf in entries:
             uc.write_slot(self.device, self._slot_off(step), buf)
         self._flip_meta()
+        self._live = {step % self.nslots: step for step, _ in entries}
         if old_gen >= 0:
             self.domain.free_region(f"ring{old_gen}",
                                     point="undo-grow-free")
@@ -240,18 +250,77 @@ class UndoRing:
             return None
         return uc.decode_payload(stored, n, d, flags)
 
+    def _read_payloads(self, hits) -> dict:
+        """hits = [(step, slot, hdr), ...] -> {step: payload or None}. ONE
+        scatter-gather ``read_batch`` frame moves every stored payload;
+        a CRC miss (slot GC'd or overwritten since the scan) maps to
+        None."""
+        reqs = [(self.ring.off + slot * self.slot_bytes + uc.HDR.size,
+                 hdr[4]) for _, slot, hdr in hits]
+        blobs = self.device.read_batch(reqs, tag="undo-read")
+        out = {}
+        for (s, _, hdr), stored in zip(hits, blobs):
+            _, n, d, flags, stored_len, crc = hdr
+            stored = bytes(stored)
+            out[s] = uc.decode_payload(stored, n, d, flags) \
+                if zlib.crc32(stored) == crc else None
+        return out
+
+    def read_many(self, steps) -> dict:
+        """Decode several committed steps in O(1) link round-trips: ONE
+        header scan locates the hits, ONE batched read moves the
+        payloads. CRC-failed entries are dropped, same as ``read``.
+        Returns {step: decoded payload}."""
+        steps = [int(s) for s in steps]
+        if self.ring is None or not steps:
+            return {}
+        want = set(steps)
+        hits = [(hdr[0], slot, hdr) for slot, hdr in self._scan_headers()
+                if hdr[0] in want]
+        if not hits:
+            return {}
+        return {s: p for s, p in self._read_payloads(hits).items()
+                if p is not None}
+
+    def committed_after(self, watermark: int) -> dict:
+        """{step: payload-or-None} for every committed step > watermark in
+        O(1) link round-trips — the serving tier's tailer poll. None marks
+        a step whose slot was GC'd/overwritten between scan and read (the
+        caller still sees the step and can advance its watermark)."""
+        if self.ring is None:
+            return {}
+        hits = [(hdr[0], slot, hdr) for slot, hdr in self._scan_headers()
+                if hdr[0] > watermark]
+        if not hits:
+            return {}
+        return self._read_payloads(hits)
+
     def committed_steps(self) -> list[int]:
         return sorted(hdr[0] for _, hdr in self._scan_headers())
 
+    def _note_live(self, step: int):
+        if self._live is not None:
+            self._live[step % self.nslots] = step
+
     def gc(self, keep_from: int):
         """Invalidate committed entries older than keep_from (both tiers
-        durable — paper step 4). One ``slot_headers`` scan plus one batched
-        ``slot_clear`` — O(1) wire round-trips however many expired."""
-        expired = [slot for slot, hdr in self._scan_headers()
-                   if hdr[0] < keep_from]
+        durable — paper step 4). The writer's liveness map knows which
+        slot holds which step, so steady-state gc is ONE batched
+        ``slot_clear`` round trip — and zero when nothing expired. Only
+        the first gc after attaching to a pre-existing ring pays a header
+        scan to rebuild the map."""
+        if self.ring is None:
+            return
+        if self._live is None:
+            self._live = {slot: hdr[0]
+                          for slot, hdr in self._scan_headers()}
+        expired = sorted(slot for slot, step in self._live.items()
+                         if step < keep_from)
         if expired:
             self.nmp.slot_clear(self.ring, expired, self.slot_bytes,
                                 point="undo-gc")
+            for slot in expired:
+                del self._live[slot]
 
 
 def open_ring(device: PoolDevice, max_logs: int = 64,

@@ -12,8 +12,12 @@ Layering (bottom up):
                + EmbeddingPoolMirror
   faults.py    deterministic crash / torn-write / dropped-flush injection
   metrics.py   traffic + energy counters (feeds benchmarks/fig13_energy.py)
-  remote.py    RemotePool client + length-prefixed wire protocol (optional
-               shared-secret HMAC handshake on tcp transports)
+  protocol.py  THE wire protocol: framing, versioned hello (v1/v2), typed
+               op registry (OPS/NMP_OPS), error transparency, per-op-class
+               timeouts, scatter-gather batch frames, and the pipelined
+               PoolChannel (tagged frames, rid-correlated futures)
+  remote.py    RemotePool client over a PoolChannel (optional shared-secret
+               HMAC handshake on tcp transports)
   server.py    standalone memory-node process serving many trainer tenants
   placement.py epoch-versioned PlacementMap (domain -> shard, CRC-sealed
                move records) + capacity-watermark RebalancePolicy
@@ -31,19 +35,23 @@ from repro.pool.metrics import PoolMetrics
 from repro.pool.nmp import EmbeddingPoolMirror, NmpQueue
 from repro.pool.placement import (Migration, PlacementEpoch, PlacementMap,
                                   PoolTopology, RebalancePolicy)
+from repro.pool.protocol import (NMP_OPS, OPS, WIRE_V1, WIRE_V2, PoolChannel,
+                                 PoolTimeoutError, Timeouts, wire_from_env)
 from repro.pool.remote import (PoolAuthError, PoolConnectionError,
                                RemotePool, WireError, parse_addr)
 from repro.pool.sharded import REPLICA_SUFFIX, ShardedPool, replica_domain
 
 __all__ = [
     "BACKENDS", "DramPool", "EmbeddingPoolMirror", "FaultEvent",
-    "FaultSchedule", "InjectedCrash", "JsonRegion", "Migration", "NmpQueue",
-    "PlacementEpoch", "PlacementMap", "PmemPool", "PoolAllocator",
-    "PoolAuthError", "PoolConnectionError", "PoolDevice", "PoolError",
-    "PoolMetrics", "PoolTopology", "QuotaExceededError", "REPLICA_SUFFIX",
-    "Region", "RebalancePolicy", "RemotePool", "ShardedPool",
-    "TenantIsolationError", "WireError", "make_pool", "parse_addr",
-    "replica_domain",
+    "FaultSchedule", "InjectedCrash", "JsonRegion", "Migration",
+    "NMP_OPS", "NmpQueue", "OPS", "PlacementEpoch", "PlacementMap",
+    "PmemPool", "PoolAllocator", "PoolAuthError", "PoolChannel",
+    "PoolConnectionError", "PoolDevice", "PoolError", "PoolMetrics",
+    "PoolTimeoutError", "PoolTopology", "QuotaExceededError",
+    "REPLICA_SUFFIX", "Region", "RebalancePolicy", "RemotePool",
+    "ShardedPool", "TenantIsolationError", "Timeouts", "WIRE_V1", "WIRE_V2",
+    "WireError", "make_pool", "parse_addr", "replica_domain",
+    "wire_from_env",
 ]
 # "PoolServer" is importable too, via the lazy __getattr__ below (kept out
 # of __all__ so static checkers don't flag the deferred name)

@@ -120,6 +120,40 @@ class PoolDevice:
         self._check(off, nbytes)
         return self._cache[off:off + nbytes]
 
+    # -- async / scatter-gather forms ----------------------------------------
+    # Local devices resolve these synchronously; RemotePool overrides them
+    # with pipelined futures and single-round-trip batch frames, and
+    # ShardedPool routes them per shard. One client API, every backend.
+    def read_async(self, off: int, nbytes: int, tag: str = "read"):
+        from repro.pool.protocol import CompletedFuture
+        return CompletedFuture(self.read(off, nbytes, tag=tag))
+
+    def write_async(self, off: int, data, tag: str = "write"):
+        from repro.pool.protocol import CompletedFuture
+        self.write(off, data, tag=tag)
+        return CompletedFuture(None)
+
+    def read_batch(self, reqs, tag: str = "read") -> list:
+        """[(off, nbytes), ...] -> [bytes, ...] (one round trip on remote
+        backends)."""
+        return [bytes(self.read(off, nbytes, tag=tag))
+                for off, nbytes in reqs]
+
+    def nmp_batch(self, calls) -> list:
+        """[(kind, region, kwargs), ...] executed via the protocol op
+        registry — locally in order; remotely as ONE scatter-gather
+        frame."""
+        from repro.pool.nmp import NmpQueue
+        from repro.pool.protocol import NMP_OPS
+        q = NmpQueue(self)
+        out = []
+        for kind, region, kw in calls:
+            spec = NMP_OPS.get(kind)
+            if spec is None:
+                raise PoolError(f"unknown nmp kind {kind!r}")
+            out.append(spec.run(q, region, **kw))
+        return out
+
     def mark_dirty(self, off: int, nbytes: int):
         # append-only on the hot path; ranges are sorted+merged lazily at
         # the next persist (tens of thousands of scattered row marks per
@@ -289,7 +323,13 @@ def make_pool(backend: str, *, path: Optional[str] = None,
               addr: Optional[str] = None, tenant: str = "default",
               quota: int = 0, shards=None,
               placement=None, rebalance: float = 0.0,
-              secret: str = "", readonly: bool = False) -> PoolDevice:
+              secret: str = "", readonly: bool = False,
+              timeout=None, wire=None) -> PoolDevice:
+    """``timeout`` (remote/sharded only): a float rescales the per-op-class
+    wire deadlines around it; a ``protocol.Timeouts`` pins them exactly.
+    None keeps the registry's per-class defaults. ``wire`` pins the
+    protocol revision to negotiate (1 or 2); None honours
+    ``REPRO_POOL_WIRE`` and otherwise asks for v2."""
     if backend == "dram":
         return DramPool(capacity, faults)
     if backend == "pmem":
@@ -302,7 +342,7 @@ def make_pool(backend: str, *, path: Optional[str] = None,
                             "(unix:/path or tcp:host:port)")
         from repro.pool.remote import RemotePool
         dev = RemotePool(addr, tenant=tenant, quota=quota, secret=secret,
-                         readonly=readonly)
+                         readonly=readonly, timeout=timeout, wire=wire)
         if faults is not None:
             dev.faults = faults
         return dev
@@ -314,7 +354,8 @@ def make_pool(backend: str, *, path: Optional[str] = None,
         from repro.pool.sharded import ShardedPool
         pmap = PlacementMap.parse(shards, placement)
         dev = ShardedPool(list(pmap.shards), tenant=tenant, quota=quota,
-                          placement=pmap, secret=secret, readonly=readonly)
+                          placement=pmap, secret=secret, readonly=readonly,
+                          timeout=timeout, wire=wire)
         if rebalance:
             dev.rebalance = RebalancePolicy(high=float(rebalance))
         if faults is not None:

@@ -12,6 +12,11 @@ charges three meters on the device's ``PoolMetrics``:
 Ops are enqueued and run at ``drain()`` (or eagerly via the convenience
 wrappers) — the queue models the submission window the checkpoint logic uses
 to hide pool work inside the GPU's MLP phase.
+
+The op surface itself (kinds, wire fields, mutability, timeout classes) is
+described once, in the ``NMP_OPS`` registry of ``repro.pool.protocol`` —
+the server's dispatcher, the sharded router, and the local fallback all
+execute through those descriptors.
 """
 from __future__ import annotations
 
@@ -46,6 +51,13 @@ class NmpQueue:
         out = [fn(*args, **kw) for fn, args, kw in self._pending]
         self._pending = []
         return out
+
+    def batch(self, calls) -> list:
+        """[(kind, region, kwargs), ...] through the protocol op registry:
+        ONE scatter-gather wire frame on remote devices (wire v2), an
+        in-order local run otherwise. Kinds/kwargs are the ``NMP_OPS``
+        executor signatures (``protocol.py`` reference table)."""
+        return self.device.nmp_batch(calls)
 
     # -- helpers -------------------------------------------------------------
     def _rows_meta(self, region: Region):

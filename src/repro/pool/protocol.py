@@ -1,0 +1,986 @@
+"""Pool wire protocol v2 — framing, typed op registry, pipelined channel.
+
+This module is the single source of truth for the trainer <-> memory-node
+wire API. The client (``remote.RemotePool``), the server
+(``server.PoolServer``) and the multi-node router (``sharded.ShardedPool``)
+all import their op descriptors, error mapping, timeout classes, and framing
+from here; nothing about the protocol is defined anywhere else.
+
+Frame layout (both directions, little-endian)::
+
+    u32 total | u32 hdr_len | hdr (UTF-8 JSON) | body (raw bytes)
+
+``total`` counts everything after itself. Requests carry ``{"op": ...}``
+plus op-specific fields; bulk payloads ride in ``body`` so arrays never
+pass through JSON.
+
+Version negotiation: the client's ``hello`` carries ``"wire": 2``; the
+server replies with ``"wire": min(client, server)``. A v1 peer (no ``wire``
+field) negotiates down to the strict request/response protocol, one
+in-flight op per connection, fence-on-desync and all — v1 clients and v1
+servers keep working against v2 peers unchanged.
+
+Wire v2 adds, on top of the v1 frame layout:
+
+  * **tagged frames** — every request carries a ``rid`` correlation id and
+    the server echoes it on the reply, so many requests can be in flight
+    per socket and responses match by tag, not by position;
+  * **pipelining + multiplexing** — ``PoolChannel`` keeps a reader thread
+    matching replies to futures; any number of logical streams (the
+    checkpoint writer thread, a serving tier, a commit tailer) share one
+    connection concurrently;
+  * **no fence-on-desync** — a failed op (typed error, per-request
+    timeout, torn body inside an intact frame) rejects only its own
+    future; the stream stays in sync and later ops on the same socket
+    proceed. Only broken *framing* (a corrupt length prefix, EOF
+    mid-frame) still kills a connection, because a byte stream without
+    frame boundaries cannot be resynchronised;
+  * **keepalive** — an idle pipelined connection sends ``ping`` no-op
+    frames, so a quiet trainer is not mistaken for a dead peer by either
+    side's idle timeout;
+  * **scatter-gather batch frames** — the ``batch`` op carries N sub-ops
+    (region reads/writes/allocs/nmp) in ONE frame and returns N tagged
+    sub-results in one reply: one link round trip for a whole replica
+    refresh or a migration copy instead of one per region.
+
+Protocol reference (every op, from the registry below):
+
+    op          class    mutating  control  body                result
+    ----------- -------- --------- -------- ------------------- ----------------
+    hello       control  -         -        -                   capacity, wire
+    ping        control  -         -        -                   - (keepalive)
+    read        data     -         -        -                   bytes
+    write       data     yes       -        raw bytes           -
+    persist     data     -         -        -                   -
+    ensure      data     -         yes      -                   capacity
+    capacity    control  -         -        -                   capacity
+    crash       control  -         yes      -                   - (power cycle)
+    set-faults  control  -         yes      -                   -
+    alloc       data     reopen    -        -                   region entry
+    get         control  -         -        -                   region entry
+    regions     control  -         -        -                   {name: entry}
+    domains     control  -         -        -                   [domain, ...]
+    free        data     yes       -        -                   freed
+    free-region data     yes       -        -                   freed
+    metrics     control  -         all-scope -                  snapshot
+    nmp         per-kind per-kind  -        idx|rows|blob       array/stats
+    batch       bulk     per-sub   per-sub  concat sub-bodies   tagged results
+    close       control  -         -        -                   - (hang up)
+
+``nmp`` sub-kinds (``NMP_OPS``): gather, bag_gather, undo_snapshot,
+slot_headers, row_update, scatter_add, undo_log_append, slot_clear,
+region_export, region_import, blob_put — each with its own mutating flag
+and timeout class (bulk for the region/blob movers).
+
+Timeout classes replace the old flat ``DEFAULT_TIMEOUT``: ``control`` ops
+answer from directory state and time out fast; ``data`` ops touch media;
+``bulk`` ops move whole region images and get the long leash. A single
+``make_pool(..., timeout=...)`` override rescales all three.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.pool.device import PoolError
+from repro.pool.faults import InjectedCrash
+
+__all__ = [
+    "IDLE", "MAX_FRAME", "NMP_OPS", "OPS", "WIRE_V1", "WIRE_V2",
+    "BufferedSocket", "CompletedFuture", "MappedFuture", "NmpSpec", "OpSpec",
+    "PoolChannel", "PoolConnectionError", "PoolFuture", "PoolTimeoutError",
+    "Timeouts", "WireError", "error_to_frame", "format_addr",
+    "frame_to_error", "pack_batch", "pack_batch_results", "pack_frame",
+    "parse_addr", "recv_frame", "register_error", "send_frame",
+    "unpack_batch", "unpack_batch_results", "wire_from_env",
+]
+
+WIRE_V1 = 1
+WIRE_V2 = 2
+
+MAX_FRAME = 1 << 30          # anything larger is garbage, not a request
+_LEN = struct.Struct("<I")
+
+# Sentinel recv_frame(idle_ok=True) returns when the socket timed out at a
+# frame boundary: the peer is quiet, not dead (the keepalive bugfix — the
+# old client treated this as a vanished peer and fenced the connection).
+IDLE = object()
+
+
+class WireError(PoolError):
+    """Malformed, truncated, or oversized protocol frame. ``fatal`` says
+    whether the byte stream lost frame sync (length prefix corrupt, EOF
+    mid-frame) — a non-fatal instance means the offending frame was fully
+    consumed and the connection can keep serving."""
+
+    fatal = True
+
+
+class PoolConnectionError(PoolError):
+    """The peer vanished (refused, closed mid-op, or timed out)."""
+
+
+class PoolTimeoutError(PoolConnectionError):
+    """One pipelined request exceeded its per-op timeout class. Rejects
+    only that request's future; the connection stays usable and a late
+    reply is dropped by its correlation id."""
+
+
+def _soft_wire_error(msg: str) -> WireError:
+    e = WireError(msg)
+    e.fatal = False
+    return e
+
+
+# ---------------------------------------------------------------------------
+# addressing
+# ---------------------------------------------------------------------------
+
+
+def parse_addr(addr: str):
+    """'unix:/path', 'tcp:host:port', or a bare filesystem path (unix)."""
+    if addr.startswith("unix:"):
+        return ("unix", addr[5:])
+    if addr.startswith("tcp:"):
+        host, _, port = addr[4:].rpartition(":")
+        if not host or not port.isdigit():
+            raise PoolError(f"bad tcp addr {addr!r} (want tcp:host:port)")
+        return ("tcp", (host, int(port)))
+    return ("unix", addr)
+
+
+def format_addr(kind: str, target) -> str:
+    if kind == "unix":
+        return f"unix:{target}"
+    return f"tcp:{target[0]}:{target[1]}"
+
+
+def wire_from_env(default: int = WIRE_V2) -> int:
+    """REPRO_POOL_WIRE={v1,v2} pins the protocol generation both for
+    clients and servers (the CI compatibility matrix cell)."""
+    import os
+    raw = os.environ.get("REPRO_POOL_WIRE", "").strip().lower()
+    if raw in ("v1", "1"):
+        return WIRE_V1
+    if raw in ("v2", "2"):
+        return WIRE_V2
+    return default
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+
+class BufferedSocket:
+    """Read-side buffer over a socket: one large ``recv`` feeds many small
+    frame reads. Under pipelining, back-to-back frames coalesce in the
+    kernel buffer, so this collapses the 2-syscalls-per-frame pattern of
+    header/body reads into ~1 syscall per burst. Exceptions (timeouts,
+    EOF, OSError) propagate from the underlying socket untouched, so
+    ``_recv_exact``'s idle/torn-frame semantics are preserved: a timeout
+    with buffered bytes pending still means a stranded partial frame."""
+
+    __slots__ = ("sock", "_buf")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self._buf = b""
+
+    def recv(self, n: int) -> bytes:
+        if self._buf:
+            out, self._buf = self._buf[:n], self._buf[n:]
+            return out
+        chunk = self.sock.recv(max(n, 1 << 16))
+        if len(chunk) <= n:
+            return chunk
+        self._buf = chunk[n:]
+        return chunk[:n]
+
+
+def _recv_exact(sock, n: int, *, at_boundary: bool = False,
+                idle_ok: bool = False):
+    """Read exactly n bytes. Returns None on clean EOF at a frame boundary
+    (only when at_boundary) and IDLE on a socket timeout with zero bytes
+    read (only when idle_ok — a quiet pipelined connection, not a dead
+    peer); raises WireError on EOF mid-frame and PoolConnectionError on
+    socket-level failure, including a timeout that strands a partial
+    frame."""
+    buf = bytearray()
+    while len(buf) < n:
+        try:
+            chunk = sock.recv(n - len(buf))
+        except socket.timeout as e:
+            if idle_ok and at_boundary and not buf:
+                return IDLE
+            raise PoolConnectionError("timed out waiting for peer") from e
+        except OSError as e:
+            raise PoolConnectionError(str(e)) from e
+        if not chunk:
+            if at_boundary and not buf:
+                return None
+            raise WireError(f"peer closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return bytes(buf)
+
+
+def pack_frame(hdr: dict, body: bytes = b"") -> bytes:
+    """Encode one frame to its on-wire bytes without sending it, so a
+    reply pump can cork several frames into a single sendall."""
+    hj = json.dumps(hdr).encode()
+    total = 4 + len(hj) + len(body)
+    if total > MAX_FRAME:
+        raise WireError(f"frame too large ({total} bytes)")
+    return _LEN.pack(total) + _LEN.pack(len(hj)) + hj + body
+
+
+def send_frame(sock: socket.socket, hdr: dict, body: bytes = b"") -> int:
+    """Send one frame; returns the bytes put on the wire (framing
+    included), the client channel's tx meter."""
+    wire = pack_frame(hdr, body)
+    try:
+        sock.sendall(wire)
+    except OSError as e:
+        raise PoolConnectionError(str(e)) from e
+    return len(wire)
+
+
+def recv_frame_sized(sock: socket.socket, *, idle_ok: bool = False):
+    """Like ``recv_frame`` but returns (hdr, body, wire_bytes)."""
+    head = _recv_exact(sock, 4, at_boundary=True, idle_ok=idle_ok)
+    if head is None:
+        return None
+    if head is IDLE:
+        return IDLE
+    (total,) = _LEN.unpack(head)
+    if total < 4 or total > MAX_FRAME:
+        # the length prefix itself is garbage: frame sync is gone for good
+        raise WireError(f"bad frame length {total}")
+    rest = _recv_exact(sock, total)
+    # from here on the full frame was consumed — parse failures are soft:
+    # the stream position is still exactly at the next frame boundary
+    (hlen,) = _LEN.unpack(rest[:4])
+    if hlen > total - 4:
+        raise _soft_wire_error(
+            f"header length {hlen} overruns frame ({total})")
+    try:
+        hdr = json.loads(rest[4:4 + hlen].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise _soft_wire_error(f"bad frame header: {e}") from e
+    if not isinstance(hdr, dict):
+        raise _soft_wire_error("frame header is not an object")
+    return hdr, rest[4 + hlen:], total + 4
+
+
+def recv_frame(sock: socket.socket, *, idle_ok: bool = False):
+    """Returns (hdr, body), None on clean EOF between frames, or IDLE on
+    an idle-timeout tick (idle_ok only)."""
+    got = recv_frame_sized(sock, idle_ok=idle_ok)
+    if got is None or got is IDLE:
+        return got
+    hdr, body, _ = got
+    return hdr, body
+
+
+# ---------------------------------------------------------------------------
+# error table — ONE registry mapping typed exceptions <-> wire frames
+# ---------------------------------------------------------------------------
+
+# kind -> (encode(exc) -> extra fields, decode(hdr) -> exception). Only
+# errors that carry fields beyond their message need an entry; every other
+# PoolError subclass round-trips by class name automatically (the subclass
+# walk below), so a new typed pool error is wire-transparent with zero
+# registration anywhere.
+_ERROR_CODECS: dict[str, tuple[Callable, Callable]] = {}
+
+
+def register_error(kind: str, encode: Callable, decode: Callable):
+    _ERROR_CODECS[kind] = (encode, decode)
+
+
+def _pool_error_types() -> dict[str, type]:
+    """Name -> class over the whole PoolError subclass tree (classes are
+    discovered wherever they are defined — device, compress, protocol —
+    the moment their module is imported)."""
+    out = {"PoolError": PoolError}
+    stack = [PoolError]
+    while stack:
+        cls = stack.pop()
+        for sub in cls.__subclasses__():
+            out.setdefault(sub.__name__, sub)
+            stack.append(sub)
+    return out
+
+
+def error_to_frame(exc: BaseException) -> dict:
+    kind = type(exc).__name__
+    codec = _ERROR_CODECS.get(kind)
+    if codec is not None:
+        out = {"ok": False, "kind": kind,
+               "error": str(exc) or kind}
+        out.update(codec[0](exc))
+        return out
+    if not isinstance(exc, PoolError):
+        kind = "PoolError"
+    return {"ok": False, "kind": kind,
+            "error": str(exc) or type(exc).__name__}
+
+
+def frame_to_error(hdr: dict) -> BaseException:
+    kind = hdr.get("kind", "PoolError")
+    codec = _ERROR_CODECS.get(kind)
+    if codec is not None:
+        return codec[1](hdr)
+    cls = _pool_error_types().get(kind, PoolError)
+    return cls(hdr.get("error", "remote error"))
+
+
+register_error(
+    "InjectedCrash",
+    lambda e: {"point": e.point, "occurrence": e.occurrence},
+    lambda h: InjectedCrash(h.get("point", "?"), h.get("occurrence", 0)))
+
+
+# ---------------------------------------------------------------------------
+# timeout classes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Timeouts:
+    """Per-op-class deadlines. ``control`` ops answer from directory
+    state; ``data`` ops touch media; ``bulk`` ops move whole region
+    images (region_export/import, blob_put, batch frames). ``keepalive``
+    is the idle-ping cadence of a v2 channel (0 disables)."""
+
+    control: float = 30.0
+    data: float = 120.0
+    bulk: float = 480.0
+    keepalive: float = 15.0
+
+    @classmethod
+    def resolve(cls, timeout=None) -> "Timeouts":
+        """None -> class defaults; a float rescales every class around it
+        (the ``make_pool(..., timeout=...)`` / ``pool_timeout`` knob); a
+        Timeouts instance passes through."""
+        if timeout is None:
+            return cls()
+        if isinstance(timeout, Timeouts):
+            return timeout
+        t = float(timeout)
+        return cls(control=min(t, 30.0), data=t, bulk=max(t, 4 * t),
+                   keepalive=min(15.0, max(0.5, t / 4)))
+
+    def for_hdr(self, hdr: dict) -> float:
+        op = hdr.get("op")
+        if op == "nmp":
+            spec = NMP_OPS.get(hdr.get("kind"))
+            klass = spec.timeout if spec is not None else "data"
+        else:
+            spec = OPS.get(op)
+            klass = spec.timeout if spec is not None else "data"
+        return getattr(self, klass)
+
+    def tick(self) -> float:
+        """Reader-thread wakeup period: fine enough to honor per-request
+        deadlines and the keepalive cadence."""
+        base = 1.0
+        if self.keepalive > 0:
+            base = min(base, self.keepalive / 3.0)
+        return max(0.05, min(base, self.control / 4.0))
+
+
+# ---------------------------------------------------------------------------
+# op registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    """One wire op: name, timeout class, and the permission bits the
+    server's dispatch enforces (readonly connections are denied
+    ``mutating`` ops; ``--no-control-ops`` servers deny ``control``
+    ones; ``tenant=False`` ops run before hello)."""
+
+    name: str
+    timeout: str = "data"        # control | data | bulk
+    mutating: bool = False       # denied outright on readonly connections
+    reopen_ok: bool = False      # alloc: idempotent reopen stays allowed
+    control: bool = False        # node-wide; gated by --no-control-ops
+    tenant: bool = True          # requires a hello'd tenant identity
+    doc: str = ""
+
+
+OPS: dict[str, OpSpec] = {s.name: s for s in (
+    OpSpec("hello", "control", tenant=False,
+           doc="tenant handshake + wire-version negotiation"),
+    OpSpec("ping", "control", tenant=False,
+           doc="keepalive no-op (idle connections are alive, not dead)"),
+    OpSpec("close", "control", tenant=False, doc="clean hang-up"),
+    OpSpec("read", "data", doc="raw bytes out of the cache"),
+    OpSpec("write", "data", mutating=True, doc="raw bytes into the cache"),
+    OpSpec("persist", "data", doc="flush/fence barrier (cannot corrupt)"),
+    OpSpec("ensure", "data", control=True, doc="grow the device"),
+    OpSpec("capacity", "control", doc="device capacity gauge"),
+    OpSpec("crash", "control", control=True, doc="node power-cycle drill"),
+    OpSpec("set-faults", "control", control=True,
+           doc="arm/clear the node's fault schedule"),
+    OpSpec("alloc", "data", mutating=True, reopen_ok=True,
+           doc="allocate (or idempotently reopen) a region"),
+    OpSpec("get", "control", doc="directory lookup of one region"),
+    OpSpec("regions", "control", doc="directory listing of one domain"),
+    OpSpec("domains", "control", doc="this tenant's domains on the node"),
+    OpSpec("free", "data", mutating=True, doc="free a whole domain"),
+    OpSpec("free-region", "data", mutating=True, doc="free one region"),
+    OpSpec("metrics", "control",
+           doc="tenant counters (scope=all is a control op)"),
+    OpSpec("nmp", "data", doc="near-memory op (see NMP_OPS per kind)"),
+    OpSpec("batch", "bulk",
+           doc="N sub-ops, one frame, one reply (scatter-gather)"),
+)}
+
+
+# -- near-memory op table ----------------------------------------------------
+# ``run`` executes the kind against an NmpQueue with canonical keyword
+# operands — the ONE dispatch table behind the server's nmp handler, the
+# sharded pool's local routing, and batch execution. Adding an nmp kind
+# means adding exactly one NmpSpec here.
+
+
+def _run_gather(q, region, *, idx=None, **_):
+    return q.gather(region, idx)
+
+
+def _run_bag_gather(q, region, *, idx=None, combine="sum", **_):
+    return q.bag_gather(region, idx, combine=combine)
+
+
+def _run_undo_snapshot(q, region, *, idx=None, **_):
+    return q.undo_snapshot(region, idx)
+
+
+def _run_slot_headers(q, region, *, nslots=0, slot_bytes=0, hdr_bytes=0,
+                      **_):
+    return q.slot_headers(region, int(nslots), int(slot_bytes),
+                          int(hdr_bytes))
+
+
+def _run_row_update(q, region, *, idx=None, rows=None, point=None, **_):
+    q.row_update(region, idx, rows, point=point)
+    return None
+
+
+def _run_scatter_add(q, region, *, idx=None, rows=None, point=None, **_):
+    q.scatter_add(region, idx, rows, point=point)
+    return None
+
+
+def _run_undo_log_append(q, region, *, idx=None, rows=None, point=None,
+                         log_region=None, step=0, slot_off=0, slot_bytes=0,
+                         compress="zlib", **_):
+    if log_region is None:
+        raise WireError("undo_log_append needs log_region")
+    return q.undo_log_append(
+        region, log_region, step=int(step), slot_off=int(slot_off),
+        slot_bytes=int(slot_bytes), idx=idx, new_rows=rows,
+        compress=compress, apply_point=point or "mirror-apply")
+
+
+def _run_slot_clear(q, region, *, slots=(), slot_bytes=0, point=None, **_):
+    return {"cleared": q.slot_clear(region, slots, int(slot_bytes),
+                                    point=point or "undo-gc")}
+
+
+def _run_region_export(q, region, *, compress="zlib", **_):
+    return q.region_export(region, compress=compress)
+
+
+def _run_region_import(q, region, *, blob=None, point=None, **_):
+    q.region_import(region, blob, point=point or "migrate-import")
+    return None
+
+
+def _run_blob_put(q, region, *, blob=None, compress="zlib", point=None,
+                  **_):
+    return {"stored": q.blob_put(region, blob, compress=compress,
+                                 point=point or "dense-blob")}
+
+
+@dataclass(frozen=True)
+class NmpSpec:
+    """One near-memory op kind: mutability (readonly gate), timeout
+    class, whether the trailing request body is an opaque blob, and the
+    executor used by every local dispatch path."""
+
+    kind: str
+    run: Callable
+    mutating: bool = False
+    timeout: str = "data"
+    blob: bool = False           # trailing body bytes -> blob operand
+    doc: str = ""
+
+
+NMP_OPS: dict[str, NmpSpec] = {s.kind: s for s in (
+    NmpSpec("gather", _run_gather, doc="rows[idx] -> host"),
+    NmpSpec("bag_gather", _run_bag_gather,
+            doc="pool-side bag reduction of rows[idx]"),
+    NmpSpec("undo_snapshot", _run_undo_snapshot,
+            doc="pre-update image -> host (round-trip capture path)"),
+    NmpSpec("slot_headers", _run_slot_headers,
+            doc="strided undo-ring header scan, one round trip"),
+    NmpSpec("row_update", _run_row_update, mutating=True,
+            doc="idempotent row apply"),
+    NmpSpec("scatter_add", _run_scatter_add, mutating=True,
+            doc="pool-side gradient accumulate"),
+    NmpSpec("undo_log_append", _run_undo_log_append, mutating=True,
+            doc="fused capture+log+COMMIT+apply inside the node"),
+    NmpSpec("slot_clear", _run_slot_clear, mutating=True,
+            doc="batched COMMIT-word clear (undo GC)"),
+    NmpSpec("region_export", _run_region_export, timeout="bulk",
+            doc="verbatim region image -> framed compressed blob"),
+    NmpSpec("region_import", _run_region_import, mutating=True,
+            timeout="bulk", blob=True,
+            doc="land an exported image verbatim (migration/replica)"),
+    NmpSpec("blob_put", _run_blob_put, mutating=True, timeout="bulk",
+            blob=True, doc="opaque blob through the compression engine"),
+)}
+
+
+# ---------------------------------------------------------------------------
+# batch frames (scatter-gather)
+# ---------------------------------------------------------------------------
+
+
+def pack_batch(items: list) -> tuple[dict, bytes]:
+    """[(sub_hdr, sub_body), ...] -> one ``batch`` frame."""
+    hdrs, lens, parts = [], [], []
+    for shdr, sbody in items:
+        hdrs.append(shdr)
+        lens.append(len(sbody))
+        parts.append(sbody)
+    return {"op": "batch", "ops": hdrs, "lens": lens}, b"".join(parts)
+
+
+def unpack_batch(hdr: dict, body: bytes) -> list:
+    ops, lens = hdr.get("ops"), hdr.get("lens")
+    if not isinstance(ops, list) or not isinstance(lens, list) \
+            or len(ops) != len(lens):
+        raise _soft_wire_error("malformed batch frame")
+    if sum(int(n) for n in lens) != len(body):
+        raise _soft_wire_error(
+            f"batch body {len(body)}B != declared {sum(lens)}B")
+    out, pos = [], 0
+    for shdr, n in zip(ops, lens):
+        if not isinstance(shdr, dict):
+            raise _soft_wire_error("batch sub-header is not an object")
+        out.append((shdr, body[pos:pos + int(n)]))
+        pos += int(n)
+    return out
+
+
+def pack_batch_results(results: list) -> tuple[dict, bytes]:
+    """[(sub_hdr, sub_body), ...] -> the batch reply frame (each sub_hdr
+    is a normal ok/error reply header)."""
+    hdrs, lens, parts = [], [], []
+    for rh, rbody in results:
+        hdrs.append(rh)
+        lens.append(len(rbody))
+        parts.append(rbody)
+    return {"results": hdrs, "lens": lens}, b"".join(parts)
+
+
+def unpack_batch_results(hdr: dict, body: bytes) -> list:
+    return unpack_batch({"op": "batch", "ops": hdr.get("results"),
+                         "lens": hdr.get("lens")}, body)
+
+
+# ---------------------------------------------------------------------------
+# client channel
+# ---------------------------------------------------------------------------
+
+
+class PoolFuture:
+    """One in-flight request. ``result()`` blocks for the reply and
+    re-raises the op's typed error; a timed-out or failed future never
+    poisons its channel."""
+
+    __slots__ = ("op", "rid", "t0", "deadline", "_chan", "_done", "_evt",
+                 "_value", "_error")
+
+    def __init__(self, op: str, rid: int, timeout: float, chan=None):
+        self.op = op
+        self.rid = rid
+        self._chan = chan
+        self.t0 = time.monotonic()
+        self.deadline = self.t0 + timeout
+        # the Event is lazy: deep pipelines complete most futures before
+        # anyone waits on them, and per-op Event construction + the
+        # already-set wait() lock round-trip were the top client-side
+        # costs in the depth-8 profile. Publication order (completer sets
+        # _done then reads _evt; waiter publishes _evt then re-checks
+        # _done) guarantees at least one side sees the other.
+        self._done = False
+        self._evt: Optional[threading.Event] = None
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done
+
+    def set_result(self, value):
+        self._value = value
+        self._done = True
+        evt = self._evt
+        if evt is not None:
+            evt.set()
+
+    def set_error(self, err: BaseException):
+        self._error = err
+        self._done = True
+        evt = self._evt
+        if evt is not None:
+            evt.set()
+
+    def result(self, timeout: Optional[float] = None):
+        """(hdr, body) of the reply, or the op's typed exception."""
+        if not self._done:
+            # about to block: push any corked request frames (ours
+            # included) onto the wire first
+            if self._chan is not None:
+                self._chan.flush()
+            evt = self._evt
+            if evt is None:
+                evt = self._evt = threading.Event()
+            wait = timeout if timeout is not None \
+                else max(0.1, self.deadline - time.monotonic() + 5.0)
+            if not self._done and not evt.wait(wait):
+                raise PoolTimeoutError(
+                    f"op {self.op!r} got no reply within {wait:.1f}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class CompletedFuture:
+    """PoolFuture-compatible wrapper for ops resolved synchronously
+    (v1 strict mode, local devices)."""
+
+    __slots__ = ("_value",)
+
+    def __init__(self, value):
+        self._value = value
+
+    @staticmethod
+    def done() -> bool:
+        return True
+
+    def result(self, timeout: Optional[float] = None):
+        return self._value
+
+
+class MappedFuture:
+    """Applies a decode step to a future's (hdr, body) when awaited —
+    how RemotePool's async ops return typed results, not raw frames."""
+
+    __slots__ = ("_fut", "_fn")
+
+    def __init__(self, fut, fn: Callable):
+        self._fut = fut
+        self._fn = fn
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def result(self, timeout: Optional[float] = None):
+        return self._fn(self._fut.result(timeout))
+
+
+class PoolChannel:
+    """One socket, many in-flight ops.
+
+    Before negotiation (and on v1 peers) the channel runs the strict v1
+    exchange: one op at a time under a lock, fence-on-desync after any
+    transport failure. ``activate(WIRE_V2)`` starts the reader thread:
+    from then on ``submit`` tags each request with a fresh ``rid``,
+    returns a future, and the reader matches replies by tag — failures,
+    timeouts and typed errors reject single futures while the stream
+    keeps flowing. The reader doubles as the keepalive timer (idle
+    ``ping`` frames) and the per-request deadline enforcer.
+    """
+
+    LAT_WINDOW = 8192          # per-op latency samples kept (histograms)
+    FLUSH_BYTES = 1 << 16      # corked-send watermark (see submit/flush)
+
+    def __init__(self, sock: socket.socket, addr: str,
+                 timeouts: Optional[Timeouts] = None):
+        self.sock = sock
+        self._rsock = BufferedSocket(sock)   # all frame reads go through it
+        self.addr = addr
+        self.timeouts = timeouts or Timeouts()
+        self.wire = WIRE_V1
+        self.closed = False
+        self.tx_bytes = 0
+        self.rx_bytes = 0
+        self.pings = 0
+        self.timeouts_fired = 0
+        self.late_drops = 0
+        self._send_lock = threading.Lock()
+        self._out_buf: list[bytes] = []   # corked request frames
+        self._out_bytes = 0
+        self._strict_lock = threading.RLock()
+        self._pending_lock = threading.Lock()
+        self._pending: dict[int, PoolFuture] = {}
+        self._next_rid = 1
+        self._last_send = time.monotonic()
+        self._close_cause: Optional[str] = None
+        self._reader: Optional[threading.Thread] = None
+        self._op_count: dict[str, int] = {}
+        self._op_lat: dict[str, deque] = {}
+
+    # -- lifecycle -----------------------------------------------------------
+    def activate(self, wire: int):
+        """Called once hello negotiation settled the protocol version."""
+        self.wire = int(wire)
+        if self.wire >= WIRE_V2 and self._reader is None:
+            self.sock.settimeout(self.timeouts.tick())
+            self._reader = threading.Thread(target=self._read_loop,
+                                            daemon=True)
+            self._reader.start()
+
+    def close(self, cause: Optional[str] = None):
+        """``cause`` marks a transport death (vs a deliberate user close):
+        later ops on the channel then re-raise it as a connection error
+        instead of a generic "device closed"."""
+        if self.closed:
+            return
+        self.closed = True
+        self._close_cause = cause
+        self._fail_pending(PoolError("device closed"))
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+    def _closed_error(self) -> PoolError:
+        if self._close_cause is not None:
+            return PoolConnectionError(self._close_cause)
+        return PoolError("device closed")
+
+    # -- strict exchange (hello / auth / v1 peers) ---------------------------
+    def exchange(self, hdr: dict, body: bytes = b""):
+        """One synchronous request/response round trip. On a v1 channel
+        this is THE request path and any transport failure fences the
+        connection (no correlation ids: a late reply could alias the
+        next request's response)."""
+        with self._strict_lock:
+            if self.closed:
+                raise self._closed_error()
+            self.flush()             # corked frames precede strict ops
+            try:
+                if self._reader is None:
+                    # per-op timeout class even on the strict path
+                    self.sock.settimeout(self.timeouts.for_hdr(hdr))
+                self.tx_bytes += send_frame(self.sock, hdr, body)
+                got = recv_frame_sized(self._rsock)
+            except OSError as e:
+                # e.g. settimeout on a partitioned/severed socket — map
+                # to the typed connection error like every other
+                # transport failure on the strict path
+                err = PoolConnectionError(str(e))
+                self.close(f"pool server at {self.addr}: {err}")
+                raise err from e
+            except PoolError as e:
+                self.close(f"pool server at {self.addr}: {e}")
+                raise
+            if got is None:
+                msg = (f"pool server at {self.addr} closed the connection "
+                       f"(server restart mid-op?)")
+                self.close(msg)
+                raise PoolConnectionError(msg)
+            rh, rbody, n = got
+            self.rx_bytes += n
+        self._record(hdr.get("op", "?"), time.monotonic())
+        if not rh.get("ok"):
+            raise frame_to_error(rh)
+        return rh, rbody
+
+    # -- pipelined path ------------------------------------------------------
+    def submit(self, hdr: dict, body: bytes = b"",
+               timeout: Optional[float] = None) -> PoolFuture:
+        """Fire one request; returns its future. On a v1 channel the op
+        completes synchronously (depth-1 pipelining, same API)."""
+        if self.wire < WIRE_V2:
+            return CompletedFuture(self.exchange(hdr, body))
+        if self.closed:
+            raise self._closed_error()
+        t = timeout if timeout is not None else self.timeouts.for_hdr(hdr)
+        with self._pending_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            fut = PoolFuture(hdr.get("op", "?"), rid, t, self)
+            self._pending[rid] = fut
+        try:
+            wire = pack_frame({**hdr, "rid": rid}, body)
+        except PoolError:
+            with self._pending_lock:
+                self._pending.pop(rid, None)
+            raise
+        # cork, don't send: frames accumulate while the caller is ahead of
+        # the replies and go out as ONE sendall when a future blocks in
+        # result() (or at the flush watermark / the reader's idle tick).
+        # Deep pipelines thus pay ~1 syscall + context switch per burst.
+        with self._send_lock:
+            self._out_buf.append(wire)
+            self._out_bytes += len(wire)
+            self.tx_bytes += len(wire)
+            flush_now = self._out_bytes >= self.FLUSH_BYTES
+        if flush_now:
+            self.flush()
+        return fut
+
+    def flush(self):
+        """Put every corked request frame on the wire in one sendall.
+        Called by blocking futures, the flush watermark, the keepalive
+        path, and the reader's idle tick — so a corked frame is never
+        delayed past one tick. A send failure here mid-stream corrupts
+        the outbound framing, the one client-side failure that still
+        kills the whole connection; the error surfaces through the
+        rejected futures rather than from flush() itself."""
+        with self._send_lock:
+            if not self._out_buf:
+                return
+            data = b"".join(self._out_buf)
+            self._out_buf.clear()
+            self._out_bytes = 0
+            try:
+                self.sock.sendall(data)
+                self._last_send = time.monotonic()
+                return
+            except OSError as e:
+                err = e
+        msg = f"pool server at {self.addr}: {err}"
+        self._fail_pending(PoolConnectionError(msg))
+        self.close(msg)
+
+    def request(self, hdr: dict, body: bytes = b"",
+                timeout: Optional[float] = None):
+        return self.submit(hdr, body, timeout=timeout).result()
+
+    def request_batch(self, items: list, timeout: Optional[float] = None):
+        """Ship [(hdr, body), ...] as ONE scatter-gather frame; returns
+        the per-sub-op list of (hdr, body) | typed exception, in order."""
+        hdr, body = pack_batch(items)
+        rh, rbody = self.request(hdr, body, timeout=timeout)
+        out = []
+        for shdr, sbody in unpack_batch_results(rh, rbody):
+            out.append((shdr, sbody) if shdr.get("ok")
+                       else frame_to_error(shdr))
+        return out
+
+    # -- reader thread -------------------------------------------------------
+    def _read_loop(self):
+        while not self.closed:
+            try:
+                got = recv_frame_sized(self._rsock, idle_ok=True)
+            except (PoolError, OSError) as e:
+                if not self.closed:
+                    msg = f"pool server at {self.addr}: {e}"
+                    self._fail_pending(PoolConnectionError(msg))
+                    self.close(msg)
+                return
+            if got is IDLE:
+                self.flush()         # bound corking delay to one tick
+                self._expire_overdue()
+                self._maybe_keepalive()
+                continue
+            if got is None:
+                msg = (f"pool server at {self.addr} closed the connection "
+                       f"(server restart mid-op?)")
+                self._fail_pending(PoolConnectionError(msg))
+                self.close(msg)
+                return
+            rh, rbody, n = got
+            self.rx_bytes += n
+            with self._pending_lock:
+                fut = self._pending.pop(rh.get("rid"), None)
+            if fut is None:
+                self.late_drops += 1     # expired/abandoned rid: drop
+                continue
+            self._record(fut.op, fut.t0)
+            if rh.get("ok"):
+                fut.set_result((rh, rbody))
+            else:
+                fut.set_error(frame_to_error(rh))
+
+    def _expire_overdue(self):
+        now = time.monotonic()
+        with self._pending_lock:
+            dead = [rid for rid, f in self._pending.items()
+                    if now > f.deadline]
+            futs = [self._pending.pop(rid) for rid in dead]
+        for f in futs:
+            self.timeouts_fired += 1
+            f.set_error(PoolTimeoutError(
+                f"op {f.op!r} timed out after "
+                f"{now - f.t0:.1f}s (class deadline); connection stays up"))
+
+    def _maybe_keepalive(self):
+        ka = self.timeouts.keepalive
+        if ka <= 0:
+            return
+        with self._pending_lock:
+            busy = bool(self._pending)
+        if busy or time.monotonic() - self._last_send < ka:
+            return
+        try:
+            self.submit({"op": "ping"})
+            self.flush()
+            self.pings += 1
+        except PoolError:
+            pass                         # reader will notice the close
+
+    def _fail_pending(self, err: BaseException):
+        with self._pending_lock:
+            futs, self._pending = list(self._pending.values()), {}
+        for f in futs:
+            f.set_error(err)
+
+    # -- observability -------------------------------------------------------
+    def _record(self, op: str, t0: float):
+        dt = time.monotonic() - t0
+        self._op_count[op] = self._op_count.get(op, 0) + 1
+        lat = self._op_lat.get(op)
+        if lat is None:
+            lat = self._op_lat[op] = deque(maxlen=self.LAT_WINDOW)
+        lat.append(dt)
+
+    def latency_stats(self) -> dict:
+        """Per-op latency percentiles (seconds) over the sample window —
+        the bench's per-op histogram source."""
+        out = {}
+        for op, lat in self._op_lat.items():
+            xs = sorted(lat)
+            if not xs:
+                continue
+            n = len(xs)
+            out[op] = {
+                "count": self._op_count.get(op, n),
+                "p50_s": xs[n // 2],
+                "p95_s": xs[min(n - 1, int(n * 0.95))],
+                "p99_s": xs[min(n - 1, int(n * 0.99))],
+                "max_s": xs[-1],
+                "samples": n,
+            }
+        return out
+
+    def stats(self) -> dict:
+        return {"wire": self.wire, "tx_bytes": self.tx_bytes,
+                "rx_bytes": self.rx_bytes, "pings": self.pings,
+                "timeouts": self.timeouts_fired,
+                "late_drops": self.late_drops}

@@ -7,60 +7,52 @@ several trainer processes share one memory node, and the node — with every
 persisted byte — survives any trainer's death (``kill -9`` included), while a
 trainer survives a pool power-cycle via the normal recovery path.
 
-Wire format (both directions), little-endian:
+The wire format, the op table, the error mapping, and the per-op timeout
+classes are all defined in ``repro.pool.protocol`` (the single registry
+shared with the server and the sharded router) — see its module docstring
+for the full protocol reference. This module only adds the PoolDevice-shaped
+client on top:
 
-    u32 total | u32 hdr_len | hdr (UTF-8 JSON) | body (raw bytes)
-
-``total`` counts everything after itself. Requests carry ``{"op": ...}``
-plus op-specific fields; bulk payloads (write data, nmp operands, read
-results) ride in ``body`` so arrays never pass through JSON. Responses carry
-``{"ok": true, ...}`` or ``{"ok": false, "kind": <error class>, ...}`` —
-the client re-raises the matching typed exception (``QuotaExceededError``,
-``TenantIsolationError``, ``WireError``, ``PoolConnectionError``,
-``InjectedCrash``), so protocol-level nastiness surfaces as exceptions, never
-as hangs or silent corruption.
+  * every connection negotiates a wire version at ``hello``; against a v2
+    server the connection runs pipelined (many in-flight tagged requests,
+    shared safely by any number of threads — the checkpoint writer thread,
+    a serving tier and a ``CommitTailer`` can multiplex one socket);
+  * ``read_async``/``write_async``/``nmp_batch``/``read_batch`` expose the
+    pipelined/scatter-gather forms; the plain blocking methods are
+    depth-1 uses of the same machinery;
+  * a failed op (typed pool error, per-op timeout, torn frame body)
+    rejects only itself — the connection is NOT fenced and later ops
+    proceed; only broken framing still closes the socket.
 
 Every connection must ``hello`` first, naming its tenant (and optionally a
 byte quota). All subsequent ops are executed under that tenant's namespace,
 quota, and metrics; raw-offset ops are validated against the tenant's owned
 byte ranges server-side.
-
-Ops: hello, read, write, persist, ensure, crash, alloc, get, regions, free,
-free-region, nmp, metrics, set-faults, capacity, close. The ``nmp`` op
-family includes the fused ``undo_log_append`` (server-side undo capture —
-old row images never cross the link), ``blob_put`` (pool-side compression of
-dense snapshot blobs) and ``slot_headers`` (one-round-trip undo-ring scan).
 """
 from __future__ import annotations
 
 import dataclasses
 import hmac
-import json
 import os
 import socket
-import struct
-import threading
 from typing import Optional
 
 import numpy as np
 
-from repro.pool.compress import BlobCorruptError as _BlobCorruptError
-from repro.pool.device import (PoolDevice, PoolError, QuotaExceededError,
-                               TenantIsolationError)
-from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
+from repro.pool.device import PoolDevice, PoolError
+from repro.pool.faults import FaultSchedule
 from repro.pool.metrics import PoolMetrics
+# the protocol module is the registry of record; these re-exports keep the
+# historical import surface (tests, tools) working unchanged
+from repro.pool.protocol import (  # noqa: F401  (re-exported)
+    MAX_FRAME, NMP_OPS, OPS, WIRE_V1, WIRE_V2, MappedFuture, PoolChannel,
+    PoolConnectionError, PoolTimeoutError, Timeouts, WireError, _recv_exact,
+    error_to_frame, format_addr, frame_to_error, parse_addr, recv_frame,
+    register_error, send_frame, wire_from_env)
 
-MAX_FRAME = 1 << 30          # anything larger is garbage, not a request
-_LEN = struct.Struct("<I")
-DEFAULT_TIMEOUT = 120.0
-
-
-class WireError(PoolError):
-    """Malformed, truncated, or oversized protocol frame."""
-
-
-class PoolConnectionError(PoolError):
-    """The peer vanished (refused, closed mid-op, or timed out)."""
+# historical alias — the flat timeout is gone; ops now carry per-class
+# deadlines (protocol.Timeouts). This is only the default "data" deadline.
+DEFAULT_TIMEOUT = Timeouts().data
 
 
 class PoolAuthError(PoolError):
@@ -75,6 +67,13 @@ class PoolAuthError(PoolError):
         self.challenge = challenge
 
 
+register_error(
+    "PoolAuthError",
+    lambda e: {"challenge": e.challenge} if e.challenge else {},
+    lambda h: PoolAuthError(h.get("error", "pool auth failed"),
+                            challenge=h.get("challenge", "")))
+
+
 def auth_proof(secret: str, challenge: str, tenant: str) -> str:
     """The handshake proof: HMAC-SHA256 over the server nonce and the
     tenant name, so a captured proof neither replays on a later connection
@@ -83,118 +82,50 @@ def auth_proof(secret: str, challenge: str, tenant: str) -> str:
                     f"{challenge}:{tenant}".encode(), "sha256").hexdigest()
 
 
-# ---------------------------------------------------------------------------
-# framing (shared by client and server)
-# ---------------------------------------------------------------------------
-
-
-def parse_addr(addr: str):
-    """'unix:/path', 'tcp:host:port', or a bare filesystem path (unix)."""
-    if addr.startswith("unix:"):
-        return ("unix", addr[5:])
-    if addr.startswith("tcp:"):
-        host, _, port = addr[4:].rpartition(":")
-        if not host or not port.isdigit():
-            raise PoolError(f"bad tcp addr {addr!r} (want tcp:host:port)")
-        return ("tcp", (host, int(port)))
-    return ("unix", addr)
-
-
-def format_addr(kind: str, target) -> str:
-    if kind == "unix":
-        return f"unix:{target}"
-    return f"tcp:{target[0]}:{target[1]}"
-
-
-def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool = False):
-    """Read exactly n bytes. Returns None on clean EOF at a frame boundary
-    (only when at_boundary); raises WireError on EOF mid-frame and
-    PoolConnectionError on socket-level failure."""
-    buf = bytearray()
-    while len(buf) < n:
-        try:
-            chunk = sock.recv(n - len(buf))
-        except socket.timeout as e:
-            raise PoolConnectionError("timed out waiting for peer") from e
-        except OSError as e:
-            raise PoolConnectionError(str(e)) from e
-        if not chunk:
-            if at_boundary and not buf:
-                return None
-            raise WireError(f"peer closed mid-frame ({len(buf)}/{n} bytes)")
-        buf += chunk
-    return bytes(buf)
-
-
-def send_frame(sock: socket.socket, hdr: dict, body: bytes = b""):
-    hj = json.dumps(hdr).encode()
-    total = 4 + len(hj) + len(body)
-    if total > MAX_FRAME:
-        raise WireError(f"frame too large ({total} bytes)")
-    try:
-        sock.sendall(_LEN.pack(total) + _LEN.pack(len(hj)) + hj + body)
-    except OSError as e:
-        raise PoolConnectionError(str(e)) from e
-
-
-def recv_frame(sock: socket.socket):
-    """Returns (hdr, body), or None on clean EOF between frames."""
-    head = _recv_exact(sock, 4, at_boundary=True)
-    if head is None:
-        return None
-    (total,) = _LEN.unpack(head)
-    if total < 4 or total > MAX_FRAME:
-        raise WireError(f"bad frame length {total}")
-    rest = _recv_exact(sock, total)
-    (hlen,) = _LEN.unpack(rest[:4])
-    if hlen > total - 4:
-        raise WireError(f"header length {hlen} overruns frame ({total})")
-    try:
-        hdr = json.loads(rest[4:4 + hlen].decode())
-    except (UnicodeDecodeError, json.JSONDecodeError) as e:
-        raise WireError(f"bad frame header: {e}") from e
-    if not isinstance(hdr, dict):
-        raise WireError("frame header is not an object")
-    return hdr, rest[4 + hlen:]
-
-
-_ERROR_TYPES = {
-    "PoolError": PoolError,
-    "BlobCorruptError": _BlobCorruptError,
-    "WireError": WireError,
-    "PoolConnectionError": PoolConnectionError,
-    "PoolAuthError": PoolAuthError,
-    "QuotaExceededError": QuotaExceededError,
-    "TenantIsolationError": TenantIsolationError,
-}
-
-
-def error_to_frame(exc: BaseException) -> dict:
-    if isinstance(exc, InjectedCrash):
-        return {"ok": False, "kind": "InjectedCrash", "error": str(exc),
-                "point": exc.point, "occurrence": exc.occurrence}
-    kind = type(exc).__name__ if isinstance(exc, PoolError) else "PoolError"
-    out = {"ok": False, "kind": kind,
-           "error": str(exc) or type(exc).__name__}
-    if isinstance(exc, PoolAuthError) and exc.challenge:
-        out["challenge"] = exc.challenge
-    return out
-
-
-def frame_to_error(hdr: dict) -> BaseException:
-    kind = hdr.get("kind", "PoolError")
-    if kind == "InjectedCrash":
-        return InjectedCrash(hdr.get("point", "?"), hdr.get("occurrence", 0))
-    if kind == "PoolAuthError":
-        return PoolAuthError(hdr.get("error", "pool auth failed"),
-                             challenge=hdr.get("challenge", ""))
-    return _ERROR_TYPES.get(kind, PoolError)(hdr.get("error", "remote error"))
-
-
 def _as_bytes(data) -> bytes:
     if isinstance(data, (bytes, bytearray, memoryview)):
         return bytes(data)
     return np.ascontiguousarray(data).tobytes()
+
+
+def _region_hdr(region) -> dict:
+    return {"off": region.off, "nbytes": region.nbytes,
+            "dtype": region.dtype, "shape": list(region.shape)}
+
+
+def encode_nmp(kind: str, region, idx=None, rows=None, blob=None,
+               combine: str = "sum", point: Optional[str] = None,
+               log_region=None, **extra):
+    """One nmp call -> (hdr, body) — the wire form shared by the single-op
+    path and scatter-gather batch frames."""
+    hdr = {"op": "nmp", "kind": kind, "combine": combine, "point": point,
+           "region": _region_hdr(region)}
+    body = b""
+    if idx is not None:
+        idx = np.ascontiguousarray(np.asarray(idx), dtype=np.int64)
+        hdr["idx_shape"] = list(idx.shape)
+        body += idx.tobytes()
+    if rows is not None:
+        rows = np.ascontiguousarray(rows)
+        hdr["rows_dtype"] = str(rows.dtype)
+        hdr["rows_shape"] = list(rows.shape)
+        body += rows.tobytes()
+    if blob is not None:
+        body += _as_bytes(blob)
+    if log_region is not None:
+        hdr["log_region"] = _region_hdr(log_region)
+    hdr.update(extra)
+    return hdr, body
+
+
+def decode_nmp(rh: dict, rbody: bytes):
+    """Reply frame -> stats dict | result array | None."""
+    if "stats" in rh:
+        return rh["stats"]
+    if rh.get("shape") is None:
+        return None
+    return np.frombuffer(rbody, dtype=rh["dtype"]) \
+        .reshape(rh["shape"]).copy()
 
 
 # ---------------------------------------------------------------------------
@@ -210,77 +141,93 @@ class RemotePool(PoolDevice):
     instead), ``mark_dirty`` is a no-op (the server tracks dirt on write),
     and ``metrics`` is a freshly-fetched snapshot of this tenant's
     server-side counters.
+
+    ``timeout`` accepts a float (rescales every timeout class around it —
+    the historical knob) or a ``protocol.Timeouts``; ``wire`` pins the
+    maximum protocol generation to offer (default: v2, or
+    ``REPRO_POOL_WIRE``).
     """
 
     backend = "remote"
     remote = True
 
     def __init__(self, addr: str, tenant: str = "default", quota: int = 0,
-                 timeout: float = DEFAULT_TIMEOUT,
-                 secret: Optional[str] = None, readonly: bool = False):
+                 timeout=None, secret: Optional[str] = None,
+                 readonly: bool = False, wire: Optional[int] = None):
         self.addr = addr
         self.tenant = tenant
         self.readonly = bool(readonly)
-        self.closed = False
         self._faults: Optional[FaultSchedule] = None
-        self._lock = threading.Lock()
+        self._timeouts = Timeouts.resolve(timeout)
         # the shared secret never lands in POOL.json — reconnects (recovery,
         # shard re-dials) pick it up from the environment again
         self._secret = secret or os.environ.get("REPRO_POOL_SECRET", "")
+        wire_max = int(wire) if wire is not None else wire_from_env()
         kind, target = parse_addr(addr)
         try:
             if kind == "unix":
-                self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
             else:
-                self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-            self._sock.settimeout(timeout)
-            self._sock.connect(target)
+                sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            sock.settimeout(self._timeouts.data)
+            sock.connect(target)
         except OSError as e:
             raise PoolConnectionError(
                 f"cannot reach pool server at {addr}: {e}") from e
-        hello = {"op": "hello", "tenant": tenant, "quota": int(quota)}
+        self._sock = sock
+        self._chan = PoolChannel(sock, addr, self._timeouts)
+        hello = {"op": "hello", "tenant": tenant, "quota": int(quota),
+                 "wire": wire_max}
         if self.readonly:
             # a serving connection: the server denies every mutating op on
             # this connection with a typed TenantIsolationError
             hello["readonly"] = True
         try:
-            hdr, _ = self._request(hello)
+            hdr, _ = self._chan.exchange(hello)
         except PoolAuthError as e:
             # challenge round: answer the nonce with the shared-secret HMAC
             if not e.challenge or not self._secret:
                 raise
-            hdr, _ = self._request({
+            hdr, _ = self._chan.exchange({
                 **hello, "challenge": e.challenge,
                 "auth": auth_proof(self._secret, e.challenge, tenant)})
         self._capacity = int(hdr["capacity"])
         self.device_name = hdr.get("device", "remote")
+        self.wire = int(hdr.get("wire", WIRE_V1))
+        self._chan.activate(self.wire)
 
     # -- plumbing ------------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._chan.closed
+
+    @closed.setter
+    def closed(self, value: bool):
+        if value:                      # tests sever the link this way
+            self._chan.close()
+
     def _request(self, hdr: dict, body: bytes = b""):
-        with self._lock:
-            if self.closed:
-                raise PoolError("device closed")
-            try:
-                send_frame(self._sock, hdr, body)
-                resp = recv_frame(self._sock)
-            except PoolError:
-                # transport failure mid-exchange: the stream position is
-                # unknown (a late reply could alias the next request's
-                # response — there are no correlation ids), so the
-                # connection is dead from here on
-                self.closed = True
-                self._sock.close()
-                raise
-            if resp is None:
-                self.closed = True
-                self._sock.close()
-                raise PoolConnectionError(
-                    f"pool server at {self.addr} closed the connection "
-                    f"(server restart mid-op?)")
-        rh, rbody = resp
-        if not rh.get("ok"):
-            raise frame_to_error(rh)
-        return rh, rbody
+        """One op, one result — every blocking method funnels through here
+        (tests count round trips by intercepting this seam)."""
+        return self._chan.request(hdr, body)
+
+    def _request_batch(self, items: list, raise_errors: bool = True) -> list:
+        """[(hdr, body), ...] -> per-sub-op [(hdr, body) | exception] via
+        ONE scatter-gather frame (a single round trip on the wire and a
+        single call through the ``_request`` seam)."""
+        from repro.pool.protocol import pack_batch, unpack_batch_results
+        hdr, body = pack_batch(items)
+        rh, rbody = self._request(hdr, body)
+        out = []
+        for shdr, sbody in unpack_batch_results(rh, rbody):
+            if shdr.get("ok"):
+                out.append((shdr, sbody))
+                continue
+            err = frame_to_error(shdr)
+            if raise_errors:
+                raise err
+            out.append(err)
+        return out
 
     # -- PoolDevice surface ----------------------------------------------------
     @property
@@ -296,6 +243,24 @@ class RemotePool(PoolDevice):
                                  "nbytes": int(nbytes), "tag": tag})
         return np.frombuffer(body, dtype=np.uint8)   # read-only by nature
 
+    def read_async(self, off: int, nbytes: int, tag: str = "read"):
+        """Pipelined read: returns a future whose ``result()`` is the row
+        bytes. Any number may be in flight on one connection (v2); against
+        a v1 server this degrades to a completed depth-1 op."""
+        fut = self._chan.submit({"op": "read", "off": int(off),
+                                 "nbytes": int(nbytes), "tag": tag})
+        return MappedFuture(fut, lambda r: np.frombuffer(r[1],
+                                                         dtype=np.uint8))
+
+    def read_batch(self, reqs, tag: str = "read") -> list:
+        """[(off, nbytes), ...] -> [bytes, ...] in ONE scatter-gather
+        frame: one link round trip for N region reads."""
+        if not reqs:
+            return []
+        items = [({"op": "read", "off": int(o), "nbytes": int(n),
+                   "tag": tag}, b"") for o, n in reqs]
+        return [bytes(sb) for _, sb in self._request_batch(items)]
+
     def view(self, off: int, nbytes: int) -> np.ndarray:
         # a writable LOCAL copy: mutations do not reach the server (remote
         # mutation goes through write()/nmp ops); all in-repo view users are
@@ -307,6 +272,11 @@ class RemotePool(PoolDevice):
     def write(self, off: int, data, tag: str = "write"):
         self._request({"op": "write", "off": int(off), "tag": tag},
                       _as_bytes(data))
+
+    def write_async(self, off: int, data, tag: str = "write"):
+        fut = self._chan.submit({"op": "write", "off": int(off),
+                                 "tag": tag}, _as_bytes(data))
+        return MappedFuture(fut, lambda r: None)
 
     def mark_dirty(self, off: int, nbytes: int):
         pass                       # the server marks dirt on its own writes
@@ -321,15 +291,18 @@ class RemotePool(PoolDevice):
         durable media reloaded) — the memory-node power-loss drill."""
         self._request({"op": "crash"})
 
+    def ping(self):
+        """Round-trip no-op (liveness probe; also what the channel sends
+        on its own when idle)."""
+        self._request({"op": "ping"})
+
     def close(self):
-        with self._lock:               # never yank the socket mid-request
-            if not self.closed:
-                try:
-                    send_frame(self._sock, {"op": "close"})
-                except PoolError:
-                    pass
-                self.closed = True
-                self._sock.close()
+        if not self._chan.closed:
+            try:
+                send_frame(self._sock, {"op": "close"})
+            except PoolError:
+                pass
+            self._chan.close()
 
     # -- faults (server-side schedule, set over the wire) ---------------------
     @property
@@ -357,6 +330,16 @@ class RemotePool(PoolDevice):
     def reset_metrics(self):
         self._request({"op": "metrics", "reset": True})
 
+    def latency_stats(self) -> dict:
+        """Client-observed per-op latency percentiles (the bench's
+        histogram source)."""
+        return self._chan.latency_stats()
+
+    def wire_stats(self) -> dict:
+        """Channel counters: negotiated version, tx/rx bytes, keepalive
+        pings, per-request timeouts, late-reply drops."""
+        return self._chan.stats()
+
     # -- allocator proxy (PoolAllocator routes through these) ------------------
     def alloc_region(self, domain: str, name: str, shape, dtype: str,
                      point: str = "superblock") -> dict:
@@ -365,6 +348,21 @@ class RemotePool(PoolDevice):
                                "dtype": dtype, "point": point})
         self._capacity = int(rh.get("capacity", self._capacity))
         return rh["region"]
+
+    def alloc_regions(self, domain: str, specs, point: str = "superblock") \
+            -> list:
+        """[(name, shape, dtype), ...] -> region entries, allocated in ONE
+        batch frame (the migration/replica copy path's alloc burst)."""
+        if not specs:
+            return []
+        items = [({"op": "alloc", "domain": domain, "name": name,
+                   "shape": [int(s) for s in shape], "dtype": dtype,
+                   "point": point}, b"") for name, shape, dtype in specs]
+        ents = []
+        for rh, _ in self._request_batch(items):
+            self._capacity = int(rh.get("capacity", self._capacity))
+            ents.append(rh["region"])
+        return ents
 
     def get_region(self, domain: str, name: str) -> Optional[dict]:
         rh, _ = self._request({"op": "get", "domain": domain, "name": name})
@@ -393,11 +391,6 @@ class RemotePool(PoolDevice):
         return bool(rh["freed"])
 
     # -- near-memory ops --------------------------------------------------------
-    @staticmethod
-    def _region_hdr(region) -> dict:
-        return {"off": region.off, "nbytes": region.nbytes,
-                "dtype": region.dtype, "shape": list(region.shape)}
-
     def nmp(self, kind: str, region, idx=None, rows=None, blob=None,
             combine: str = "sum", point: Optional[str] = None,
             log_region=None, **extra):
@@ -406,27 +399,18 @@ class RemotePool(PoolDevice):
         (undo_log_append / blob_put), or None (row_update / scatter_add).
         ``log_region`` names a second owned region (the undo-log ring) for
         the fused capture op; scalar op parameters ride in ``extra``."""
-        hdr = {"op": "nmp", "kind": kind, "combine": combine, "point": point,
-               "region": self._region_hdr(region)}
-        body = b""
-        if idx is not None:
-            idx = np.ascontiguousarray(np.asarray(idx), dtype=np.int64)
-            hdr["idx_shape"] = list(idx.shape)
-            body += idx.tobytes()
-        if rows is not None:
-            rows = np.ascontiguousarray(rows)
-            hdr["rows_dtype"] = str(rows.dtype)
-            hdr["rows_shape"] = list(rows.shape)
-            body += rows.tobytes()
-        if blob is not None:
-            body += _as_bytes(blob)
-        if log_region is not None:
-            hdr["log_region"] = self._region_hdr(log_region)
-        hdr.update(extra)
+        hdr, body = encode_nmp(kind, region, idx=idx, rows=rows, blob=blob,
+                               combine=combine, point=point,
+                               log_region=log_region, **extra)
         rh, rbody = self._request(hdr, body)
-        if "stats" in rh:
-            return rh["stats"]
-        if rh.get("shape") is None:
-            return None
-        return np.frombuffer(rbody, dtype=rh["dtype"]) \
-            .reshape(rh["shape"]).copy()
+        return decode_nmp(rh, rbody)
+
+    def nmp_batch(self, calls) -> list:
+        """[(kind, region, kwargs), ...] near-memory ops in ONE
+        scatter-gather frame — a whole replica refresh or migration copy
+        costs one link round trip instead of one per region."""
+        if not calls:
+            return []
+        items = [encode_nmp(kind, region, **kw) for kind, region, kw in calls]
+        return [decode_nmp(rh, rb)
+                for rh, rb in self._request_batch(items)]

@@ -2,8 +2,13 @@
 
 Owns ONE real backing device (``DramPool`` or ``PmemPool``) plus its
 allocator directory and near-memory logic, and serves the wire protocol from
-``repro.pool.remote`` to any number of trainer processes over a Unix or TCP
-socket. Trainer death (including ``kill -9``) costs the node nothing; node
+``repro.pool.protocol`` (the op registry of record; see its docstring for
+the full reference table) to any number of trainer processes over a Unix or
+TCP socket. Connections negotiate a wire generation at hello: v2 peers get
+tagged frames — the connection's reader decodes and dispatches while
+replies drain out of a per-connection writer queue tagged with each
+request's ``rid`` — plus scatter-gather ``batch`` frames and keepalive
+``ping``s; v1 peers keep the strict request/response protocol unchanged. Trainer death (including ``kill -9``) costs the node nothing; node
 death loses only unpersisted cache, exactly like a power-cycled module —
 pmem-backed servers recover their media image on restart.
 
@@ -45,6 +50,7 @@ import argparse
 import contextlib
 import hmac
 import os
+import queue
 import secrets as pysecrets
 import signal
 import socket
@@ -60,9 +66,12 @@ from repro.pool.device import (DramPool, PmemPool, PoolDevice, PoolError,
 from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
 from repro.pool.metrics import PoolMetrics
 from repro.pool.nmp import NmpQueue
-from repro.pool.remote import (PoolAuthError, WireError, auth_proof,
-                               error_to_frame, format_addr, parse_addr,
-                               recv_frame, send_frame)
+from repro.pool.protocol import (NMP_OPS, OPS, WIRE_V1, WIRE_V2,
+                                 BufferedSocket, WireError, error_to_frame,
+                                 format_addr, pack_batch_results, pack_frame,
+                                 parse_addr, recv_frame, send_frame,
+                                 unpack_batch, wire_from_env)
+from repro.pool.remote import PoolAuthError, auth_proof
 
 
 class Tenant:
@@ -85,12 +94,16 @@ class Tenant:
 class PoolServer:
     def __init__(self, device: PoolDevice, addr: str, default_quota: int = 0,
                  conn_timeout: Optional[float] = 600.0,
-                 control_ops: bool = True, secret: str = ""):
+                 control_ops: bool = True, secret: str = "",
+                 wire: Optional[int] = None):
         self.device = device
         self.default_quota = int(default_quota)
         self.conn_timeout = conn_timeout
         self.control_ops = control_ops
         self.secret = secret
+        # highest protocol generation offered at hello (REPRO_POOL_WIRE
+        # pins it — the CI compatibility cell runs the whole suite on v1)
+        self.wire_max = int(wire) if wire is not None else wire_from_env()
         self.tenants: dict[str, Tenant] = {}
         self._lock = threading.RLock()       # serialises all device work
         self._nmp = NmpQueue(device)
@@ -149,9 +162,40 @@ class PoolServer:
             self.device.close()
 
     # -- per-connection loop ----------------------------------------------------
+    def _conn_writer(self, conn: socket.socket, out_q: "queue.Queue"):
+        """v2 reply pump: the reader decodes + dispatches, replies drain
+        out of this queue tagged with their request's rid. Replies that
+        queued up while a send was in flight are corked into a single
+        sendall — under pipelining this collapses N reply syscalls into
+        one and is a large part of the depth>1 throughput win."""
+        while True:
+            item = out_q.get()
+            if item is None:
+                return
+            try:
+                frames = []
+                while item is not None:
+                    rh, rbody = item
+                    frames.append(pack_frame(rh, rbody))
+                    try:
+                        item = out_q.get_nowait()
+                    except queue.Empty:
+                        break
+                conn.sendall(b"".join(frames))
+            except (OSError, PoolError):
+                # reply path broken: kill the conn so the reader unblocks
+                with contextlib.suppress(OSError):
+                    conn.close()
+                return
+            if item is None:
+                return
+
     def _serve_conn(self, conn: socket.socket):
         if self.conn_timeout:
             conn.settimeout(self.conn_timeout)
+        # buffered reads: pipelined request frames arrive back-to-back and
+        # cost ~1 recv syscall per burst instead of 2 per frame
+        rsock = BufferedSocket(conn)
         tenant: Optional[Tenant] = None
         # per-connection posture: hello readonly=True marks a serving
         # connection — every mutating op on it is denied with a typed
@@ -159,57 +203,97 @@ class PoolServer:
         # Tenant object is shared by name, and a trainer and a server may
         # legitimately share a tenant namespace with different postures.
         readonly = False
+        # negotiated per connection at hello; a v1 peer (no "wire" field)
+        # keeps the strict one-op-at-a-time protocol unchanged
+        conn_wire = WIRE_V1
+        out_q: Optional[queue.Queue] = None
         # shared-secret auth is a TCP property: unix sockets are already
         # gated by filesystem permissions. State is per connection — each
         # tcp hello must answer a fresh nonce, so proofs never replay.
         auth = {"required": bool(self.secret) and self._kind == "tcp",
                 "challenge": None}
+
+        def reply(rh: dict, rbody: bytes = b"", rid=None):
+            if rid is not None:
+                rh["rid"] = rid
+            if out_q is not None:
+                out_q.put((rh, rbody))
+            else:
+                send_frame(conn, rh, rbody)
+
         try:
             while not self._stop.is_set():
                 try:
-                    frame = recv_frame(conn)
+                    frame = recv_frame(rsock)
                 except WireError as e:
-                    # stream is out of sync: report once, then drop the conn
+                    # a fatal wire error means frame sync is gone (corrupt
+                    # length prefix, EOF mid-frame): report once and drop.
+                    # On a v2 connection a NON-fatal one (bad header inside
+                    # an intact frame) rejects just that request — the
+                    # stream is still at a frame boundary, so keep serving.
                     try:
-                        send_frame(conn, error_to_frame(e))
+                        reply(error_to_frame(e))
                     except PoolError:
-                        pass
-                    return
+                        return
+                    if e.fatal or conn_wire < WIRE_V2:
+                        return
+                    continue
                 except PoolError:
                     return
                 if frame is None:
                     return                  # clean EOF
                 hdr, body = frame
                 op = hdr.get("op")
+                rid = hdr.get("rid")
                 if op == "close":
                     return
                 try:
-                    if op == "hello":
+                    if op == "ping":
+                        # keepalive no-op: pre-hello, tenant-free, and
+                        # exactly what stops an idle-timeout from
+                        # mistaking a quiet pipelined trainer for a corpse
+                        rh, rbody = {}, b""
+                    elif op == "hello":
                         if auth["required"]:
                             self._check_auth(auth, hdr)
                         tenant = self._hello(hdr)
                         readonly = bool(hdr.get("readonly"))
+                        conn_wire = min(int(hdr.get("wire", WIRE_V1)),
+                                        self.wire_max)
                         rh, rbody = {"capacity": self.device.capacity,
                                      "device": self.device.profile.name,
                                      "tenant": tenant.name,
-                                     "readonly": readonly}, b""
+                                     "readonly": readonly,
+                                     "wire": conn_wire}, b""
                     elif tenant is None:
                         raise TenantIsolationError(
                             "no tenant identity: send hello first")
+                    elif op == "batch":
+                        rh, rbody = self._run_batch(tenant, readonly, hdr,
+                                                    body)
                     else:
                         if readonly:
                             self._check_readonly(tenant, op, hdr)
                         rh, rbody = self._dispatch(tenant, op, hdr, body)
                     rh["ok"] = True
-                    send_frame(conn, rh, rbody)
+                    reply(rh, rbody, rid)
                 except (PoolError, InjectedCrash) as e:
-                    send_frame(conn, error_to_frame(e))
+                    reply(error_to_frame(e), rid=rid)
                 except Exception as e:      # defensive: typed, keep serving
-                    send_frame(conn, error_to_frame(
-                        PoolError(f"{type(e).__name__}: {e}")))
+                    reply(error_to_frame(
+                        PoolError(f"{type(e).__name__}: {e}")), rid=rid)
+                if conn_wire >= WIRE_V2 and out_q is None:
+                    # hello settled on v2: replies move to the writer pump
+                    # (the hello reply itself went out strict, above)
+                    out_q = queue.Queue()
+                    threading.Thread(target=self._conn_writer,
+                                     args=(conn, out_q),
+                                     daemon=True).start()
         except PoolError:
             pass                            # peer vanished mid-reply
         finally:
+            if out_q is not None:
+                out_q.put(None)
             with self._lock:
                 self._conns.discard(conn)
             try:
@@ -250,9 +334,46 @@ class PoolServer:
         return t
 
     # -- dispatch ---------------------------------------------------------------
+    def _run_batch(self, tenant: Tenant, readonly: bool, hdr: dict,
+                   body: bytes):
+        """Scatter-gather frame: execute the sub-ops in order, collect one
+        tagged result (ok or typed error) per slot — a failed sub-op never
+        aborts its siblings. The exception is ``InjectedCrash``: that
+        emulates the node dying mid-batch, so execution stops there and the
+        remaining slots report aborted."""
+        subs = unpack_batch(hdr, body)
+        results = []
+        crashed: Optional[InjectedCrash] = None
+        for shdr, sbody in subs:
+            sop = shdr.get("op")
+            if crashed is not None:
+                results.append((error_to_frame(PoolError(
+                    f"batch aborted: injected crash at "
+                    f"{crashed.point!r} upstream")), b""))
+                continue
+            try:
+                if sop not in OPS or sop in ("hello", "batch", "close",
+                                             "ping"):
+                    raise WireError(f"op {sop!r} not allowed in a batch "
+                                    f"frame")
+                if readonly:
+                    self._check_readonly(tenant, sop, shdr)
+                rh, rbody = self._dispatch(tenant, sop, shdr, sbody)
+                rh["ok"] = True
+                results.append((rh, rbody))
+            except InjectedCrash as e:
+                crashed = e
+                results.append((error_to_frame(e), b""))
+            except PoolError as e:
+                results.append((error_to_frame(e), b""))
+            except Exception as e:
+                results.append((error_to_frame(
+                    PoolError(f"{type(e).__name__}: {e}")), b""))
+        return pack_batch_results(results)
+
     def _dispatch(self, tenant: Tenant, op: str, hdr: dict, body: bytes):
         handler = getattr(self, f"_op_{op.replace('-', '_')}", None)
-        if handler is None:
+        if op not in OPS or handler is None:
             raise WireError(f"unknown op {op!r}")
         with self._lock:
             prev = self.device.metrics
@@ -279,23 +400,22 @@ class PoolServer:
                 f"tenant {tenant.name!r}: node-wide control op {op!r} is "
                 f"disabled on this server (--no-control-ops)")
 
-    # every op that mutates tenant data or the directory. Reads, persist
-    # (a flush cannot corrupt), metrics, and control ops stay allowed —
-    # control ops have their own gate (--no-control-ops).
-    _READONLY_DENIED_OPS = frozenset({"write", "free", "free-region"})
-    _READONLY_DENIED_NMP = frozenset({"row_update", "scatter_add",
-                                      "undo_log_append", "slot_clear",
-                                      "region_import", "blob_put"})
-
     def _check_readonly(self, tenant: Tenant, op: str, hdr: dict):
-        """Readonly-connection gate: deny anything mutating. ``alloc`` is
-        allowed only as an idempotent reopen of an existing, shape- and
-        dtype-identical region (how a serving tier resolves its handles)."""
-        denied = op in self._READONLY_DENIED_OPS
+        """Readonly-connection gate, driven by the op registry's mutability
+        flags: deny anything mutating. ``alloc`` is allowed only as an
+        idempotent reopen of an existing, shape- and dtype-identical region
+        (how a serving tier resolves its handles); persist (a flush cannot
+        corrupt), reads, metrics, and control ops stay allowed — control
+        ops have their own gate (--no-control-ops)."""
+        spec = OPS.get(op)
+        denied = bool(spec is not None and spec.mutating
+                      and not spec.reopen_ok)
         what = op
-        if op == "nmp" and hdr.get("kind") in self._READONLY_DENIED_NMP:
-            denied = True
-            what = f"nmp:{hdr.get('kind')}"
+        if op == "nmp":
+            nspec = NMP_OPS.get(hdr.get("kind"))
+            if nspec is not None and nspec.mutating:
+                denied = True
+                what = f"nmp:{hdr.get('kind')}"
         if op == "alloc":
             with self._lock:
                 region = tenant.alloc.domain(hdr["domain"]).get(hdr["name"])
@@ -416,7 +536,18 @@ class PoolServer:
         return Region(self.device, "<nmp>", label, off, nbytes,
                       ent["dtype"], tuple(ent["shape"]))
 
+    # scalar nmp operands that ride in the request header, passed through
+    # to the registry executor verbatim
+    _NMP_SCALARS = ("step", "slot_off", "slot_bytes", "nslots", "hdr_bytes",
+                    "slots", "compress")
+
     def _op_nmp(self, tenant, hdr, body):
+        """Decode the wire operands and hand off to the ONE nmp dispatch
+        table (``protocol.NMP_OPS``) shared with the sharded router's local
+        path — the server has no per-kind code of its own."""
+        spec = NMP_OPS.get(hdr.get("kind"))
+        if spec is None:
+            raise WireError(f"unknown nmp kind {hdr.get('kind')!r}")
         region = self._wire_region(tenant, hdr["region"], "<nmp>")
         log = None
         if hdr.get("log_region"):
@@ -435,57 +566,26 @@ class PoolServer:
             rows = np.frombuffer(body, dtype=hdr["rows_dtype"], count=count,
                                  offset=pos).reshape(shape)
             pos += rows.nbytes
-        kind, point = hdr["kind"], hdr.get("point")
-        if kind == "gather":
-            out = self._nmp.gather(region, idx)
-        elif kind == "bag_gather":
-            out = self._nmp.bag_gather(region, idx,
-                                       combine=hdr.get("combine", "sum"))
-        elif kind == "undo_snapshot":
-            out = self._nmp.undo_snapshot(region, idx)
-        elif kind == "slot_headers":
-            out = self._nmp.slot_headers(region, int(hdr["nslots"]),
-                                         int(hdr["slot_bytes"]),
-                                         int(hdr["hdr_bytes"]))
-        elif kind == "row_update":
-            self._nmp.row_update(region, idx, rows, point=point)
-            return {"shape": None}, b""
-        elif kind == "scatter_add":
-            self._nmp.scatter_add(region, idx, rows, point=point)
-            return {"shape": None}, b""
-        elif kind == "undo_log_append":
-            if log is None:
-                raise WireError("undo_log_append needs log_region")
-            stats = self._nmp.undo_log_append(
-                region, log, step=int(hdr["step"]),
-                slot_off=int(hdr["slot_off"]),
-                slot_bytes=int(hdr["slot_bytes"]), idx=idx, new_rows=rows,
-                compress=hdr.get("compress", "zlib"),
-                apply_point=point or "mirror-apply")
-            return {"shape": None, "stats": stats}, b""
-        elif kind == "slot_clear":
-            n = self._nmp.slot_clear(region, hdr["slots"],
-                                     int(hdr["slot_bytes"]),
-                                     point=point or "undo-gc")
-            return {"shape": None, "stats": {"cleared": n}}, b""
-        elif kind == "region_export":
-            framed = self._nmp.region_export(
-                region, compress=hdr.get("compress", "zlib"))
-            return {"shape": [len(framed)], "dtype": "uint8"}, framed
-        elif kind == "region_import":
-            self._nmp.region_import(region, body[pos:],
-                                    point=point or "migrate-import")
-            return {"shape": None}, b""
-        elif kind == "blob_put":
-            stored = self._nmp.blob_put(
-                region, body[pos:], compress=hdr.get("compress", "zlib"),
-                point=point or "dense-blob")
-            return {"shape": None, "stats": {"stored": stored}}, b""
-        else:
-            raise WireError(f"unknown nmp kind {kind!r}")
-        out = np.ascontiguousarray(out)
-        return {"shape": list(out.shape), "dtype": str(out.dtype)}, \
-            out.tobytes()
+        blob = body[pos:] if spec.blob else None
+        extra = {k: hdr[k] for k in self._NMP_SCALARS if k in hdr}
+        out = spec.run(self._nmp, region, idx=idx, rows=rows, blob=blob,
+                       combine=hdr.get("combine", "sum"),
+                       point=hdr.get("point"), log_region=log, **extra)
+        return _nmp_result_frame(out)
+
+
+def _nmp_result_frame(out):
+    """Registry-executor result -> reply frame: None (pure mutation),
+    stats dict, raw blob bytes, or a result array."""
+    if out is None:
+        return {"shape": None}, b""
+    if isinstance(out, dict):
+        return {"shape": None, "stats": out}, b""
+    if isinstance(out, (bytes, bytearray, memoryview)):
+        return {"shape": [len(out)], "dtype": "uint8"}, bytes(out)
+    arr = np.ascontiguousarray(out)
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}, \
+        arr.tobytes()
 
 
 def _entry(region: Region) -> dict:
@@ -535,7 +635,11 @@ def main(argv=None):
                          "are exempt (filesystem-gated)")
     ap.add_argument("--conn-timeout", type=float, default=600.0,
                     help="per-connection idle timeout in seconds "
-                         "(0 = never drop quiet trainers)")
+                         "(0 = never drop quiet trainers; v2 clients "
+                         "keepalive-ping through it)")
+    ap.add_argument("--wire", type=int, choices=[1, 2], default=None,
+                    help="max wire protocol generation to offer "
+                         "(default: v2, or REPRO_POOL_WIRE)")
     ap.add_argument("--fault", type=_parse_fault, action="append",
                     default=[], metavar="KIND:POINT[:OCC[:PHASE]]",
                     help="arm a deterministic fault event (repeatable)")
@@ -568,7 +672,7 @@ def main(argv=None):
                         default_quota=args.default_quota,
                         control_ops=not args.no_control_ops,
                         conn_timeout=args.conn_timeout or None,
-                        secret=args.pool_secret)
+                        secret=args.pool_secret, wire=args.wire)
     stop = threading.Event()
 
     def _sig(signum, frame):

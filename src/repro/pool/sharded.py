@@ -6,7 +6,10 @@ The trick is a *global address space*: shard ``i`` owns the offset window
 ``[i * SHARD_SPAN, (i+1) * SHARD_SPAN)``, so every ``Region`` handed out by
 the (proxy-mode) allocator carries a global offset that encodes its owning
 shard. Raw ``read``/``write``/``persist`` and every near-memory op route by
-offset; domain-level ops (alloc/get/free) route by *placement*.
+offset; domain-level ops (alloc/get/free) route by *placement*. The wire-v2
+scatter-gather forms (``read_batch``/``nmp_batch``) group their sub-ops per
+owning node — one batch frame per remote node — and reassemble results in
+call order.
 
 Placement is an epoch-versioned ``PlacementMap`` (``pool/placement.py``):
 deterministic by construction — a pure CRC32 hash of the domain name over
@@ -58,6 +61,7 @@ from repro.pool.metrics import OpStat, PoolMetrics
 from repro.pool.nmp import NmpQueue
 from repro.pool.placement import (Migration, PlacementMap, PoolTopology,
                                   RebalancePolicy)
+from repro.pool.protocol import NMP_OPS
 
 __all__ = ["REPLICA_SUFFIX", "SHARD_SPAN", "Migration", "PlacementMap",
            "PoolTopology", "RebalancePolicy", "ShardedPool", "merge_metrics",
@@ -225,7 +229,8 @@ class ShardedPool(PoolDevice):
                  quota: int = 0, pin: Optional[dict] = None,
                  topology: Optional[PlacementMap] = None,
                  placement: Optional[PlacementMap] = None,
-                 secret: str = "", readonly: bool = False):
+                 secret: str = "", readonly: bool = False,
+                 timeout=None, wire=None):
         placement = placement if placement is not None else topology
         if placement is None:
             addrs = [s if isinstance(s, str) else
@@ -241,6 +246,8 @@ class ShardedPool(PoolDevice):
         self.closed = False
         self._faults: Optional[FaultSchedule] = None
         self._secret = secret
+        self._timeout = timeout
+        self._wire = wire
         # rebalancing hooks: a policy (attached by make_pool / the manager)
         # proposes migrations off the watermark gauges; the sink is the
         # durable half of the epoch flip (the manager points it at
@@ -254,7 +261,8 @@ class ShardedPool(PoolDevice):
             if isinstance(spec, str):
                 dev = make_pool("remote", addr=spec, tenant=tenant,
                                 quota=quota, secret=secret,
-                                readonly=self.readonly)
+                                readonly=self.readonly, timeout=timeout,
+                                wire=wire)
             else:
                 dev = spec
             self.shards.append(_Shard(i, dev, tenant, quota,
@@ -311,6 +319,55 @@ class ShardedPool(PoolDevice):
         shard, local = self.shard_of(off)
         shard.device.write(local, data, tag=tag)
 
+    def read_async(self, off: int, nbytes: int, tag: str = "read"):
+        shard, local = self.shard_of(off)
+        return shard.device.read_async(local, nbytes, tag=tag)
+
+    def write_async(self, off: int, data, tag: str = "write"):
+        shard, local = self.shard_of(off)
+        return shard.device.write_async(local, data, tag=tag)
+
+    def read_batch(self, reqs, tag: str = "read") -> list:
+        """Scatter-gather read across nodes: requests group by owning
+        shard (ONE batch frame per remote node) and reassemble in request
+        order."""
+        out = [None] * len(reqs)
+        groups: dict = {}
+        for pos, (off, nbytes) in enumerate(reqs):
+            shard, local = self.shard_of(off)
+            groups.setdefault(shard.index,
+                              (shard, []))[1].append((pos, local,
+                                                      int(nbytes)))
+        for shard, items in groups.values():
+            blobs = shard.device.read_batch(
+                [(local, n) for _, local, n in items], tag=tag)
+            for (pos, _, _), blob in zip(items, blobs):
+                out[pos] = blob
+        return out
+
+    def nmp_batch(self, calls) -> list:
+        """Batched near-memory ops routed per owning shard: each remote
+        node gets ONE scatter-gather frame with its sub-ops (kept in call
+        order per node); results return in the original call order.
+        ``undo_log_append`` sub-ops take the singleton ``nmp`` path so the
+        cross-shard fallback and slot_off globalisation still apply."""
+        out = [None] * len(calls)
+        groups: dict = {}
+        for pos, (kind, region, kw) in enumerate(calls):
+            if kind == "undo_log_append":
+                out[pos] = self.nmp(kind, region, **kw)
+                continue
+            shard, local = self.shard_of(region.off)
+            lr = self._localize_region(region, shard, local)
+            groups.setdefault(shard.index,
+                              (shard, []))[1].append((pos, kind, lr, kw))
+        for shard, items in groups.values():
+            res = shard.device.nmp_batch(
+                [(kind, lr, kw) for _, kind, lr, kw in items])
+            for (pos, _, _, _), r in zip(items, res):
+                out[pos] = r
+        return out
+
     def mark_dirty(self, off: int, nbytes: int):
         if nbytes > 0:
             shard, local = self.shard_of(off)
@@ -350,7 +407,8 @@ class ShardedPool(PoolDevice):
             pass
         dev = make_pool("remote", addr=addr, tenant=self.tenant,
                         quota=old.quota, secret=self._secret,
-                        readonly=self.readonly)
+                        readonly=self.readonly, timeout=self._timeout,
+                        wire=self._wire)
         self.shards[i] = _Shard(i, dev, self.tenant, old.quota,
                                 readonly=self.readonly)
 
@@ -414,6 +472,19 @@ class ShardedPool(PoolDevice):
     def reset_metrics(self):
         for shard in self.shards:
             shard.reset_metrics()
+
+    def wire_stats(self) -> dict:
+        """Per-node transport counters for the remote members (negotiated
+        wire revision, tx/rx bytes, keepalives, timeouts), keyed by shard
+        index."""
+        return {str(s.index): s.device.wire_stats() for s in self.shards
+                if s.remote and hasattr(s.device, "wire_stats")}
+
+    def latency_stats(self) -> dict:
+        """Per-node client-observed op latency percentiles."""
+        return {str(s.index): s.device.latency_stats()
+                for s in self.shards
+                if s.remote and hasattr(s.device, "latency_stats")}
 
     # -- allocator proxy (PoolAllocator routes through these) ------------------
     def alloc_region(self, domain: str, name: str, shape, dtype: str,
@@ -660,44 +731,14 @@ class ShardedPool(PoolDevice):
     @staticmethod
     def _local_nmp(shard: _Shard, kind, region, *, idx, rows, blob, combine,
                    point, log_region, **extra):
-        q = shard.nmp
-        if kind == "gather":
-            return q.gather(region, idx)
-        if kind == "bag_gather":
-            return q.bag_gather(region, idx, combine=combine)
-        if kind == "undo_snapshot":
-            return q.undo_snapshot(region, idx)
-        if kind == "slot_headers":
-            return q.slot_headers(region, int(extra["nslots"]),
-                                  int(extra["slot_bytes"]),
-                                  int(extra["hdr_bytes"]))
-        if kind == "slot_clear":
-            return {"cleared": q.slot_clear(region, extra["slots"],
-                                            int(extra["slot_bytes"]),
-                                            point=point or "undo-gc")}
-        if kind == "row_update":
-            return q.row_update(region, idx, rows, point=point)
-        if kind == "scatter_add":
-            return q.scatter_add(region, idx, rows, point=point)
-        if kind == "undo_log_append":
-            return q.undo_log_append(
-                region, log_region, step=int(extra["step"]),
-                slot_off=int(extra["slot_off"]),
-                slot_bytes=int(extra["slot_bytes"]), idx=idx, new_rows=rows,
-                compress=extra.get("compress", "zlib"),
-                apply_point=point or "mirror-apply")
-        if kind == "region_export":
-            return q.region_export(region,
-                                   compress=extra.get("compress", "zlib"))
-        if kind == "region_import":
-            q.region_import(region, blob, point=point or "migrate-import")
-            return None
-        if kind == "blob_put":
-            return {"stored": q.blob_put(region, blob,
-                                         compress=extra.get("compress",
-                                                            "zlib"),
-                                         point=point or "dense-blob")}
-        raise PoolError(f"unknown nmp kind {kind!r}")
+        # one op table: the same NMP_OPS descriptors the server and the
+        # remote client use drive the local executors here
+        spec = NMP_OPS.get(kind)
+        if spec is None:
+            raise PoolError(f"unknown nmp kind {kind!r}")
+        return spec.run(shard.nmp, region, idx=idx, rows=rows, blob=blob,
+                        combine=combine, point=point, log_region=log_region,
+                        **extra)
 
     def _cross_shard_undo_append(self, mirror, log, *, idx, rows, point,
                                  step, slot_off, slot_bytes,

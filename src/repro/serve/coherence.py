@@ -50,23 +50,25 @@ class CommitTailer:
         return self.ring.ring is not None
 
     def poll(self) -> dict:
-        """Evict the rows of every commit newer than the watermark. A slot
-        the writer already GC'd (or overwrote) between the header scan and
-        the payload read just decodes to None — its rows were older than
-        max_undo_logs steps, far beyond any cache entry's usefulness, so we
-        advance past it; a ``clear()`` would be the conservative fallback
-        but it never triggers at realistic poll cadences."""
+        """Evict the rows of every commit newer than the watermark, in TWO
+        wire round-trips however many steps landed: one header scan + one
+        scatter-gather payload read (``committed_after``). A slot the
+        writer already GC'd (or overwrote) between the scan and the read
+        decodes to None — its rows were older than max_undo_logs steps,
+        far beyond any cache entry's usefulness, so we advance past it; a
+        ``clear()`` would be the conservative fallback but it never
+        triggers at realistic poll cadences."""
         if not self._rebind():
             return {"steps": 0, "evicted": 0, "watermark": self.watermark}
-        steps = [s for s in self.ring.committed_steps() if s > self.watermark]
+        recs = self.ring.committed_after(self.watermark)
         evicted = 0
-        for step in sorted(steps):
-            rec = self.ring.read(step)
+        for step in sorted(recs):
+            rec = recs[step]
             if rec is not None:
                 idx, _old_rows, _old_acc = rec
                 evicted += self.cache.invalidate(idx)
             self.watermark = step
-        return {"steps": len(steps), "evicted": evicted,
+        return {"steps": len(recs), "evicted": evicted,
                 "watermark": self.watermark}
 
 

@@ -194,4 +194,12 @@ class EmbeddingServeTier:
             "failovers": self.failovers,
             "watermark": self.tailer.watermark
             if self.tailer is not None else -1,
+            "wire": self.wire_stats(),
         }
+
+    def wire_stats(self) -> dict:
+        """The pool connection's transport counters (remote backends):
+        negotiated wire revision, pipelining depth seen, keepalives,
+        per-request timeouts — {} on in-process devices."""
+        ws = getattr(self.pool, "wire_stats", None)
+        return ws() if callable(ws) else {}

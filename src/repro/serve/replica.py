@@ -34,11 +34,13 @@ class ReplicaReader:
 
     def refresh(self) -> bool:
         """(Re)resolve the replica's region handles — after the first
-        refresh lands, or after a reconnect. Returns True if the replica
+        refresh lands, or after a reconnect. ONE directory listing
+        resolves both the rows region and the watermark (it used to be a
+        ``get`` round trip per handle). Returns True if the replica
         exists."""
-        dom = self.alloc.domain(self.domain_name)
-        self.region = dom.get(self.name)
-        wm = dom.get("watermark")
+        regs = self.alloc.domain(self.domain_name).regions()
+        self.region = regs.get(self.name)
+        wm = regs.get("watermark")
         self._wm = None if wm is None else JsonRegion(wm)
         return self.region is not None
 

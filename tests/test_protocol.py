@@ -1,0 +1,358 @@
+"""Wire protocol v2: version negotiation (mixed-version matrix), the typed
+op registry as the ONE op table, pipelined request/response correlation
+(fence-on-desync retired), scatter-gather batch frames, torn-frame isolation
+mid-pipeline, keepalives on quiet connections, and per-op timeout classes."""
+import json
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.pool import (DramPool, PmemPool, PoolAllocator,
+                        PoolConnectionError, PoolError, PoolServer,
+                        PoolTimeoutError, RemotePool, ShardedPool, Timeouts,
+                        make_pool)
+from repro.pool import protocol, remote, server, sharded
+from repro.pool.protocol import (WIRE_V1, WIRE_V2, PoolChannel, recv_frame,
+                                 send_frame, wire_from_env)
+
+
+@pytest.fixture
+def srv(tmp_path):
+    s = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/pool.sock").start()
+    yield s
+    s.shutdown(close_device=True)
+
+
+def _mkdata(dev, n=64, name="x", domain="d"):
+    r = PoolAllocator(dev).domain(domain).alloc(name, shape=(n,),
+                                                dtype="uint8")
+    dev.write(r.off, np.arange(n, dtype=np.uint8))
+    return r
+
+
+# -- one op table -------------------------------------------------------------
+
+def test_single_op_table():
+    """Acceptance: remote.py, server.py, and sharded.py all dispatch off
+    THE registry objects in protocol.py — no drifting copies."""
+    assert remote.OPS is protocol.OPS
+    assert remote.NMP_OPS is protocol.NMP_OPS
+    assert server.OPS is protocol.OPS
+    assert server.NMP_OPS is protocol.NMP_OPS
+    assert sharded.NMP_OPS is protocol.NMP_OPS
+
+
+def test_registry_covers_server_dispatch():
+    """Every wire op the server dispatches has a registry descriptor (and
+    nothing in the registry is undispatchable)."""
+    for op, spec in protocol.OPS.items():
+        assert spec.name == op
+    for kind, spec in protocol.NMP_OPS.items():
+        assert spec.kind == kind
+        assert callable(spec.run)
+
+
+# -- version negotiation ------------------------------------------------------
+
+def test_v2_client_against_v1_server(tmp_path):
+    s = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/v1.sock",
+                   wire=WIRE_V1).start()
+    try:
+        dev = RemotePool(s.addr, timeout=20.0)     # asks for v2
+        assert dev.wire == WIRE_V1
+        r = _mkdata(dev)
+        assert bytes(dev.read(r.off, 8)) == bytes(range(8))
+        # the async surface degrades to completed depth-1 futures
+        fut = dev.read_async(r.off, 8)
+        assert bytes(fut.result()) == bytes(range(8))
+        assert dev.read_batch([(r.off, 4), (r.off + 4, 4)]) == \
+            [bytes(range(4)), bytes(range(4, 8))]
+        dev.close()
+    finally:
+        s.shutdown(close_device=True)
+
+
+def test_v1_client_against_v2_server(srv):
+    dev = RemotePool(srv.addr, timeout=20.0, wire=WIRE_V1)
+    assert dev.wire == WIRE_V1
+    r = _mkdata(dev)
+    assert bytes(dev.read(r.off, 8)) == bytes(range(8))
+    dev.close()
+
+
+def test_v2_both_sides_negotiates_v2(srv):
+    dev = RemotePool(srv.addr, timeout=20.0)
+    assert dev.wire == WIRE_V2
+    assert dev.wire_stats()["wire"] == WIRE_V2
+    dev.close()
+
+
+def test_wire_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_POOL_WIRE", "v1")
+    assert wire_from_env() == WIRE_V1
+    monkeypatch.setenv("REPRO_POOL_WIRE", "2")
+    assert wire_from_env() == WIRE_V2
+    monkeypatch.delenv("REPRO_POOL_WIRE")
+    assert wire_from_env() == WIRE_V2
+
+
+# -- pipelining ---------------------------------------------------------------
+
+def _pools(tmp_path, servers):
+    """The four backends behind one factory: (name, device) pairs."""
+    out = [("dram", DramPool(1 << 18)),
+           ("pmem", PmemPool(str(tmp_path / "p.img"), 1 << 18))]
+    s1 = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/r.sock").start()
+    servers.append(s1)
+    out.append(("remote", RemotePool(s1.addr, timeout=20.0)))
+    s2 = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/s0.sock").start()
+    s3 = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/s1.sock").start()
+    servers.extend([s2, s3])
+    out.append(("sharded", make_pool("sharded",
+                                     shards=f"{s2.addr},{s3.addr}",
+                                     timeout=20.0)))
+    return out
+
+
+def test_pipeline_depth8_parity_all_backends(tmp_path):
+    """Depth-8 pipelined reads return byte-identical results to
+    sequential reads on every backend."""
+    servers = []
+    try:
+        for name, dev in _pools(tmp_path, servers):
+            r = _mkdata(dev, n=256)
+            seq = [bytes(dev.read(r.off + 8 * i, 8)) for i in range(8)]
+            futs = [dev.read_async(r.off + 8 * i, 8) for i in range(8)]
+            piped = [bytes(f.result()) for f in futs]
+            assert piped == seq, name
+            batched = dev.read_batch([(r.off + 8 * i, 8)
+                                      for i in range(8)])
+            assert [bytes(b) for b in batched] == seq, name
+            dev.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
+
+
+def test_pipelined_error_rejects_only_its_future(srv):
+    """Fence-on-desync is retired: a failed pipelined op rejects ITS
+    future; requests before and after it complete, and the connection
+    keeps serving."""
+    dev = RemotePool(srv.addr, timeout=20.0)
+    assert dev.wire == WIRE_V2
+    r = _mkdata(dev)
+    good1 = dev.read_async(r.off, 8)
+    bad = dev.read_async(1 << 29, 8)        # beyond capacity: typed error
+    good2 = dev.read_async(r.off + 8, 8)
+    assert bytes(good1.result()) == bytes(range(8))
+    with pytest.raises(PoolError):
+        bad.result()
+    assert bytes(good2.result()) == bytes(range(8, 16))
+    assert not dev.closed                   # the connection survived
+    assert bytes(dev.read(r.off, 4)) == bytes(range(4))
+    dev.close()
+
+
+def test_batch_frame_is_one_round_trip(srv):
+    dev = RemotePool(srv.addr, timeout=20.0)
+    r = _mkdata(dev, n=128)
+    calls = []
+    orig = dev._request
+
+    def counting(hdr, body=b""):
+        calls.append(hdr["op"])
+        return orig(hdr, body)
+
+    dev._request = counting
+    try:
+        got = dev.read_batch([(r.off + i, 1) for i in range(16)])
+    finally:
+        dev._request = orig
+    assert calls == ["batch"]
+    assert b"".join(bytes(b) for b in got) == bytes(range(16))
+    dev.close()
+
+
+# -- torn frames --------------------------------------------------------------
+
+def _raw_hello(sock, wire=WIRE_V2):
+    send_frame(sock, {"op": "hello", "tenant": "torn", "quota": 0,
+                      "wire": wire})
+    hdr, _ = recv_frame(sock)
+    assert hdr.get("ok"), hdr
+    return int(hdr.get("wire", WIRE_V1))
+
+
+def test_torn_frame_mid_pipeline_rejects_exactly_one(srv):
+    """A frame whose header fails to parse (stream still at a frame
+    boundary) produces ONE error reply; requests around it succeed on the
+    same connection."""
+    kind, target = protocol.parse_addr(srv.addr)
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.connect(target)
+    sock.settimeout(10.0)
+    try:
+        assert _raw_hello(sock) == WIRE_V2
+        send_frame(sock, {"op": "capacity", "rid": 1})
+        garbage = b"\x00not json at all\xff"
+        sock.sendall(struct.pack("<I", 4 + len(garbage))
+                     + struct.pack("<I", len(garbage)) + garbage)
+        send_frame(sock, {"op": "capacity", "rid": 3})
+        replies = [recv_frame(sock)[0] for _ in range(3)]
+        by_rid = {h.get("rid"): h for h in replies}
+        assert by_rid[1]["ok"] and by_rid[3]["ok"]
+        (err,) = [h for h in replies if not h.get("ok")]
+        assert err.get("rid") is None       # unparseable: no rid to echo
+        # and the connection still serves
+        send_frame(sock, {"op": "capacity", "rid": 4})
+        hdr, _ = recv_frame(sock)
+        assert hdr["ok"] and hdr["rid"] == 4
+    finally:
+        sock.close()
+
+
+def test_fatal_framing_error_still_drops_connection(srv):
+    """A corrupt length prefix loses frame sync — the server must drop
+    the connection, v2 or not."""
+    kind, target = protocol.parse_addr(srv.addr)
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.connect(target)
+    sock.settimeout(10.0)
+    try:
+        assert _raw_hello(sock) == WIRE_V2
+        sock.sendall(struct.pack("<I", (1 << 30) + 1))   # > MAX_FRAME
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            got = recv_frame(sock)
+            if got is None:
+                break                        # server hung up: good
+        else:
+            pytest.fail("server kept the connection after frame desync")
+    finally:
+        sock.close()
+
+
+# -- keepalive / timeouts -----------------------------------------------------
+
+def test_keepalive_survives_idle_pipelined_connection(tmp_path):
+    """The idle-connection bugfix: a quiet v2 connection outlives the
+    server's conn_timeout because the channel pings under it."""
+    s = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/ka.sock",
+                   conn_timeout=1.0).start()
+    try:
+        dev = RemotePool(s.addr, timeout=Timeouts(control=5.0, data=10.0,
+                                                  bulk=20.0, keepalive=0.3))
+        r = _mkdata(dev)
+        time.sleep(2.5)                      # > 2x the server conn_timeout
+        assert bytes(dev.read(r.off, 8)) == bytes(range(8))
+        assert dev.wire_stats()["pings"] > 0
+        dev.close()
+    finally:
+        s.shutdown(close_device=True)
+
+
+def test_v1_idle_connection_is_reaped(tmp_path):
+    """Contrast cell: a v1 connection has no keepalive and the server's
+    idle reaper fences it — the old (pre-fix) behaviour, now opt-in."""
+    s = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/ka1.sock",
+                   conn_timeout=1.0).start()
+    try:
+        dev = RemotePool(s.addr, timeout=20.0, wire=WIRE_V1)
+        _mkdata(dev)
+        time.sleep(2.5)
+        with pytest.raises(PoolConnectionError):
+            dev.ping()
+    finally:
+        s.shutdown(close_device=True)
+
+
+def test_per_op_timeout_rejects_one_request_connection_survives(tmp_path):
+    """A stalled reply trips PoolTimeoutError for THAT request only; the
+    late reply is dropped by rid and the channel keeps working."""
+    path = str(tmp_path / "stall.sock")
+    lsock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    lsock.bind(path)
+    lsock.listen(1)
+    stop = threading.Event()
+
+    def fake_server():
+        conn, _ = lsock.accept()
+        conn.settimeout(20.0)
+        hdr, _ = recv_frame(conn)
+        assert hdr["op"] == "hello"
+        send_frame(conn, {"ok": True, "wire": WIRE_V2})
+        while not stop.is_set():
+            got = recv_frame(conn)
+            if got is None:
+                break
+            h, _ = got
+            if h["op"] == "capacity":
+                time.sleep(1.2)              # stall past the op deadline
+            if h["op"] == "close":
+                send_frame(conn, {"ok": True, "rid": h.get("rid")})
+                break
+            send_frame(conn, {"ok": True, "capacity": 1 << 18,
+                              "rid": h.get("rid")})
+        conn.close()
+
+    t = threading.Thread(target=fake_server, daemon=True)
+    t.start()
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.connect(path)
+    chan = PoolChannel(sock, f"unix:{path}",
+                       Timeouts(control=0.4, data=0.4, bulk=1.0,
+                                keepalive=30.0))
+    try:
+        hdr, _ = chan.exchange({"op": "hello", "tenant": "t", "quota": 0,
+                                "wire": WIRE_V2})
+        chan.activate(int(hdr["wire"]))
+        fut = chan.submit({"op": "capacity"})
+        with pytest.raises(PoolTimeoutError):
+            fut.result()
+        # the stalled reply arrives late and is dropped by rid; the next
+        # request gets its own rid and completes
+        rh, _ = chan.request({"op": "ping"}, timeout=5.0)
+        assert rh.get("ok")
+        assert chan.stats()["timeouts"] == 1
+        deadline = time.monotonic() + 5.0
+        while chan.stats()["late_drops"] < 1 \
+                and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert chan.stats()["late_drops"] >= 1
+    finally:
+        stop.set()
+        chan.close()
+        lsock.close()
+
+
+# -- sharded routing over v2 --------------------------------------------------
+
+def test_sharded_batch_routing_preserves_order(tmp_path):
+    """read_batch across shards: one frame per node, results in request
+    order."""
+    servers = [PoolServer(DramPool(1 << 18),
+                          f"unix:{tmp_path}/m{i}.sock").start()
+               for i in range(2)]
+    try:
+        pool = make_pool("sharded",
+                         shards=",".join(s.addr for s in servers),
+                         timeout=20.0)
+        a = PoolAllocator(pool)
+        regs = []
+        for dom in ("alpha", "beta", "gamma", "delta"):
+            r = a.domain(dom).alloc("x", shape=(16,), dtype="uint8")
+            pool.write(r.off, np.full(16, ord(dom[0]), np.uint8))
+            regs.append((dom, r))
+        owners = {pool.shard_of(r.off)[0].index for _, r in regs}
+        assert owners == {0, 1}              # the batch really spans nodes
+        got = pool.read_batch([(r.off, 16) for _, r in regs])
+        for (dom, _), blob in zip(regs, got):
+            assert bytes(blob) == bytes([ord(dom[0])] * 16), dom
+        pool.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)

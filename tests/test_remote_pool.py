@@ -393,8 +393,10 @@ def test_committed_scan_is_single_round_trip(server, rng):
         assert ring.committed_steps() == [0, 1, 2, 3, 4]
         assert len(calls) == 1, f"scan used {len(calls)} RTTs: {calls}"
         calls.clear()
-        ring.gc(keep_from=2)                 # scan + ONE batched slot_clear
-        assert len(calls) == 2, f"gc used {len(calls)} RTTs: {calls}"
+        # the writer tracked every append, so gc needs no scan at all:
+        # ONE batched slot_clear is the whole round trip
+        ring.gc(keep_from=2)
+        assert len(calls) == 1, f"gc used {len(calls)} RTTs: {calls}"
     finally:
         dev._request = orig
     assert ring.committed_steps() == [2, 3, 4]
@@ -418,14 +420,25 @@ def test_gc_round_trips_constant_in_expired_count(server, rng):
 
     dev._request = counting
     try:
-        ring.gc(keep_from=19)                # 19 expired entries, 2 RTTs
-        assert len(calls) == 2, f"gc used {len(calls)} RTTs: {calls}"
+        ring.gc(keep_from=19)                # 19 expired entries, 1 RTT
+        assert len(calls) == 1, f"gc used {len(calls)} RTTs: {calls}"
         calls.clear()
-        ring.gc(keep_from=19)                # nothing expired: scan only
-        assert len(calls) == 1, f"empty gc used {len(calls)} RTTs: {calls}"
+        ring.gc(keep_from=19)                # nothing expired: NO wire op
+        assert len(calls) == 0, f"empty gc used {len(calls)} RTTs: {calls}"
     finally:
         dev._request = orig
     assert ring.committed_steps() == [19]
+    # a fresh attach (recovery) lost the liveness map: the first gc pays
+    # ONE rebuild scan, then clears in one batched op — still O(1)
+    ring2 = UndoRing(PoolAllocator(dev), max_logs=24, compress=COMPRESS)
+    calls.clear()
+    dev._request = counting
+    try:
+        ring2.gc(keep_from=20)
+        assert calls == ["nmp", "nmp"], f"rebuild gc RTTs: {calls}"
+    finally:
+        dev._request = orig
+    assert ring2.committed_steps() == []
 
 
 def test_free_region_over_wire_releases_quota(server):
