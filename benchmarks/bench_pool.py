@@ -38,8 +38,7 @@ from collections import deque
 import numpy as np
 
 from repro.core.checkpoint.undo_log import UndoRing
-from repro.pool import (DramPool, PmemPool, PoolAllocator, PoolServer,
-                        ShardedPool, make_pool)
+from repro.pool import DramPool, PoolAllocator, PoolServer, make_pool
 from repro.serve import EmbeddingServeTier
 
 V, D = 1 << 13, 64
@@ -48,11 +47,15 @@ CACHE_ROWS = 1024
 
 
 def _mkpool(backend: str, root: str):
+    # every cell goes through make_pool so REPRO_POOL_CHECK=1 wraps the
+    # device in the crash-consistency checker — the overhead numbers in
+    # EXPERIMENTS.md §Analysis come from exactly this path
     if backend == "dram":
-        return DramPool(1 << 22), []
+        return make_pool("dram", capacity=1 << 22), []
     if backend == "pmem":
-        return PmemPool(os.path.join(root, f"bench_{backend}.img"),
-                        1 << 22), []
+        return make_pool(
+            "pmem", path=os.path.join(root, f"bench_{backend}.img"),
+            capacity=1 << 22), []
     if backend == "remote":
         srv = PoolServer(DramPool(1 << 22),
                          f"unix:{root}/bench.sock").start()
@@ -61,7 +64,8 @@ def _mkpool(backend: str, root: str):
         srvs = [PoolServer(DramPool(1 << 22),
                            f"unix:{root}/bench{i}.sock").start()
                 for i in range(2)]
-        return ShardedPool([s.addr for s in srvs]), srvs
+        return make_pool("sharded",
+                         shards=",".join(s.addr for s in srvs)), srvs
     raise ValueError(f"unknown backend {backend!r}")
 
 

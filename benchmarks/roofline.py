@@ -27,7 +27,6 @@ def rows():
     out = []
     for r in records():
         tag = f"roofline.{r['arch']}.{r['shape']}"
-        tot = r["t_compute"] + 1e-12
         out.append((f"{tag}.t_compute_s", r["t_compute"],
                     f"bottleneck={r['bottleneck']}"))
         out.append((f"{tag}.t_memory_s", r["t_memory"],

@@ -2,12 +2,9 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
 from repro.configs import get_arch
 from repro.configs.base import TrainConfig
 from repro.data.synthetic import make_batches
-from repro.models.registry import get_api
 from repro.training import train_loop
 from repro.training.serve_loop import greedy_generate
 
@@ -30,7 +27,6 @@ def main():
     print("strict == relaxed:", losses == strict_losses)
 
     # generation with the trained weights
-    api = get_api(cfg)
     params = {**state["dense"], "embed": state["embed"]}
     prompt = data.next(99)["tokens"][:2, :8]
     toks = greedy_generate(cfg, params, prompt, 8, max_seq=16)

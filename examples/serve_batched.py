@@ -89,7 +89,7 @@ def pool_main(args):
         expect = sum(1 for i in touched if int(i) in tier.cache._rows)
         new_rows = rng.standard_normal((touched.size, d)).astype(np.float32)
         ring.log_and_apply(step, region, touched, new_rows)
-        info = tier.poll_coherence()
+        tier.poll_coherence()
         got = tier.metrics.cache_invalidations - inval_before
         assert got == expect, (got, expect)
         # post-commit reads see the new rows (coherence, not just eviction)
@@ -112,7 +112,7 @@ def pool_main(args):
         print(f"[pool-serve] killed primary shard {primary}")
         reqs = make_requests(args.batch)
         out = tier.serve_batch(reqs)
-        for r, ids in zip(out, reqs):
+        for r, ids in zip(out, reqs, strict=True):
             np.testing.assert_allclose(r, table[ids], rtol=0, atol=0)
         lag = tier.staleness_bound()
         assert tier.failovers >= 1, "expected replica failover"

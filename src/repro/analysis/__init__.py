@@ -1,0 +1,32 @@
+"""Correctness tooling for the pool stack.
+
+Two prongs, one package:
+
+  * ``repro.analysis.checker`` — a runtime crash-consistency checker:
+    ``CheckedPool`` wraps any ``PoolDevice`` backend and shadow-tracks every
+    write/persist/crash/nmp per byte range, raising typed
+    ``OrderingViolation`` errors the moment the persistence discipline is
+    broken (unpersisted bytes read back after a crash, COMMIT persisted
+    before its payload, a write landing inside a published A/B slot,
+    use-after-free of a region's bytes). Enable with
+    ``make_pool(..., check=True)`` or ``REPRO_POOL_CHECK=1``; off the
+    default path otherwise.
+
+  * ``repro.analysis.lint`` — repo-specific static invariant lints
+    (``python -m repro.analysis.lint``): fault-point cross-referencing,
+    op-registry completeness, lock-order acyclicity, no socket I/O under a
+    device lock, and persist-point catalog sync.
+"""
+from repro.analysis.checker import (CheckedPool, CommitBeforePayloadError,
+                                    DoubleFreeError, OrderingViolation,
+                                    RegionOverlapError, ShadowTracker,
+                                    UnpersistedReadError, UseAfterFreeError,
+                                    WriteAfterPublishError, checking_enabled)
+from repro.analysis.points import POINT_ROLES, Role
+
+__all__ = [
+    "CheckedPool", "ShadowTracker", "OrderingViolation",
+    "UnpersistedReadError", "CommitBeforePayloadError",
+    "WriteAfterPublishError", "UseAfterFreeError", "DoubleFreeError",
+    "RegionOverlapError", "checking_enabled", "POINT_ROLES", "Role",
+]

@@ -7,6 +7,12 @@ from repro.configs.base import (ArchBundle, CheckpointConfig, MambaConfig,
                                 ModelConfig, MoEConfig, ShapeConfig, SHAPES,
                                 ShardingProfile, TrainConfig)
 
+__all__ = [
+    "ARCH_IDS", "ArchBundle", "CheckpointConfig", "DLRM_IDS", "MambaConfig",
+    "ModelConfig", "MoEConfig", "SHAPES", "ShapeConfig", "ShardingProfile",
+    "TrainConfig", "get_arch",
+]
+
 ARCH_IDS = [
     "tinyllama-1.1b", "qwen3-0.6b", "llama3.2-3b", "granite-20b",
     "qwen3-moe-235b-a22b", "arctic-480b", "rwkv6-3b", "whisper-base",

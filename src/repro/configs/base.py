@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence
+from typing import Optional
 
 import jax.numpy as jnp
 
@@ -147,9 +147,9 @@ class ModelConfig:
         if self.arch_type == "dlrm":
             bot = list(self.dlrm_bottom_mlp)
             top = list(self.dlrm_top_mlp)
-            dense = sum(a * b + b for a, b in zip(bot[:-1], bot[1:]))
+            dense = sum(a * b + b for a, b in zip(bot[:-1], bot[1:], strict=True))
             # top-mlp input: bottom output + interactions handled at init
-            dense += sum(a * b + b for a, b in zip(top[:-1], top[1:]))
+            dense += sum(a * b + b for a, b in zip(top[:-1], top[1:], strict=True))
             emb = self.dlrm_num_tables * self.dlrm_rows_per_table * bot[-1]
             counts.update(total=dense + emb, active=dense + emb, embedding=emb)
             return counts

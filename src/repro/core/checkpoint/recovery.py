@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -59,8 +59,9 @@ def open_pool(root: str,
     info = store.read_json(os.path.join(root, "POOL.json"))
     if info["backend"] == "remote":
         from repro.pool.remote import RemotePool
-        return RemotePool(info["addr"], tenant=info.get("tenant", "default"),
-                          quota=info.get("quota", 0))
+        return _maybe_check(
+            RemotePool(info["addr"], tenant=info.get("tenant", "default"),
+                       quota=info.get("quota", 0)))
     if info["backend"] == "sharded":
         # reconnect EVERY node of the recorded placement in order and
         # REPLAY the numbered epoch records: placement is re-derived from
@@ -82,12 +83,19 @@ def open_pool(root: str,
         if swept:
             print(f"[recovery] swept stale migration copies: "
                   f"{', '.join(f'{d}@shard{i}' for d, i in swept)}")
-        return dev
+        return _maybe_check(dev)
     if info["backend"] != "pmem":
         raise PoolError(
             f"pool backend {info['backend']!r} is volatile across processes; "
             "pass the surviving PoolDevice to recover(root, pool=...)")
-    return PmemPool.open(os.path.join(root, "pool.img"))
+    return _maybe_check(PmemPool.open(os.path.join(root, "pool.img")))
+
+
+def _maybe_check(dev):
+    """Honour ``REPRO_POOL_CHECK`` on the recovery reopen path too, so a
+    checked run stays checked across the power cycle."""
+    from repro.analysis.checker import CheckedPool, checking_enabled
+    return CheckedPool(dev) if checking_enabled() else dev
 
 
 def recover(root: str, pool: Optional[PoolDevice] = None) -> RecoveredState:

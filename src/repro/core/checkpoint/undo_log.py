@@ -259,7 +259,7 @@ class UndoRing:
                  hdr[4]) for _, slot, hdr in hits]
         blobs = self.device.read_batch(reqs, tag="undo-read")
         out = {}
-        for (s, _, hdr), stored in zip(hits, blobs):
+        for (s, _, hdr), stored in zip(hits, blobs, strict=True):
             _, n, d, flags, stored_len, crc = hdr
             stored = bytes(stored)
             out[s] = uc.decode_payload(stored, n, d, flags) \

@@ -85,7 +85,7 @@ def current_mode() -> str:
 def _axis_size(mesh, ax) -> int:
     if ax is None:
         return 1
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
     if isinstance(ax, tuple):
         n = 1
         for a in ax:

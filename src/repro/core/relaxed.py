@@ -24,7 +24,6 @@ on reduced vectors too, Fig. 8 bottom).
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ it is the host input pipeline).
 from __future__ import annotations
 
 import collections
-from typing import Any
 
 from repro.core import relaxed as rx
 

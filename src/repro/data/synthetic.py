@@ -8,7 +8,6 @@ citation (10)) and hence the RAW hazard / relaxed-lookup win realistic.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

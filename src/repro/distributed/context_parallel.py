@@ -59,14 +59,14 @@ def _local_body(q, k_cache, v_cache, new_k, new_v, pos, *, axes):
     s = jnp.where(valid[None, None, None, :], s, -1e30)
     m = s.max(axis=-1)                                          # (B,Hkv,G)
     p = jnp.exp(s - m[..., None])
-    l = p.sum(axis=-1)
+    denom = p.sum(axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p, vc.astype(jnp.float32))
 
     m_g = m
     for ax in axes:
         m_g = jax.lax.pmax(m_g, ax)
     alpha = jnp.exp(m - m_g)
-    l_g = jax.lax.psum(l * alpha, axes)
+    l_g = jax.lax.psum(denom * alpha, axes)
     o_g = jax.lax.psum(o * alpha[..., None], axes)
     out = (o_g / jnp.maximum(l_g, 1e-30)[..., None]).reshape(B, 1, Hq, D)
     return out.astype(q.dtype), kc, vc

@@ -166,18 +166,20 @@ def param_specs(params, rules: dict[str, Any] | None = None,
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in kp) for kp, _ in flat]
-    leaves = [spec_for(p, leaf) for p, (_, leaf) in zip(paths, flat)]
+    leaves = [spec_for(p, leaf) for p, (_, leaf) in zip(paths, flat, strict=True)]
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(params), leaves)
 
 
 def check_divisibility(params, specs, mesh: Mesh):
     """Downgrade spec axes whose size doesn't divide the dim (e.g. kv=1 GQA)."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
 
     def fix(leaf, spec):
         out = []
-        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+        for dim, ax in zip(leaf.shape,
+                           tuple(spec) + (None,) * (leaf.ndim - len(spec)),
+                           strict=False):
             if ax is None:
                 out.append(None)
                 continue

@@ -9,7 +9,6 @@ Backend selection:
 """
 from __future__ import annotations
 
-import functools
 import threading
 
 import jax
@@ -74,7 +73,6 @@ def combine_duplicates(idx, delta, num_rows: int):
     first = jnp.concatenate([jnp.ones((1,), bool), si[1:] != si[:-1]])
     seg = jnp.cumsum(first) - 1                     # dense segment ids
     combined = jax.ops.segment_sum(sd, seg, num_segments=idx.shape[0])
-    uniq = jnp.where(first, si, 0)
     uniq_slots = jax.ops.segment_max(si, seg, num_segments=idx.shape[0])
     n_uniq = seg[-1] + 1
     valid = jnp.arange(idx.shape[0]) < n_uniq

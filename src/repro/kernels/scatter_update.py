@@ -13,7 +13,6 @@ combine helper. D padded to a lane multiple by ops.py.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 

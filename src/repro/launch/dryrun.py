@@ -18,11 +18,9 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ARCH_IDS, DLRM_IDS, SHAPES, get_arch
-from repro.configs.base import TrainConfig
+from repro.configs import ARCH_IDS, SHAPES, get_arch
 from repro.distributed import sharding
 from repro.launch import mesh as mesh_lib
 from repro.models.registry import get_api
@@ -84,7 +82,7 @@ def build_rules(bundle, shape, mesh):
     prof = bundle.sharding
     cfg = bundle.model
     axes = set(mesh.axis_names)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
     tp = sizes.get("model", 1)
     dp = tuple(a for a in ("pod", "data") if a in axes)
     act_rules = {"batch": dp}
@@ -126,7 +124,7 @@ def state_shardings(state_struct, weight_rules, mesh, dp, cfg):
 def cache_shardings(cfg, cache_struct, mesh, dp, act_rules):
     """Path-pattern specs for KV caches / recurrent state."""
     cache_ax = act_rules.get("cache_seq")
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
 
     def nax(ax):
         if ax is None:
@@ -173,7 +171,7 @@ def cache_shardings(cfg, cache_struct, mesh, dp, act_rules):
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in kp) for kp, _ in flat]
     leaves = [NamedSharding(mesh, spec_for(p, leaf))
-              for p, (_, leaf) in zip(paths, flat)]
+              for p, (_, leaf) in zip(paths, flat, strict=True)]
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

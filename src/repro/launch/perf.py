@@ -14,7 +14,6 @@ import argparse
 import dataclasses
 import json
 
-import jax
 
 from repro.configs import SHAPES, get_arch
 from repro.launch import dryrun as dr

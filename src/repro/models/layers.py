@@ -8,9 +8,7 @@ Conventions:
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -151,8 +149,8 @@ def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
             s = jnp.where(cm[None, :, :], s, -1e30)
         m = s.max(axis=-1, keepdims=True)
         p = jnp.exp(s - m)
-        l = p.sum(axis=-1, keepdims=True)
-        o = jnp.einsum("bhts,bshd->bthd", (p / l).astype(v.dtype), v,
+        denom = p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bhts,bshd->bthd", (p / denom).astype(v.dtype), v,
                        preferred_element_type=jnp.float32)
         return o.astype(qi.dtype)                         # (B,Tq,H,D)
 
@@ -350,8 +348,8 @@ def chunked_softmax_xent(hidden, w_out, labels, *, chunk: int = 8192,
 
     def body(carry, xs):
         h, y, m = xs
-        l, c = chunk_loss(w_out, h, y, m)
-        return (carry[0] + l, carry[1] + c), None
+        li, c = chunk_loss(w_out, h, y, m)
+        return (carry[0] + li, carry[1] + c), None
 
     (loss, count), _ = jax.lax.scan(body, (0.0, 0.0), (hidden, labels, mask))
     return loss, count

@@ -111,7 +111,6 @@ def mamba_fwd(p, cfg, x, *, state=None, chunk: int = 128):
     """
     B, S, d = x.shape
     di = cfg.mamba.d_inner(d)
-    ds = cfg.mamba.d_state
     nh = di // HEAD_P
     xz = x @ p["in_proj"]
     xi, z = jnp.split(xz, 2, axis=-1)                         # (B,S,di) each

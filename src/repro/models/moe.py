@@ -17,7 +17,6 @@ so CPU tests exercise the identical code path.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -127,7 +126,7 @@ def moe_fwd(p, cfg, x):
         return out.astype(x.dtype), aux
 
     mesh = ctx.mesh
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
     tp = sizes.get("model", 1)
     e_loc = e // tp
     dp_rule = ctx.rules.get("batch") or ()

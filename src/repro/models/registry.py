@@ -2,10 +2,8 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
 
 from repro.models import dlrm, rwkv6, transformer, whisper
 

@@ -19,7 +19,6 @@ mix is the relu^2 FFN.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

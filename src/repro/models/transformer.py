@@ -10,8 +10,6 @@ dry-run. Heterogeneous stacks (jamba) scan over the repeating period group.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

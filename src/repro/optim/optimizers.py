@@ -8,7 +8,6 @@ Two tiers, matching the paper:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -39,7 +38,8 @@ def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0) -> Optimizer:
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {"m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params),
                 "t": jnp.zeros((), jnp.int32)}

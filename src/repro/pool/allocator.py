@@ -37,7 +37,7 @@ import json
 import struct
 import zlib
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 

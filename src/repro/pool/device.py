@@ -324,18 +324,23 @@ def make_pool(backend: str, *, path: Optional[str] = None,
               quota: int = 0, shards=None,
               placement=None, rebalance: float = 0.0,
               secret: str = "", readonly: bool = False,
-              timeout=None, wire=None) -> PoolDevice:
+              timeout=None, wire=None, check: Optional[bool] = None):
     """``timeout`` (remote/sharded only): a float rescales the per-op-class
     wire deadlines around it; a ``protocol.Timeouts`` pins them exactly.
     None keeps the registry's per-class defaults. ``wire`` pins the
     protocol revision to negotiate (1 or 2); None honours
-    ``REPRO_POOL_WIRE`` and otherwise asks for v2."""
+    ``REPRO_POOL_WIRE`` and otherwise asks for v2. ``check`` wraps the
+    device in the crash-consistency checker (``repro.analysis``); None
+    honours ``REPRO_POOL_CHECK`` — strictly off the default path."""
+    dev: PoolDevice
     if backend == "dram":
-        return DramPool(capacity, faults)
+        dev = DramPool(capacity, faults)
+        return _maybe_check(dev, check)
     if backend == "pmem":
         if not path:
             raise PoolError("pmem backend needs a file path")
-        return PmemPool(path, capacity, faults)
+        dev = PmemPool(path, capacity, faults)
+        return _maybe_check(dev, check)
     if backend == "remote":
         if not addr:
             raise PoolError("remote backend needs a server addr "
@@ -345,7 +350,7 @@ def make_pool(backend: str, *, path: Optional[str] = None,
                          readonly=readonly, timeout=timeout, wire=wire)
         if faults is not None:
             dev.faults = faults
-        return dev
+        return _maybe_check(dev, check)
     if backend == "sharded":
         if not shards:
             raise PoolError("sharded backend needs shard addrs "
@@ -360,6 +365,18 @@ def make_pool(backend: str, *, path: Optional[str] = None,
             dev.rebalance = RebalancePolicy(high=float(rebalance))
         if faults is not None:
             dev.faults = faults
-        return dev
+        return _maybe_check(dev, check)
     raise PoolError(f"unknown pool backend {backend!r} (want one of "
                     f"{BACKENDS})")
+
+
+def _maybe_check(dev: PoolDevice, check: Optional[bool]):
+    """Wrap ``dev`` in the crash-consistency checker when asked to
+    (explicitly or via ``REPRO_POOL_CHECK``)."""
+    if check is None:
+        from repro.analysis.checker import checking_enabled
+        check = checking_enabled()
+    if not check:
+        return dev
+    from repro.analysis.checker import CheckedPool
+    return CheckedPool(dev)

@@ -76,7 +76,7 @@ class NmpQueue:
         breaks = np.nonzero(np.diff(idx) > 1)[0]
         starts = idx[np.concatenate(([0], breaks + 1))].tolist()
         ends = idx[np.concatenate((breaks, [idx.size - 1]))].tolist()
-        for s, e in zip(starts, ends):
+        for s, e in zip(starts, ends, strict=True):
             region.mark_dirty(int(s) * row_bytes,
                               int(e - s + 1) * row_bytes)
 

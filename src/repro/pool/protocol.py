@@ -576,7 +576,7 @@ def unpack_batch(hdr: dict, body: bytes) -> list:
         raise _soft_wire_error(
             f"batch body {len(body)}B != declared {sum(lens)}B")
     out, pos = [], 0
-    for shdr, n in zip(ops, lens):
+    for shdr, n in zip(ops, lens, strict=True):
         if not isinstance(shdr, dict):
             raise _soft_wire_error("batch sub-header is not an object")
         out.append((shdr, body[pos:pos + int(n)]))

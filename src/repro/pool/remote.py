@@ -238,6 +238,14 @@ class RemotePool(PoolDevice):
         rh, _ = self._request({"op": "ensure", "nbytes": int(nbytes)})
         self._capacity = int(rh["capacity"])
 
+    def refresh_capacity(self) -> int:
+        """Re-read the device capacity gauge from the node. ``capacity`` is
+        otherwise a cached value piggybacked on hello/ensure/alloc replies —
+        stale when ANOTHER tenant grows the shared device."""
+        rh, _ = self._request({"op": "capacity"})
+        self._capacity = int(rh["capacity"])
+        return self._capacity
+
     def read(self, off: int, nbytes: int, tag: str = "read") -> np.ndarray:
         _, body = self._request({"op": "read", "off": int(off),
                                  "nbytes": int(nbytes), "tag": tag})

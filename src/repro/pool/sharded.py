@@ -262,7 +262,7 @@ class ShardedPool(PoolDevice):
                 dev = make_pool("remote", addr=spec, tenant=tenant,
                                 quota=quota, secret=secret,
                                 readonly=self.readonly, timeout=timeout,
-                                wire=wire)
+                                wire=wire, check=False)
             else:
                 dev = spec
             self.shards.append(_Shard(i, dev, tenant, quota,
@@ -341,7 +341,7 @@ class ShardedPool(PoolDevice):
         for shard, items in groups.values():
             blobs = shard.device.read_batch(
                 [(local, n) for _, local, n in items], tag=tag)
-            for (pos, _, _), blob in zip(items, blobs):
+            for (pos, _, _), blob in zip(items, blobs, strict=True):
                 out[pos] = blob
         return out
 
@@ -364,7 +364,7 @@ class ShardedPool(PoolDevice):
         for shard, items in groups.values():
             res = shard.device.nmp_batch(
                 [(kind, lr, kw) for _, kind, lr, kw in items])
-            for (pos, _, _, _), r in zip(items, res):
+            for (pos, _, _, _), r in zip(items, res, strict=True):
                 out[pos] = r
         return out
 
@@ -408,7 +408,7 @@ class ShardedPool(PoolDevice):
         dev = make_pool("remote", addr=addr, tenant=self.tenant,
                         quota=old.quota, secret=self._secret,
                         readonly=self.readonly, timeout=self._timeout,
-                        wire=self._wire)
+                        wire=self._wire, check=False)
         self.shards[i] = _Shard(i, dev, self.tenant, old.quota,
                                 readonly=self.readonly)
 

@@ -26,7 +26,6 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.checkpoint.undo_log import open_ring
 from repro.pool.allocator import PoolAllocator, Region
 from repro.pool.device import PoolDevice, PoolError, TenantIsolationError
 from repro.pool.metrics import PoolMetrics

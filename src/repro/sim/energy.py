@@ -9,7 +9,7 @@ is why PMEM can still beat it on MLP-heavy RMs where PMEM pays for logging.
 from __future__ import annotations
 
 from repro.sim import devices as dv
-from repro.sim.engine import SimResult, simulate
+from repro.sim.engine import simulate
 from repro.sim.models_rm import RMWorkload
 
 P = dv.POWER

@@ -19,7 +19,7 @@ class RMWorkload:
     consec_overlap: float = 0.8   # rows re-touched by next batch (ref (10))
 
     def _mlp_flops(self, dims, batch):
-        return 2 * batch * sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+        return 2 * batch * sum(a * b for a, b in zip(dims[:-1], dims[1:], strict=True))
 
     @property
     def bottom_flops(self):
@@ -35,11 +35,11 @@ class RMWorkload:
     @property
     def mlp_param_bytes(self):
         dims = self.bottom_mlp
-        n = sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+        n = sum(a * b for a, b in zip(dims[:-1], dims[1:], strict=True))
         feats = self.n_tables + 1
         top_in = self.dim + feats * (feats - 1) // 2
         dims = (top_in,) + self.top_mlp
-        n += sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+        n += sum(a * b for a, b in zip(dims[:-1], dims[1:], strict=True))
         return 4 * n
 
     @property

@@ -10,7 +10,6 @@ trainer's pool-resident mirror through the tier's batched, cached path.
 from __future__ import annotations
 
 import contextlib
-from typing import Any
 
 import jax
 import jax.numpy as jnp

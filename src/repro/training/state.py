@@ -1,9 +1,7 @@
 """TrainState pytree: params split into dense tier / embedding pool tier."""
 from __future__ import annotations
 
-from typing import Any
 
-import jax
 import jax.numpy as jnp
 
 

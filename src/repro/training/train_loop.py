@@ -20,8 +20,7 @@ manager hooks observe their outputs from the host side.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

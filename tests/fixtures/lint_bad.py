@@ -1,0 +1,51 @@
+"""Seeded-bad fixture for ``repro.analysis.lint``.
+
+Linted file-locally by ``tests/test_analysis.py`` to prove the linter
+exits nonzero with file:line diagnostics; the ``fixtures/`` directory is
+excluded from the project-mode pass, so nothing here counts as real
+arming/usage. Every construct below is a deliberate violation:
+
+  * a fault schedule arming a typo'd point that can never fire (R1a)
+  * a persist barrier whose point is not in ``POINT_ROLES`` (R1c)
+  * an nmp call naming an unregistered kind (R2d)
+  * two methods acquiring the same two locks in opposite orders (R3)
+  * a blocking socket send while holding the device lock (R4)
+"""
+import socket
+import threading
+
+from repro.pool.faults import FaultSchedule
+
+
+def misarmed_schedule():
+    # typo: the real barrier is spelled "undo-commit"
+    return FaultSchedule.crash_at("undo-comitt")
+
+
+def unregistered_point(dev):
+    dev.persist(0, 4, point="not-a-registered-point")
+
+
+def unknown_nmp_kind(dev, region):
+    return dev.nmp("gatherr", region, idx=[0])
+
+
+class DeadlockProne:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._send_lock = threading.Lock()
+        self.sock = socket.socket()
+
+    def a_then_b(self):
+        with self._lock:
+            with self._send_lock:
+                return True
+
+    def b_then_a(self):
+        with self._send_lock:
+            with self._lock:
+                return True
+
+    def slow_peer_stall(self, payload: bytes):
+        with self._lock:
+            self.sock.sendall(payload)

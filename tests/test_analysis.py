@@ -1,0 +1,472 @@
+"""Crash-consistency checker + repo-specific invariant lints.
+
+Three layers:
+
+  * known-bad persistence sequences each raise the exact typed
+    ``OrderingViolation`` (rules U/C/P/F), and the wrapper composes over
+    the dram, pmem and remote backends;
+  * the static linter (``repro.analysis.lint``) is clean on the real src
+    tree and loud — with file:line diagnostics — on the seeded bad fixture
+    in ``tests/fixtures/lint_bad.py``;
+  * arming drills for every named barrier the R1b dead-point rule flagged:
+    the migration/replica persist points, the undo-ring gc/grow-scrub
+    points, and the manager manifest points + the recovery rollback. Each
+    drill fires the real point through the real code path and proves the
+    retry/recovery stays consistent. The sharded drills run over
+    ``CheckedPool``-wrapped shard devices, so they double as the negative
+    proof that the epoch-publish and open-time-sweep paths are
+    persist-clean under the checker.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.checker import (CheckedPool, CommitBeforePayloadError,
+                                    DoubleFreeError, RegionOverlapError,
+                                    ShadowTracker, UnpersistedReadError,
+                                    UseAfterFreeError, WriteAfterPublishError)
+from repro.core.checkpoint.undo_log import UndoRing
+from repro.pool import (DramPool, FaultSchedule, InjectedCrash, PmemPool,
+                        PoolAllocator, PoolServer, ShardedPool)
+from repro.pool import undo_codec as uc
+from repro.pool.device import make_pool
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _dram_checked():
+    return make_pool("dram", capacity=1 << 20, check=True)
+
+
+def _domain_bytes(pool, domain):
+    out = {}
+    for name, r in PoolAllocator(pool).domain(domain).regions().items():
+        out[name] = bytes(pool.read(r.off, r.nbytes, tag="oracle"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# checker: known-bad sequences raise the right typed violation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["dram", "pmem"])
+def test_clean_two_barrier_flow_passes(tmp_path, backend):
+    """The paper's payload-then-COMMIT protocol is clean under the checker,
+    across a power cycle."""
+    dev = make_pool(backend, path=str(tmp_path / "p.img"),
+                    capacity=1 << 20, check=True)
+    assert isinstance(dev, CheckedPool)
+    r = PoolAllocator(dev).domain("d").alloc("ring", shape=(4096,),
+                                             dtype="uint8")
+    buf, _, _ = uc.pack_slot(1, np.arange(4, dtype=np.int64),
+                             np.ones((4, 8), np.float32), None,
+                             mode="none", slot_bytes=1024)
+    uc.write_slot(dev, r.off, buf)
+    dev.crash()
+    hdr = uc.parse_header(bytes(dev.read(r.off, uc.HDR.size)), 1024)
+    assert hdr is not None and hdr[0] == 1
+    dev.close()
+
+
+def test_commit_before_payload_raises():
+    """COMMIT barrier with the payload persist skipped = rule C."""
+    dev = _dram_checked()
+    r = PoolAllocator(dev).domain("d").alloc("ring", shape=(4096,),
+                                             dtype="uint8")
+    buf, _, _ = uc.pack_slot(1, np.arange(4, dtype=np.int64),
+                             np.ones((4, 8), np.float32), None,
+                             mode="none", slot_bytes=1024)
+    dev.write(r.off, buf)                       # payload never persisted
+    dev.write(r.off + uc.COMMIT_OFF, uc.COMMIT_SET)
+    with pytest.raises(CommitBeforePayloadError):
+        dev.persist(r.off + uc.COMMIT_OFF, 4, point="undo-commit")
+
+
+def test_unpersisted_read_after_crash_raises():
+    dev = _dram_checked()
+    r = PoolAllocator(dev).domain("d").alloc("x", shape=(64,), dtype="uint8")
+    dev.write(r.off, b"\x7f" * 64)              # no persist
+    dev.crash()
+    with pytest.raises(UnpersistedReadError):
+        dev.read(r.off, 64)
+
+
+def test_write_after_publish_raises_until_sibling_publish():
+    dev = _dram_checked()
+    dom = PoolAllocator(dev).domain("d")
+    dom.alloc("a", shape=(128,), dtype="uint8")
+    assert len(dev.tracker.sealed) == 1         # superblock slot sealed
+    lo, hi = dev.tracker.sealed[0]
+    with pytest.raises(WriteAfterPublishError):
+        dev.write(lo, b"\x00")
+    # the sibling publish supersedes the seal: the old slot is spare again
+    dom.alloc("b", shape=(128,), dtype="uint8")
+    assert len(dev.tracker.sealed) == 1
+    assert dev.tracker.sealed[0] != (lo, hi)
+
+
+def test_device_use_after_free_through_directory():
+    """The wrapper tracks region lifecycle by diffing the superblock the
+    allocator publishes — a read through a stale handle is caught."""
+    dev = _dram_checked()
+    dom = PoolAllocator(dev).domain("d")
+    r = dom.alloc("x", shape=(256,), dtype="uint8")
+    dev.write(r.off, b"z" * 256)
+    dev.persist(r.off, 256)
+    dom.free_region("x")
+    with pytest.raises(UseAfterFreeError):
+        dev.read(r.off, 16)
+
+
+def test_tracker_double_free_and_overlap():
+    t = ShadowTracker("t")
+    t.note_alloc(("d", "r"), 0x1000, 64)
+    t.note_free(("d", "r"), 0x1000, 64)
+    with pytest.raises(UseAfterFreeError):
+        t.note_read(0x1000, 8)
+    with pytest.raises(UseAfterFreeError):
+        t.note_write(0x1010, 8)
+    with pytest.raises(DoubleFreeError):
+        t.note_free(("d", "r"), 0x1000, 64)
+    t2 = ShadowTracker("t2")
+    t2.note_alloc("a", 0, 100)
+    with pytest.raises(RegionOverlapError):
+        t2.note_alloc("b", 50, 150)
+
+
+def test_checker_off_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_POOL_CHECK", raising=False)
+    dev = make_pool("dram", capacity=1 << 16)
+    assert isinstance(dev, DramPool)            # zero default-path overhead
+    dev = make_pool("dram", capacity=1 << 16, check=True)
+    assert isinstance(dev, CheckedPool)
+    monkeypatch.setenv("REPRO_POOL_CHECK", "1")
+    dev = make_pool("dram", capacity=1 << 16)
+    assert isinstance(dev, CheckedPool)
+    assert isinstance(dev.inner, DramPool)
+    dev = make_pool("dram", capacity=1 << 16, check=False)
+    assert isinstance(dev, DramPool)            # explicit opt-out wins
+
+
+def test_checked_remote_composes(tmp_path):
+    """The wrapper over a RemotePool: clean flow across a node power-cycle,
+    and rule U on a write the node never flushed."""
+    srv = PoolServer(DramPool(1 << 20), f"unix:{tmp_path}/r.sock").start()
+    try:
+        dev = make_pool("remote", addr=srv.addr, check=True)
+        assert isinstance(dev, CheckedPool)
+        r = PoolAllocator(dev).domain("d").alloc("x", shape=(64,),
+                                                 dtype="uint8")
+        dev.write(r.off, b"a" * 64)
+        dev.persist(r.off, 64)
+        dev.crash()                             # node power-cycle
+        assert bytes(dev.read(r.off, 64)) == b"a" * 64
+        dev.write(r.off, b"b" * 64)             # volatile on the node
+        dev.crash()
+        with pytest.raises(UnpersistedReadError):
+            dev.read(r.off, 64)
+        dev.close()
+    finally:
+        srv.shutdown(close_device=True)
+
+
+def test_refresh_capacity_sees_foreign_growth(tmp_path):
+    """Regression for the R2a lint finding: the ``capacity`` op had a server
+    arm but no client stub, so a client could never refresh its cached
+    gauge after another connection grew the shared device."""
+    from repro.pool.remote import RemotePool
+    srv = PoolServer(DramPool(1 << 20), f"unix:{tmp_path}/c.sock").start()
+    try:
+        a = RemotePool(srv.addr)
+        b = RemotePool(srv.addr)
+        cap0 = a.capacity
+        b.ensure(cap0 + (1 << 20))
+        assert a.capacity == cap0               # cached gauge is stale
+        got = a.refresh_capacity()
+        assert got >= cap0 + (1 << 20)
+        assert a.capacity == got == srv.device.capacity
+        a.close()
+        b.close()
+    finally:
+        srv.shutdown(close_device=True)
+
+
+# ---------------------------------------------------------------------------
+# the linter: clean on src, loud on the seeded fixture
+# ---------------------------------------------------------------------------
+
+
+def test_lint_clean_on_src_tree():
+    findings = lint.run([os.path.join(REPO, "src", "repro")])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_lint_flags_seeded_fixture():
+    fixture = os.path.join(REPO, "tests", "fixtures", "lint_bad.py")
+    findings = lint.run([fixture])
+    rules = {f.rule for f in findings}
+    assert {"R1a-typo-arm", "R1c-unregistered-point",
+            "R2d-unknown-nmp-kind", "R3-lock-cycle",
+            "R4-socket-under-lock"} <= rules, rules
+    for f in findings:                          # file:line diagnostics
+        assert f.path.endswith("lint_bad.py") and f.line > 0
+        assert str(f).startswith(f"{f.path}:{f.line}: [{f.rule}]")
+
+
+def test_lint_main_exit_codes(capsys):
+    assert lint.main([os.path.join(REPO, "src", "repro")]) == 0
+    fixture = os.path.join(REPO, "tests", "fixtures", "lint_bad.py")
+    assert lint.main([fixture]) == 1
+    assert "lint_bad.py:" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# arming drills: migration / replication barrier points
+# (sharded over CheckedPool-wrapped devices — the epoch-publish and sweep
+# paths must also be persist-clean under the checker)
+# ---------------------------------------------------------------------------
+
+
+def _checked_sharded(nshards=2):
+    return ShardedPool([CheckedPool(DramPool(1 << 20))
+                        for _ in range(nshards)])
+
+
+def _seed_mirror(pool, rng):
+    a = PoolAllocator(pool)
+    tab = rng.standard_normal((64, 8)).astype(np.float32)
+    mirror = a.domain("embedding-mirror").alloc("rows", shape=tab.shape,
+                                                dtype="float32")
+    mirror.write_array(tab)
+    mirror.persist(point="mirror-load")
+    return tab
+
+
+@pytest.mark.parametrize("point",
+                         ["migrate-alloc", "migrate-import", "migrate-gc"])
+def test_migration_barrier_points_fire(point):
+    """Crash at each per-region migration barrier: the copy is interrupted,
+    the sweep reclaims the stranded side, the surviving image is
+    bit-identical."""
+    rng = np.random.default_rng(7)
+    pool = _checked_sharded()
+    _seed_mirror(pool, rng)
+    src = pool.placement.place("embedding-mirror")
+    dst = 1 - src
+    oracle = _domain_bytes(pool, "embedding-mirror")
+    pool.faults = FaultSchedule.crash_at(point)
+    with pytest.raises(InjectedCrash):
+        pool.migrate_domain("embedding-mirror", dst)
+    pool.faults = None
+    pool.sweep_stale_domains()
+    # gc fires after the flip; the copy barriers fire before it
+    owner = dst if point == "migrate-gc" else src
+    assert pool.placement.place("embedding-mirror") == owner
+    assert _domain_bytes(pool, "embedding-mirror") == oracle
+    pool.close()
+
+
+def test_migrate_sweep_point_fires():
+    """Strand a source copy (crash after the flip, before gc), then crash
+    the sweep's own free barrier; the re-run sweep leaves one owner."""
+    rng = np.random.default_rng(13)
+    pool = _checked_sharded()
+    _seed_mirror(pool, rng)
+    src = pool.placement.place("embedding-mirror")
+    dst = 1 - src
+    oracle = _domain_bytes(pool, "embedding-mirror")
+    pool.faults = FaultSchedule.crash_at("migrate.post-flip-pre-gc")
+    with pytest.raises(InjectedCrash):
+        pool.migrate_domain("embedding-mirror", dst)
+    pool.faults = FaultSchedule.crash_at("migrate-sweep")
+    with pytest.raises(InjectedCrash):
+        pool.sweep_stale_domains()
+    pool.faults = None
+    pool.sweep_stale_domains()
+    assert "embedding-mirror" not in pool.shard_domains(src)
+    assert pool.placement.place("embedding-mirror") == dst
+    assert _domain_bytes(pool, "embedding-mirror") == oracle
+    pool.close()
+
+
+@pytest.mark.parametrize("point", ["replica-alloc", "replica-import",
+                                   "replica-watermark"])
+def test_replica_barrier_points_fire(point):
+    """Crash at each replica-refresh barrier, then retry clean: the replica
+    converges to the primary's bytes and the watermark lands."""
+    rng = np.random.default_rng(11)
+    pool = _checked_sharded()
+    tab = _seed_mirror(pool, rng)
+    src = pool.placement.place("embedding-mirror")
+    dst = 1 - src
+    pool.faults = FaultSchedule.crash_at(point)
+    with pytest.raises(InjectedCrash):
+        pool.replicate_domain("embedding-mirror", dst, watermark=3)
+    pool.faults = None
+    info = pool.replicate_domain("embedding-mirror", dst, watermark=5)
+    assert info["dst"] == dst and info["regions"] >= 1
+    rep = pool.shards[dst].list_regions(info["replica"])
+    assert "rows" in rep and "watermark" in rep
+    got = pool.shards[dst].device.read(
+        int(rep["rows"]["off"]), int(rep["rows"]["nbytes"]), tag="drill")
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.float32).reshape(tab.shape), tab)
+    pool.close()
+
+
+def test_epoch_publish_and_sweep_clean_under_checker(tmp_path):
+    """Negative proof (no persist-coverage gap): a full clean migration —
+    copy, epoch publish, source gc — plus the open-time sweep, with every
+    shard device wrapped in CheckedPool. Any missing persist in the publish
+    or sweep path would raise a typed violation here."""
+    rng = np.random.default_rng(17)
+    pool = _checked_sharded()
+    sink_file = str(tmp_path / "placement.json")
+
+    def sink(pm):
+        with open(sink_file, "w") as f:
+            json.dump(pm.to_json(), f)
+
+    pool.epoch_sink = sink
+    _seed_mirror(pool, rng)
+    a = PoolAllocator(pool)
+    ring = UndoRing(a, max_logs=4, compress="zlib")
+    idx = np.unique(rng.integers(0, 64, 12))
+    new = rng.standard_normal((idx.size, 8)).astype(np.float32)
+    ring.log_and_apply(0, a.domain("embedding-mirror").get("rows"), idx, new)
+    src = pool.placement.place("embedding-mirror")
+    dst = 1 - src
+    oracle = {d: _domain_bytes(pool, d)
+              for d in ("embedding-mirror", "undo-log")}
+    info = pool.migrate_domain("embedding-mirror", dst, compress="zlib")
+    assert "embedding-mirror" in info["moved"]
+    assert pool.sweep_stale_domains() == []     # clean flip GC'd the source
+    for dom, regions in oracle.items():
+        assert _domain_bytes(pool, dom) == regions
+    # the trackers saw real traffic on both sides and no rule fired
+    assert all(s.device.tracker.events["persist"] > 0 for s in pool.shards)
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# arming drills: undo-ring gc + grow-scrub
+# ---------------------------------------------------------------------------
+
+
+def test_undo_gc_point_fires():
+    dev = _dram_checked()
+    faults = FaultSchedule.drop_at("undo-gc")
+    dev.faults = faults
+    ring = UndoRing(PoolAllocator(dev), max_logs=2, compress="none")
+    rng = np.random.default_rng(3)
+    for step in range(5):
+        ring.append(step, np.arange(4, dtype=np.int64),
+                    rng.standard_normal((4, 8)).astype(np.float32))
+    ring.gc(3)
+    assert faults.counts.get("undo-gc", 0) >= 1
+    assert set(ring.committed_steps()) == {3, 4}
+
+
+def test_undo_grow_scrub_point_fires():
+    """Crash a ring grow right after the new generation's alloc published
+    (ring1 exists, meta still points at ring0); the re-attached writer's
+    next grow must scrub the half-built generation before reuse."""
+    dev = _dram_checked()
+    ring = UndoRing(PoolAllocator(dev), max_logs=2, compress="none")
+    rng = np.random.default_rng(5)
+    small_idx = np.arange(2, dtype=np.int64)
+    small = rng.standard_normal((2, 4)).astype(np.float32)
+    ring.append(0, small_idx, small)
+    dev.faults = FaultSchedule.crash_at("undo-grow-alloc")
+    big_idx = np.arange(64, dtype=np.int64)
+    big = rng.standard_normal((64, 32)).astype(np.float32)
+    with pytest.raises(InjectedCrash):
+        ring.append(1, big_idx, big)
+    scrub = FaultSchedule.drop_at("undo-grow-scrub", occurrence=10 ** 9)
+    dev.faults = scrub
+    ring2 = UndoRing(PoolAllocator(dev), max_logs=2, compress="none")
+    ring2.append(1, big_idx, big)               # grow reuses + scrubs ring1
+    assert scrub.counts.get("undo-grow-scrub", 0) >= 1
+    got_idx, got_rows, _ = ring2.read(0)        # carried over intact
+    np.testing.assert_array_equal(got_idx, small_idx)
+    np.testing.assert_array_equal(got_rows, small)
+    g1_idx, g1_rows, _ = ring2.read(1)
+    np.testing.assert_array_equal(g1_idx, big_idx)
+    np.testing.assert_array_equal(g1_rows, big)
+
+
+# ---------------------------------------------------------------------------
+# arming drills: manager manifest points + recovery rollback
+# ---------------------------------------------------------------------------
+
+
+def _smoke_setup(tmp, dense_interval=1):
+    from repro.configs import get_arch
+    from repro.configs.base import CheckpointConfig, TrainConfig
+    from repro.data.synthetic import make_batches
+    cc = CheckpointConfig(directory=tmp, dense_interval=dense_interval,
+                          pool_backend="pmem", pool_compress="zlib")
+    b = get_arch("tinyllama-1.1b", smoke=True)
+    tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
+    data = make_batches(b.model, 4, 16, seed=3)
+    return b, tc, cc, data
+
+
+def test_manager_manifest_points_fire(tmp_path):
+    """Silent drop faults on the manifest barriers and the apply/manifest
+    control window: all three fire during a short run (counted by the
+    shared schedule) and training still completes."""
+    import jax
+
+    from repro.core.checkpoint.manager import CheckpointManager
+    from repro.training import train_loop
+    b, tc, cc, data = _smoke_setup(str(tmp_path / "ck"))
+    faults = FaultSchedule.drop_at("manifest-init", occurrence=10 ** 9) \
+        .chain(FaultSchedule.drop_at("manifest-dense", occurrence=10 ** 9)) \
+        .chain(FaultSchedule.drop_at("tier_e.between-apply-and-manifest",
+                                     occurrence=10 ** 9))
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"],
+                            faults=faults)
+    train_loop.train(b.model, tc, data, 3, relaxed=True, state=st0,
+                     ckpt_manager=mgr)
+    mgr.flush()
+    for point in ("manifest-init", "manifest-dense",
+                  "tier_e.between-apply-and-manifest"):
+        assert faults.counts.get(point, 0) >= 1, point
+    mgr.pool.close()
+
+
+def test_rollback_point_fires_on_recovery(tmp_path):
+    """Crash between the mirror apply and the manifest advance: recovery
+    finds a COMMITted entry newer than the manifest and rolls it back
+    through the named ``rollback`` barrier."""
+    import jax
+
+    from repro.core.checkpoint import recovery
+    from repro.core.checkpoint.manager import CheckpointManager
+    from repro.training import train_loop
+    tmp = str(tmp_path / "ck")
+    b, tc, cc, data = _smoke_setup(tmp, dense_interval=0)
+    faults = FaultSchedule.crash_at("tier_e.between-apply-and-manifest",
+                                    occurrence=4)
+    init_fn, _, _, _ = train_loop.make_step_fns(b.model, tc)
+    st0 = init_fn(jax.random.PRNGKey(tc.seed))
+    mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"],
+                            faults=faults)
+    with pytest.raises(InjectedCrash):
+        train_loop.train(b.model, tc, data, 6, relaxed=True, state=st0,
+                         ckpt_manager=mgr)
+    mgr.pool.close()
+    dev = PmemPool.open(os.path.join(tmp, "pool.img"))
+    sched = FaultSchedule.drop_at("rollback", occurrence=10 ** 9)
+    dev.faults = sched                          # pure occurrence counter
+    rec = recovery.recover(tmp, pool=dev)
+    assert rec.rolled_back and rec.mirror_step == 2
+    assert sched.counts.get("rollback", 0) >= 1
+    dev.close()

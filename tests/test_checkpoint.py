@@ -17,7 +17,7 @@ from repro.configs.base import CheckpointConfig, TrainConfig
 from repro.core.checkpoint import recovery, store
 from repro.core.checkpoint.manager import CheckpointManager
 from repro.data.synthetic import make_batches
-from repro.pool import DramPool, FaultSchedule, InjectedCrash, PoolAllocator
+from repro.pool import DramPool, FaultSchedule, InjectedCrash
 from repro.training import train_loop
 
 BACKENDS = [b.strip() for b in os.environ.get(

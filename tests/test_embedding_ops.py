@@ -77,15 +77,15 @@ def test_auto_strategy_picks_by_traffic():
 
 
 @settings(deadline=None, max_examples=10)
-@given(seed=st.integers(0, 99), b=st.integers(1, 6), l=st.integers(1, 8))
-def test_property_bag_sum(seed, b, l):
+@given(seed=st.integers(0, 99), b=st.integers(1, 6), k=st.integers(1, 8))
+def test_property_bag_sum(seed, b, k):
     rng = np.random.default_rng(seed)
     tables = jnp.asarray(rng.standard_normal((2, 16, 4)).astype(np.float32))
-    ids = jnp.asarray(rng.integers(0, 16, (b, 2, l)).astype(np.int32))
+    ids = jnp.asarray(rng.integers(0, 16, (b, 2, k)).astype(np.int32))
     got = eo.bag_lookup(tables, ids)
     want = np.zeros((b, 2, 4), np.float32)
     for bi in range(b):
         for t in range(2):
-            for li in range(l):
+            for li in range(k):
                 want[bi, t] += np.asarray(tables)[t, int(ids[bi, t, li])]
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)

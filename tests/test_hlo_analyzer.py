@@ -2,7 +2,6 @@
 programs and correctly multiply scan bodies by trip count."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.utils.hlo import analyze, parse_hlo
 
@@ -66,7 +65,6 @@ def test_dus_counted_as_slice():
 
 
 def test_collectives_with_trips():
-    import os
     if jax.device_count() < 2:
         import pytest
         pytest.skip("needs >= 2 devices (dry-run only)")

@@ -1,6 +1,5 @@
 """Pallas kernel validation: interpret-mode vs pure-jnp oracles over
 shape/dtype sweeps (+ hypothesis randomized shapes)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -24,7 +24,7 @@ from repro.core.checkpoint.undo_log import UndoRing
 from repro.data.synthetic import make_batches
 from repro.pool import (DramPool, FaultSchedule, InjectedCrash, PlacementMap,
                         PmemPool, PoolAllocator, PoolError, PoolServer,
-                        RebalancePolicy, ShardedPool)
+                        ShardedPool)
 from repro.pool.sharded import MIGRATE_WINDOWS, SHARD_SPAN
 from repro.training import train_loop
 

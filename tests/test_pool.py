@@ -153,7 +153,7 @@ def test_two_allocators_share_one_directory(backend, tmp_path):
     r2 = a2.domain("d").alloc("y", shape=(64,), dtype="float32")
     r3 = a1.domain("d").alloc("z", shape=(64,), dtype="float32")
     offs = sorted([(r.off, r.off + r.nbytes) for r in (r1, r2, r3)])
-    for (s1, e1), (s2, _) in zip(offs, offs[1:]):
+    for (_s1, e1), (s2, _) in zip(offs, offs[1:], strict=False):
         assert e1 <= s2, f"overlapping regions: {offs}"
     assert a2.domain("d").get("z").off == r3.off    # visible via re-sync
 

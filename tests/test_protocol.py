@@ -2,7 +2,6 @@
 op registry as the ONE op table, pipelined request/response correlation
 (fence-on-desync retired), scatter-gather batch frames, torn-frame isolation
 mid-pipeline, keepalives on quiet connections, and per-op timeout classes."""
-import json
 import socket
 import struct
 import threading
@@ -13,8 +12,7 @@ import pytest
 
 from repro.pool import (DramPool, PmemPool, PoolAllocator,
                         PoolConnectionError, PoolError, PoolServer,
-                        PoolTimeoutError, RemotePool, ShardedPool, Timeouts,
-                        make_pool)
+                        PoolTimeoutError, RemotePool, Timeouts, make_pool)
 from repro.pool import protocol, remote, server, sharded
 from repro.pool.protocol import (WIRE_V1, WIRE_V2, PoolChannel, recv_frame,
                                  send_frame, wire_from_env)
@@ -350,7 +348,7 @@ def test_sharded_batch_routing_preserves_order(tmp_path):
         owners = {pool.shard_of(r.off)[0].index for _, r in regs}
         assert owners == {0, 1}              # the batch really spans nodes
         got = pool.read_batch([(r.off, 16) for _, r in regs])
-        for (dom, _), blob in zip(regs, got):
+        for (dom, _), blob in zip(regs, got, strict=True):
             assert bytes(blob) == bytes([ord(dom[0])] * 16), dom
         pool.close()
     finally:

@@ -15,9 +15,7 @@ from repro.pool import (DramPool, FaultSchedule, InjectedCrash, NmpQueue,
                         PmemPool, PoolAllocator, PoolAuthError,
                         PoolConnectionError, PoolError, PoolServer,
                         QuotaExceededError, RemotePool,
-                        TenantIsolationError, WireError, make_pool,
-                        parse_addr)
-from repro.pool.allocator import DATA_START
+                        TenantIsolationError, make_pool, parse_addr)
 from repro.pool.remote import recv_frame, send_frame
 
 # CI matrixes pool-side compression over {none, zlib}; the fused-path

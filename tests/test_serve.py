@@ -11,7 +11,7 @@ import pytest
 
 from repro.core.checkpoint.undo_log import UndoRing, open_ring
 from repro.pool import (DramPool, NmpQueue, PmemPool, PoolAllocator,
-                        PoolError, PoolServer, RemotePool, ShardedPool,
+                        PoolServer, RemotePool, ShardedPool,
                         TenantIsolationError, replica_domain)
 from repro.serve import (CommitTailer, EmbeddingServeTier, HotRowCache,
                          ReplicaReader, RequestBatcher, make_commit_hook)

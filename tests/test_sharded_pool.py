@@ -183,7 +183,7 @@ def test_cross_tenant_isolation_enforced_per_shard(tmp_path, rng):
         assert shard_index(regions["d0"].off) == 0
         assert shard_index(regions["d1"].off) == 1
         eve = ShardedPool(addrs, tenant="eve", pin={"d0": 0, "d1": 1})
-        for dom, r in regions.items():
+        for r in regions.values():
             with pytest.raises(TenantIsolationError):
                 eve.read(r.off, r.nbytes)
             with pytest.raises(TenantIsolationError):

@@ -1,12 +1,8 @@
 """End-to-end behaviour tests: losses decrease, full train->crash->resume
 cycle, data determinism, gradient compression."""
-import os
-import shutil
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch
 from repro.configs.base import CheckpointConfig, TrainConfig
