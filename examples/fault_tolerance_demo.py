@@ -17,7 +17,13 @@ Four drills, selected by the pool backend:
     over its pmem image, reconnects the whole topology via POOL.json,
     recovers bit-identically, and resumes. Prints per-shard counters and
     checks the fused undo capture kept running on the owning shard (per-step
-    trainer link bytes stay <= idx + new_rows + O(header)).
+    trainer link bytes stay <= idx + new_rows + O(header)). Then the
+    live-migration rebalance act, and finally the PERMANENT node-loss act:
+    commit-coupled replication of the checkpoint domains onto a spare node,
+    ``kill -9`` of the mirror's node with its backing image deleted — it is
+    NEVER restarted — one-epoch promotion of the replica copies, recovery
+    bit-identical up to the replication watermark, and continued training
+    on the survivors alone.
   * ``--pool-backend pmem``: process death without a server. The trainer
     subprocess is SIGKILLed and recovery reopens the mmap'd pool image from
     disk, like a power-cycled PMEM module.
@@ -428,6 +434,128 @@ def rebalance_act(args, b, tc, data, state, start_step, mgr, servers,
     rec2.pool.close()
 
 
+def node_loss_act(args, b, data, init_fn, servers):
+    """The permanent-loss act: enable commit-coupled replication of the
+    checkpoint domains onto a spare node, ``kill -9`` the node owning the
+    mirror + undo ring AND delete its backing image — it is never restarted
+    — promote the replica copies in ONE placement epoch, recover
+    bit-identically up to the replication watermark, and keep training on
+    the survivors alone."""
+    import signal as sg
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import CheckpointConfig, TrainConfig
+    from repro.core.checkpoint import recovery
+    from repro.core.checkpoint.manager import CheckpointManager
+    from repro.pool import PoolError
+    from repro.training import train_loop
+
+    rec = recovery.recover(CKPT)
+    pool = rec.pool
+    addrs = list(pool.placement.shards)
+    n = len(addrs)
+    home = pool.placement.place("embedding-mirror")
+    spare = (home + 1) % n
+    print(f"== NODE-LOSS ACT: mirror+undo on node {home}; checkpoint "
+          f"replica -> node {spare} ==")
+    # placement hygiene first: only the mirror group may live on the doomed
+    # node; manifest and dense stay primary on the survivors
+    pool.epoch_sink = lambda pm: recovery.record_placement(CKPT, pool)
+    for dom in ("manifest", "dense"):
+        if pool.placement.place(dom) == home:
+            pool.migrate_domain(dom, spare)
+            print(f"== drained {dom} off node {home} -> node {spare} ==")
+    cc = CheckpointConfig(directory=CKPT, dense_interval=0,
+                          pool_backend="sharded",
+                          pool_shards=",".join(addrs), pool_tenant="trainer",
+                          pool_replica=spare, pool_replica_every=2,
+                          pool_ckpt_replica=spare,
+                          pool_manifest_quorum=n >= 3)
+    tc = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01,
+                     checkpoint=cc)
+    st, resume = recovery.resume_train_state(
+        rec, init_fn(jax.random.PRNGKey(0)))
+    mgr = CheckpointManager(b.model, cc, pool=pool)
+    mgr.init_mirror(st["embed"], step=rec.mirror_step)
+    mirrors = {}
+    state = st
+    for k in range(8):
+        state, _ = train_loop.train(b.model, tc, data, 1, relaxed=True,
+                                    state=state, start_step=resume + k,
+                                    ckpt_manager=mgr)
+        mgr.flush()
+        mirrors[resume + k] = np.array(mgr.mirror_rows)
+    last = resume + 7
+    print(f"== replication on: {mgr.stats['ship_steps']} commit-coupled "
+          f"ships ({mgr.stats['ship_link_bytes']}B slots+manifest), "
+          f"{mgr.stats['replica_refreshes']} mirror refreshes "
+          f"({mgr.stats['replica_link_bytes']}B) ==")
+
+    # the node dies FOR GOOD: kill -9, image deleted, never restarted
+    os.kill(servers[home].pid, sg.SIGKILL)
+    servers[home].wait()
+    os.remove(os.path.join(CKPT, f"node{home}.img"))
+    print(f"== kill -9'd memory node {home} ({addrs[home]}) and DELETED "
+          f"its image — this node is never coming back ==")
+    try:
+        train_loop.train(b.model, tc, data, 10, relaxed=True, state=state,
+                         start_step=last + 1, ckpt_manager=mgr)
+        mgr.flush()
+        raise SystemExit("node loss never surfaced")
+    except (RuntimeError, PoolError) as e:
+        print(f"== trainer died of the node loss ({type(e).__name__}) ==")
+    mgr.pool.close()
+
+    # survivors-only reopen; promote the replica copies in ONE epoch
+    pool2 = recovery.open_pool(CKPT)
+    assert pool2.dead_shards() == [home]
+    epoch0 = pool2.placement.epoch
+    pool2.epoch_sink = lambda pm: recovery.record_placement(CKPT, pool2)
+    info = pool2.promote_replica("embedding-mirror")
+    assert set(info["promoted"]) == {"embedding-mirror", "undo-log"}
+    assert info["epoch"] == epoch0 + 1, "promotion must be ONE epoch flip"
+    print(f"== promoted {'+'.join(info['promoted'])} -> node {spare} in "
+          f"ONE epoch ({info['epoch']}); {info['link_bytes']}B local copy, "
+          f"no wire to the dead node ==")
+    pool2.close()
+
+    rec2 = recovery.recover(CKPT)
+    wm = rec2.mirror_step
+    np.testing.assert_array_equal(rec2.embed_rows, mirrors[wm])
+    print(f"== recovered BIT-IDENTICAL through the replication watermark "
+          f"(step {wm}, manifest@{last}, rolled_back={rec2.rolled_back}) ==")
+
+    cc2 = CheckpointConfig(directory=CKPT, dense_interval=0,
+                           pool_backend="sharded",
+                           pool_shards=",".join(addrs),
+                           pool_tenant="trainer")
+    tc2 = TrainConfig(learning_rate=3e-4, embed_learning_rate=0.01,
+                      checkpoint=cc2)
+    st2, resume2 = recovery.resume_train_state(
+        rec2, init_fn(jax.random.PRNGKey(0)))
+    mgr2 = CheckpointManager(b.model, cc2, pool=rec2.pool)
+    mgr2.init_mirror(st2["embed"], step=rec2.mirror_step)
+    st2, losses = train_loop.train(b.model, tc2, data, 6, relaxed=True,
+                                   state=st2, start_step=resume2,
+                                   ckpt_manager=mgr2)
+    mgr2.flush()
+    print(f"== resumed on the survivors at step {resume2}, 6 more steps, "
+          f"final loss {losses[-1]:.4f} ==")
+    mirror_final = np.array(mgr2.mirror_rows)
+    mgr2.pool.close()
+    rec3 = recovery.recover(CKPT)      # the dead node stays dead
+    np.testing.assert_array_equal(rec3.embed_rows, mirror_final)
+    print(f"== post-promotion recovery bit-identical through step "
+          f"{rec3.mirror_step}; node {home} still absent ==")
+    for i, s in enumerate(rec3.pool.shard_metrics()):
+        state_s = "UNREACHABLE" if s.get("unreachable") else \
+            f"used={s['used_bytes']}B link={s['link_bytes']}B"
+        print(f"  shard {i}: {state_s}")
+    rec3.pool.close()
+
+
 def run_recovery(args, surviving_pool, servers=None):
     import jax
     import numpy as np
@@ -491,6 +619,7 @@ def run_recovery(args, surviving_pool, servers=None):
     if sharded:
         rebalance_act(args, b, tc, data, st2, resume + 10, mgr, servers,
                       init_fn)
+        node_loss_act(args, b, data, init_fn, servers)
 
 
 if __name__ == "__main__":

@@ -360,6 +360,115 @@ def serve_cell(ctx, seed, work, nshards=2):
             server.shutdown(close_device=True)
 
 
+def node_loss_cell(ctx, seed, work, nshards=3):
+    """Seeded permanent-node-loss drill (one cell): train on a 3-node
+    sharded pool with commit-coupled checkpoint replication and the 2-of-3
+    manifest quorum armed, then ``kill -9`` the shard hosting the mirror +
+    undo ring AND delete its backing image — the node never comes back:
+
+      * the replica shard is promoted under the real domain names in ONE
+        placement epoch (no wire traffic to the dead node);
+      * recovery replays the shipped undo ring over the promoted copy and
+        must land bit-identically on the replication-watermark state;
+      * the manifest majority survives the loss, and the resumed tail on
+        the two survivors stays consistent with the reference run.
+    """
+    b, tc, data, init_fn, full_losses = ctx
+    src = seed % nshards                 # doomed: hosts mirror + undo ring
+    dst = (src + 1) % nshards            # replica destination
+    other = (src + 2) % nshards          # manifest primary + dense tier
+    servers, addrs, imgs = [], [], []
+    for i in range(nshards):
+        imgs.append(os.path.join(work, f"loss{i}.img"))
+        dev = PmemPool(imgs[i], 1 << 22)
+        servers.append(PoolServer(
+            dev, "unix:" + os.path.join(work, f"loss{i}.sock")).start())
+        addrs.append(servers[i].addr)
+    root = os.path.join(work, "ck")
+    cc = CheckpointConfig(
+        directory=root, dense_interval=1, pool_backend="sharded",
+        pool_shards=",".join(addrs), pool_tenant=f"loss-{seed}",
+        pool_placement=(f"embedding-mirror={src},manifest={other},"
+                        f"dense={other}"),
+        pool_replica=dst, pool_replica_every=2,
+        pool_ckpt_replica=dst, pool_manifest_quorum=True)
+    try:
+        st0 = init_fn(jax.random.PRNGKey(tc.seed))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+        snaps = {}
+
+        def snapshot(step, idx):
+            snaps[step] = np.array(mgr.mirror_rows)
+
+        mgr.add_commit_hook(snapshot)
+        train_loop.train(b.model, tc, data, STEPS, relaxed=True, state=st0,
+                         ckpt_manager=mgr)
+        mgr.flush()
+        assert mgr.stats["ship_steps"] == STEPS, "a committed step unshipped"
+        assert mgr.stats["ship_full_refreshes"] >= 1
+        ship_bytes = mgr.stats["ship_link_bytes"]
+
+        # the node is gone FOR GOOD: killed, image unlinked, never restarted
+        servers[src].shutdown(close_device=True)
+        os.unlink(imgs[src])
+        try:
+            mgr.pool.close()
+        except PoolError:
+            pass
+
+        # survivors-only reopen; the promotion flip is ONE placement epoch,
+        # made durable through the recovery-side placement sink
+        pool = recovery.open_pool(root)
+        assert pool.dead_shards() == [src], "dead-node census wrong"
+        epoch0 = pool.placement.epoch
+        pool.epoch_sink = lambda pm: recovery.record_placement(root, pool)
+        info = pool.promote_replica("embedding-mirror")
+        assert set(info["promoted"]) == {"embedding-mirror", "undo-log"}
+        assert info["epoch"] == epoch0 + 1, "promotion took >1 epoch"
+        assert all(d == dst for d in info["dst"].values())
+        pool.close()
+
+        rec = recovery.recover(root)
+        # the replica was refreshed every 2 steps, so the watermark is the
+        # last even step; the shipped undo ring rolled the overhang back
+        assert rec.mirror_step == STEPS - 2, \
+            f"expected watermark {STEPS - 2}, got {rec.mirror_step}"
+        assert rec.rolled_back
+        assert rec.pool.placement.place("embedding-mirror") == dst
+        np.testing.assert_array_equal(
+            np.asarray(rec.embed_rows), snaps[rec.mirror_step])
+
+        # resume on the two survivors: the tail must stay consistent
+        st, resume = recovery.resume_train_state(
+            rec, init_fn(jax.random.PRNGKey(tc.seed)))
+        n_tail = STEPS - resume
+        if n_tail > 0:
+            _, tail = train_loop.train(b.model, tc, data, n_tail,
+                                       relaxed=True, state=st,
+                                       start_step=resume)
+            tail = np.asarray(tail)
+            assert np.isfinite(tail).all(), "post-promotion losses diverged"
+            if rec.gap == 0:
+                np.testing.assert_allclose(
+                    tail, np.asarray(full_losses[resume:]),
+                    rtol=1e-5, atol=1e-6)
+        snap = rec.pool.metrics.snapshot()
+        rec.pool.close()
+        return {"backend": "sharded-node-loss", "seed": seed,
+                "kind": "node-loss", "crashed": True,
+                "mirror_step": rec.mirror_step,
+                "dense_step": rec.dense_step,
+                "rolled_back": rec.rolled_back,
+                "dead_shard": src,
+                "promote_epoch": info["epoch"],
+                "promoted": sorted(info["promoted"]),
+                "ship_link_bytes": ship_bytes,
+                "metrics": snap}
+    finally:
+        for server in servers:
+            server.shutdown(close_device=True)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backends", default="pmem,remote")
@@ -376,6 +485,12 @@ def main(argv=None):
                          "training, primary node killed, replica must keep "
                          "serving within the staleness bound, recovery "
                          "reads bit-exact)")
+    ap.add_argument("--node-loss", type=int, default=0,
+                    help="run N seeded permanent-node-loss cells (kill the "
+                         "mirror+undo shard AND delete its image, promote "
+                         "the checkpoint replica in one epoch, recover "
+                         "bit-identically at the replication watermark, "
+                         "resume on the survivors)")
     ap.add_argument("--out", default="soak_metrics.json")
     args = ap.parse_args(argv)
 
@@ -455,6 +570,26 @@ def main(argv=None):
             failures.append({"backend": "sharded-serve", "seed": seed,
                              "error": f"{type(e).__name__}: {e}"})
             print(f"soak[sharded-serve seed={seed}] FAILED: {e}",
+                  flush=True)
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
+
+    for seed in range(args.node_loss):
+        work = tempfile.mkdtemp(prefix=f"soak_loss_{seed}_")
+        try:
+            cell = node_loss_cell(ctx, seed, work,
+                                  nshards=max(args.shards, 3))
+            results.append(cell)
+            print(f"soak[sharded-node-loss seed={seed}] OK: "
+                  f"dead={cell['dead_shard']} "
+                  f"epoch={cell['promote_epoch']} "
+                  f"watermark@{cell['mirror_step']} "
+                  f"shipped={cell['ship_link_bytes']}B", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append({"backend": "sharded-node-loss", "seed": seed,
+                             "error": f"{type(e).__name__}: {e}"})
+            print(f"soak[sharded-node-loss seed={seed}] FAILED: {e}",
                   flush=True)
         finally:
             shutil.rmtree(work, ignore_errors=True)

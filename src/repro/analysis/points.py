@@ -55,6 +55,9 @@ POINT_ROLES: dict[str, Role] = {
     "migrate-gc": Role.PUBLISH,
     "migrate-sweep": Role.PUBLISH,
     "replica-alloc": Role.PUBLISH,
+    "replica-gc": Role.PUBLISH,
+    "promote-alloc": Role.PUBLISH,
+    "promote-gc": Role.PUBLISH,
     # JsonRegion A/B publishes (manifest + friends)
     "manifest": Role.PUBLISH,
     "manifest-init": Role.PUBLISH,
@@ -62,6 +65,7 @@ POINT_ROLES: dict[str, Role] = {
     "manifest-dense": Role.PUBLISH,
     "undo-meta": Role.PUBLISH,
     "replica-watermark": Role.PUBLISH,
+    "manifest-witness": Role.PUBLISH,
     # the paper's two-barrier undo protocol
     "undo-payload": Role.PAYLOAD,
     "undo-commit": Role.COMMIT,
@@ -74,6 +78,7 @@ POINT_ROLES: dict[str, Role] = {
     "dense-blob": Role.PAYLOAD,
     "migrate-import": Role.PAYLOAD,
     "replica-import": Role.PAYLOAD,
+    "promote-import": Role.PAYLOAD,
     # migration / replication crash windows (sharded._hit)
     "migrate.pre-copy": Role.WINDOW,
     "migrate.mid-copy": Role.WINDOW,
@@ -82,6 +87,11 @@ POINT_ROLES: dict[str, Role] = {
     "replica.pre-copy": Role.WINDOW,
     "replica.mid-copy": Role.WINDOW,
     "replica.post-copy": Role.WINDOW,
+    "replica.commit-ship": Role.WINDOW,
+    "promote.pre-copy": Role.WINDOW,
+    "promote.mid-copy": Role.WINDOW,
+    "promote.post-copy-pre-flip": Role.WINDOW,
+    "promote.post-flip": Role.WINDOW,
     # manager/nmp pipeline-stage fault points
     "tier_e.between-commit-and-apply": Role.CONTROL,
     "tier_e.between-apply-and-manifest": Role.CONTROL,

@@ -236,6 +236,19 @@ class CheckpointConfig:
                                    # (-1 = no replica)
     pool_replica_every: int = 1    # refresh the replica every K committed
                                    # steps (the serving staleness bound)
+    pool_ckpt_replica: int = -1    # sharded: shard index holding the
+                                   # commit-coupled replica of the
+                                   # CHECKPOINT domains (undo-log +
+                                   # manifest) — each committed undo slot
+                                   # ships on commit, so a permanent loss
+                                   # of the primary shard is survivable by
+                                   # replica promotion (-1 = off)
+    pool_manifest_quorum: bool = False
+                                   # sharded (>=3 nodes): keep 2 witness
+                                   # manifest copies on distinct shards;
+                                   # recovery elects the 2-of-3 majority by
+                                   # sealed seq, so losing ANY single
+                                   # manifest copy is tolerated
     pool_timeout: Optional[float] = None
                                    # remote/sharded: rescale the per-op-class
                                    # wire deadlines (control/data/bulk/

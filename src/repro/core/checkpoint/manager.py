@@ -46,7 +46,7 @@ from repro.core.checkpoint import store
 from repro.core.checkpoint.undo_log import UndoRing
 from repro.pool import compress as pool_compress
 from repro.pool.allocator import JsonRegion, PoolAllocator
-from repro.pool.device import PoolDevice, make_pool
+from repro.pool.device import PoolDevice, PoolError, make_pool
 from repro.pool.faults import FaultSchedule, InjectedCrash
 from repro.pool.nmp import NmpQueue
 
@@ -94,8 +94,15 @@ class CheckpointManager:
                       "undo_raw_bytes": 0, "undo_stored_bytes": 0,
                       "dense_stored_bytes": 0,
                       "migrations": 0, "migration_link_bytes": 0,
-                      "replica_refreshes": 0, "replica_link_bytes": 0}
+                      "replica_refreshes": 0, "replica_link_bytes": 0,
+                      "replica_refresh_failures": 0,
+                      "ship_steps": 0, "ship_link_bytes": 0,
+                      "ship_full_refreshes": 0,
+                      "manifest_witness_failures": 0}
         self._commit_hooks: list = []
+        self._man_witnesses: list = []
+        self._ship_gen: Optional[int] = None
+        self._degraded_warned = False
         if embed_init is not None:
             self.init_mirror(embed_init)
 
@@ -126,7 +133,11 @@ class CheckpointManager:
             # the identical assignment (a domain is never re-placed or
             # re-hashed).
             info = {"backend": backend, "addr": addr, "tenant": tenant,
-                    "quota": getattr(self.ccfg, "pool_quota", 0)}
+                    "quota": getattr(self.ccfg, "pool_quota", 0),
+                    "manifest_quorum": bool(getattr(
+                        self.ccfg, "pool_manifest_quorum", False)),
+                    "ckpt_replica": int(getattr(
+                        self.ccfg, "pool_ckpt_replica", -1))}
             store.write_json_atomic(
                 os.path.join(self.root, "POOL.json"), info)
         if getattr(self.pool, "backend", "") == "sharded":
@@ -141,10 +152,61 @@ class CheckpointManager:
         self.manifest = JsonRegion.create(self._alloc.domain("manifest"),
                                           "manifest")
         self.compress = getattr(self.ccfg, "pool_compress", "zlib")
+        self._open_witnesses()
         self.ring = UndoRing(self._alloc, self.ccfg.max_undo_logs,
                              compress=self.compress)
         self.nmp = NmpQueue(self.pool)
         self.dense_dom = self._alloc.domain("dense")
+
+    def _open_witnesses(self):
+        """2-of-3 manifest quorum (sharded, >=3 nodes): pin two witness
+        copies of the manifest (``manifest@w1``/``manifest@w2``) on the two
+        shards after the primary's, so the three copies land on distinct
+        nodes and losing ANY single one leaves a majority. The pins ride in
+        the published placement — recovery finds the witnesses there and
+        elects the majority by sealed seq."""
+        self._man_witnesses = []
+        if not bool(getattr(self.ccfg, "pool_manifest_quorum", False)) \
+                or getattr(self.pool, "backend", "") != "sharded" \
+                or self.pool.nshards < 3:
+            return
+        primary = self.pool.placement.place("manifest")
+        pinned = False
+        for k in (1, 2):
+            wdom = f"manifest@w{k}"
+            if self.pool.placement.explicit(wdom) is None:
+                self.pool.placement = self.pool.placement.with_pin(
+                    wdom, (primary + k) % self.pool.nshards)
+                pinned = True
+            try:
+                self._man_witnesses.append(
+                    JsonRegion.create(self._alloc.domain(wdom), "manifest"))
+            except PoolError as e:      # a lost witness shard: 2-of-3 holds
+                self._degraded("manifest_witness_failures", e)
+        if pinned:
+            self.record_placement()
+
+    def _man_write(self, man: dict, point: str):
+        """Advance the manifest: the primary copy first (the image a
+        quorum-less recovery elects), then the witness fan-out. A dead
+        witness is counted and skipped — never fatal; the surviving 2-of-3
+        majority is what recovery reads."""
+        self.manifest.write(man, point=point)
+        for w in self._man_witnesses:
+            try:
+                w.write(man, point="manifest-witness")
+            except PoolError as e:
+                self._degraded("manifest_witness_failures", e)
+
+    def _degraded(self, key: str, err: BaseException):
+        """A replication-side failure (dead replica destination, lost
+        witness shard) must degrade the redundancy accounting, never kill
+        training — the primary committed; only the extra copy is behind.
+        Counted per occurrence, logged once."""
+        self.stats[key] += 1
+        if not self._degraded_warned:
+            self._degraded_warned = True
+            print(f"[ckpt] replication degraded (training continues): {err}")
 
     def _hit(self, point: str):
         """Manager-level fault point (between pipeline stages)."""
@@ -199,19 +261,62 @@ class CheckpointManager:
         """Refresh the read-replica of the embedding mirror (sharded only):
         export the mirror regions to the pinned replica shard and stamp the
         commit watermark. Runs on the writer thread at the configured
-        cadence — the cadence IS the replica's declared staleness bound."""
+        cadence — the cadence IS the replica's declared staleness bound.
+        A dead replica destination degrades (counted, logged once), never
+        kills training: the primary's commit already landed. Injected
+        crashes are NOT swallowed — they are the drill's power event."""
+        if getattr(self.pool, "backend", "") != "sharded":
+            return
         dst = int(getattr(self.ccfg, "pool_replica", -1))
+        every = max(1, int(getattr(self.ccfg, "pool_replica_every", 1)))
+        if dst >= 0 and step % every == 0:
+            try:
+                info = self.pool.replicate_domain("embedding-mirror", dst,
+                                                  compress=self.compress,
+                                                  watermark=step)
+                self.stats["replica_refreshes"] += 1
+                self.stats["replica_link_bytes"] += info["link_bytes"]
+                self.pool.metrics.record_replica(info["link_bytes"])
+            except PoolError as e:
+                self._degraded("replica_refresh_failures", e)
+        self._maybe_ship(step)
+
+    def _maybe_ship(self, step: int):
+        """Commit-coupled replication of the CHECKPOINT domains (sharded
+        only): keep ``undo-log`` — and, when no manifest quorum stands,
+        ``manifest`` — survivable on the ``pool_ckpt_replica`` shard. The
+        first ship, and any ring regrowth, is a full ``replicate_domain``
+        image; every commit after that ships ONLY the committed slot's
+        verbatim bytes (plus the tiny manifest image), so the replica
+        trails the primary by at most the in-flight step — lag bounded in
+        committed steps, not wall time."""
+        dst = int(getattr(self.ccfg, "pool_ckpt_replica", -1))
         if dst < 0 or getattr(self.pool, "backend", "") != "sharded":
             return
-        every = max(1, int(getattr(self.ccfg, "pool_replica_every", 1)))
-        if step % every != 0:
-            return
-        info = self.pool.replicate_domain("embedding-mirror", dst,
-                                          compress=self.compress,
-                                          watermark=step)
-        self.stats["replica_refreshes"] += 1
-        self.stats["replica_link_bytes"] += info["link_bytes"]
-        self.pool.metrics.record_replica(info["link_bytes"])
+        try:
+            if self._ship_gen != self.ring.gen:
+                info = self.pool.replicate_domain("undo-log", dst,
+                                                  compress=self.compress,
+                                                  watermark=step)
+                self.stats["ship_full_refreshes"] += 1
+                self.stats["ship_link_bytes"] += info["link_bytes"]
+                self._ship_gen = self.ring.gen
+            else:
+                img = self.ring.slot_image(step)
+                if img is None:
+                    raise PoolError(f"undo slot for step {step} vanished "
+                                    f"before shipping")
+                name, slot_off, buf = img
+                self.stats["ship_link_bytes"] += \
+                    self.pool.ship_slot("undo-log", name, slot_off, buf)
+            if not self._man_witnesses:
+                info = self.pool.replicate_domain("manifest", dst,
+                                                  compress=self.compress,
+                                                  watermark=step)
+                self.stats["ship_link_bytes"] += info["link_bytes"]
+            self.stats["ship_steps"] += 1
+        except PoolError as e:
+            self._degraded("replica_refresh_failures", e)
 
     def rebind_domains(self, moved):
         """Re-resolve region handles after `moved` domains changed shards —
@@ -244,7 +349,14 @@ class CheckpointManager:
         flat = arr.reshape(-1, arr.shape[-1])
         if self._alloc is None:
             self._open_pool(2 * flat.nbytes + (1 << 20))
-        self.mirror_region = self._alloc.domain("embedding-mirror").alloc(
+        dom = self._alloc.domain("embedding-mirror")
+        # a PROMOTED mirror still carries the replica's watermark stamp; the
+        # moment training re-anchors the mirror at `step` that stamp is
+        # stale — left in place it would clamp a FUTURE recovery back to the
+        # old promotion watermark
+        if dom.get("watermark") is not None:
+            dom.free_region("watermark")
+        self.mirror_region = dom.alloc(
             "rows", shape=flat.shape, dtype="float32")
         self.mirror_region.write_array(flat, tag="mirror-load")
         self.mirror_region.persist(point="mirror-load")
@@ -253,7 +365,7 @@ class CheckpointManager:
         man.update(mirror_step=step, table_name=name,
                    table_shape=list(arr.shape),
                    max_undo_logs=self.ccfg.max_undo_logs)
-        self.manifest.write(man, point="manifest-init")
+        self._man_write(man, point="manifest-init")
 
     # -- hooks ---------------------------------------------------------------
     def _raise_writer_err(self):
@@ -321,7 +433,7 @@ class CheckpointManager:
         # 4: persistent step flag
         man = self.manifest.read()
         man["mirror_step"] = step
-        self.manifest.write(man, point="manifest-advance")
+        self._man_write(man, point="manifest-advance")
         self.ring.gc(step - self.ccfg.max_undo_logs)
         self.stats["tier_e"] += 1
         self.stats["bytes_e"] += idx.nbytes + new_rows.nbytes
@@ -356,7 +468,7 @@ class CheckpointManager:
         stored = self.nmp.blob_put(region, blob, compress=self.compress,
                                    point="dense-blob")
         man.update(dense_step=step, dense_slot=slot, dense_len=stored)
-        self.manifest.write(man, point="manifest-dense")
+        self._man_write(man, point="manifest-dense")
         self.stats["tier_m"] += 1
         self.stats["bytes_m"] += len(blob)
         self.stats["dense_stored_bytes"] += stored

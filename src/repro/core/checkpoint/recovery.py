@@ -76,9 +76,18 @@ def open_pool(root: str,
             "shards": info.get("shards"),
             "pin": info.get("placement"),
             "epochs": info.get("epochs")})
+        # permanent-loss posture: a member that no longer dials is kept at
+        # its index (placement is positional) serving typed connection
+        # errors — recovery proceeds from the survivors and the promoted
+        # replica copies; reads beyond them fail loudly, never silently
         dev = ShardedPool(list(pmap.shards),
                           tenant=info.get("tenant", "default"),
-                          quota=info.get("quota", 0), placement=pmap)
+                          quota=info.get("quota", 0), placement=pmap,
+                          allow_unreachable=True)
+        dead = dev.dead_shards()
+        if dead:
+            print(f"[recovery] shard(s) {dead} permanently unreachable — "
+                  f"continuing with the survivors")
         swept = dev.sweep_stale_domains()
         if swept:
             print(f"[recovery] swept stale migration copies: "
@@ -98,16 +107,80 @@ def _maybe_check(dev):
     return CheckedPool(dev) if checking_enabled() else dev
 
 
+def record_placement(root: str, pool) -> None:
+    """Durably publish `pool`'s placement into POOL.json — the manager's
+    epoch sink, exposed for recovery-side flips too: wire it as
+    ``pool.epoch_sink`` before ``promote_replica`` so the promotion epoch
+    commits durably at the flip window, not after."""
+    path = os.path.join(root, "POOL.json")
+    try:
+        info = store.read_json(path)
+    except (OSError, ValueError):
+        info = {"backend": "sharded"}
+    pj = pool.placement.to_json()
+    info.update(shards=pj["shards"], placement=pj["pin"],
+                epochs=pj["epochs"])
+    store.write_json_atomic(path, info)
+
+
+def _read_manifest(alloc, dev) -> Optional[dict]:
+    """Manifest election across the primary plus any pinned quorum
+    witnesses (``manifest@w*``): collect every REACHABLE copy's
+    (sealed seq, payload), take the highest seq at least two copies agree
+    on — the 2-of-3 majority — and fall back to the single highest sealed
+    seq when no pair agrees (no quorum configured, or only one copy
+    survived). A copy on a lost shard is simply absent from the vote."""
+    doms = ["manifest"]
+    pmap = getattr(dev, "placement", None)
+    if pmap is not None:
+        doms += sorted(d for d in pmap.pin if d.startswith("manifest@w"))
+    copies: list[tuple[int, dict]] = []
+    for dom in doms:
+        try:
+            region = alloc.domain(dom).get("manifest")
+            if region is None:
+                continue
+            jr = JsonRegion(region)
+            man = jr.read()
+            if man is not None:
+                copies.append((jr.read_seq(), man))
+        except PoolError:
+            continue
+    if not copies:
+        return None
+    counts: dict[int, int] = {}
+    for seq, _ in copies:
+        counts[seq] = counts.get(seq, 0) + 1
+    quorum = [seq for seq, n in counts.items() if n >= 2]
+    if quorum:
+        best = max(quorum)
+        return next(man for seq, man in copies if seq == best)
+    return max(copies, key=lambda c: c[0])[1]
+
+
 def recover(root: str, pool: Optional[PoolDevice] = None) -> RecoveredState:
     dev = open_pool(root, pool)
     alloc = PoolAllocator(dev)
-    man = JsonRegion.create(alloc.domain("manifest"), "manifest").read()
+    man = _read_manifest(alloc, dev)
     if man is None:
         raise store.CorruptError(f"{root}: no valid manifest in pool")
-    mirror = alloc.domain("embedding-mirror").get("rows")
+    mirror_dom = alloc.domain("embedding-mirror")
+    mirror = mirror_dom.get("rows")
     if mirror is None:
         raise store.CorruptError(f"{root}: no embedding mirror region")
     mirror_step = man["mirror_step"]
+    # a PROMOTED mirror carries the replica's watermark region: the copy is
+    # consistent at watermark W, which may trail the manifest's last commit
+    # M. Clamping to W makes the rollback loop undo every committed step in
+    # (W, M] — the replica's undo ring (commit-coupled, so it covers that
+    # range) restores state W bit-identically, including rows a torn
+    # refresh left partially newer.
+    wm_region = mirror_dom.get("watermark")
+    if wm_region is not None:
+        wm = JsonRegion(wm_region).read() or {}
+        if "step" in wm:
+            mirror_step = min(int(mirror_step), int(wm["step"]))
+            man["mirror_step"] = mirror_step
     shape = tuple(man["table_shape"])
 
     # step 2: roll back committed-but-unapplied logs (newest first)

@@ -188,6 +188,19 @@ class UndoRing:
             return None
         return uc.HDR.pack(step, n, d, flags, stored_len, crc, 0) + stored
 
+    def slot_image(self, step: int) -> Optional[tuple[str, int, bytes]]:
+        """The commit-coupled replication unit for a committed step:
+        ``(ring region name, slot offset within the region, verbatim slot
+        bytes)`` — ready for ``ShardedPool.ship_slot``, which re-runs the
+        two-barrier commit protocol at the same slot offset on the replica
+        ring. ``None`` when the step's slot is gone (GC'd, overwritten, or
+        torn) — the shipper falls back to a full refresh."""
+        buf = self._read_slot_verbatim(step)
+        if buf is None:
+            return None
+        return (f"ring{self.gen}",
+                (step % self.nslots) * self.slot_bytes, buf)
+
     def _grow(self, need: int):
         """Entry outgrew the slot: allocate a bigger ring, carry the
         still-committed entries over verbatim, flip meta, and only then

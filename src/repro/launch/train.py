@@ -63,6 +63,20 @@ def main():
                          "HIGH (e.g. 0.75), live-migrate its largest "
                          "unpinned domain group to the emptiest node "
                          "(0 = off)")
+    ap.add_argument("--pool-replica", type=int, default=-1, metavar="SHARD",
+                    help="sharded backend: keep a read replica of the "
+                         "embedding mirror on this shard index, refreshed "
+                         "at the commit watermark (-1 = off)")
+    ap.add_argument("--pool-ckpt-replica", type=int, default=-1,
+                    metavar="SHARD",
+                    help="sharded backend: commit-coupled replica of the "
+                         "checkpoint domains (undo-log + manifest) on this "
+                         "shard index — survives permanent loss of the "
+                         "primary via replica promotion (-1 = off)")
+    ap.add_argument("--pool-manifest-quorum", action="store_true",
+                    help="sharded backend (>=3 nodes): keep 3 manifest "
+                         "copies on distinct shards; recovery takes the "
+                         "2-of-3 majority by sealed seq")
     ap.add_argument("--pool-secret",
                     default=os.environ.get("REPRO_POOL_SECRET", ""),
                     help="shared secret for the memory-node tcp handshake "
@@ -97,6 +111,9 @@ def main():
                             pool_quota=args.pool_quota,
                             pool_compress=args.pool_compress,
                             pool_rebalance=args.pool_rebalance,
+                            pool_replica=args.pool_replica,
+                            pool_ckpt_replica=args.pool_ckpt_replica,
+                            pool_manifest_quorum=args.pool_manifest_quorum,
                             pool_secret=args.pool_secret)
     tc = TrainConfig(learning_rate=args.lr, embed_learning_rate=args.embed_lr,
                      checkpoint=ckpt)

@@ -129,6 +129,18 @@ class PlacementMap:
                             f"range (have {self.nshards} shards)")
         return idx
 
+    def group(self, domain: str) -> list:
+        """``domain`` plus every alias follower currently co-located with
+        it — the set one epoch must move (or promote) together so the
+        fused-op co-location invariant survives the flip. An explicitly
+        separated follower (pinned or moved apart) is NOT in the group."""
+        members = [domain]
+        for follower, leader in self.ALIAS.items():
+            if leader == domain and follower != domain \
+                    and self.place(follower) == self.place(domain):
+                members.append(follower)
+        return members
+
     # -- evolution (both return NEW maps; the dataclass is frozen) -----------
     def with_epoch(self, moves: dict, reason: str = "") -> "PlacementMap":
         rec = PlacementEpoch(epoch=self.epoch + 1,

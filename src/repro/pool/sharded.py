@@ -46,6 +46,17 @@ Fault injection and power events are per shard: ``crash_shard(i)`` /
 ``set_shard_faults(i, schedule)`` drill one node while the others keep
 serving; the plain ``crash()``/``faults`` forms fan out to every shard
 (the all-nodes power event).
+
+Permanent node loss is survivable, not just restart: ``replicate_domain``
+keeps a pinned ``@replica`` copy fresh, ``ship_slot`` write-couples single
+committed undo slots into that copy (bounded lag in committed steps, not
+wall time), and ``promote_replica`` re-points placement at the replica in
+ONE epoch flip when the primary shard is declared lost — the dead source is
+never GC'd (it no longer answers); if it ever reappears, its stale copy is
+reclaimed by ``sweep_stale_domains``. A pool opened with
+``allow_unreachable=True`` tolerates members that no longer dial: every op
+that would touch the lost node raises a typed ``PoolConnectionError``
+while the surviving shards keep serving.
 """
 from __future__ import annotations
 
@@ -61,11 +72,11 @@ from repro.pool.metrics import OpStat, PoolMetrics
 from repro.pool.nmp import NmpQueue
 from repro.pool.placement import (Migration, PlacementMap, PoolTopology,
                                   RebalancePolicy)
-from repro.pool.protocol import NMP_OPS
+from repro.pool.protocol import NMP_OPS, PoolConnectionError
 
-__all__ = ["REPLICA_SUFFIX", "SHARD_SPAN", "Migration", "PlacementMap",
-           "PoolTopology", "RebalancePolicy", "ShardedPool", "merge_metrics",
-           "replica_domain"]
+__all__ = ["PROMOTE_WINDOWS", "REPLICA_SUFFIX", "SHARD_SPAN", "Migration",
+           "PlacementMap", "PoolTopology", "RebalancePolicy", "ShardedPool",
+           "merge_metrics", "replica_domain"]
 
 # Each shard's offset window in the global address space. Large enough that
 # no single emulated node ever grows past it; small enough that global
@@ -84,9 +95,54 @@ REPLICA_SUFFIX = "@replica"
 REPLICA_WINDOWS = ("replica.pre-copy", "replica.mid-copy",
                    "replica.post-copy")
 
+# Promotion windows, in protocol order: a crash before the flip leaves the
+# primary name still routed at the (lost) source — promotion simply reruns;
+# a crash after it leaves the promoted copy authoritative.
+PROMOTE_WINDOWS = ("promote.pre-copy", "promote.mid-copy",
+                   "promote.post-copy-pre-flip", "promote.post-flip")
+
 
 def replica_domain(domain: str) -> str:
     return domain + REPLICA_SUFFIX
+
+
+class _DeadDevice:
+    """Placeholder device for a member node that is permanently gone (the
+    dial failed and the opener said ``allow_unreachable``). Every data,
+    domain, and near-memory entry point raises the same typed
+    ``PoolConnectionError`` — reads beyond the promoted replica's watermark
+    fail loudly, never silently — while the attribute surface the shard
+    fan-outs touch (``faults``, ``close``, metrics reset) stays inert so the
+    surviving shards keep operating."""
+
+    backend = "dead"
+    remote = True
+    capacity = 0
+
+    def __init__(self, index: int, addr: str, err: str):
+        self.index = index
+        self.addr = addr
+        self.err = err
+        self.faults = None
+
+    def _gone(self, *_a, **_k):
+        raise PoolConnectionError(
+            f"shard {self.index} permanently unreachable "
+            f"({self.addr}): {self.err}")
+
+    read = write = view = persist = _gone
+    read_async = write_async = read_batch = _gone
+    nmp = nmp_batch = mark_dirty = crash = _gone
+    alloc_region = get_region = list_regions = _gone
+    list_remote_domains = _gone
+    free_remote_domain = free_remote_region = _gone
+    metrics_snapshot = _gone
+
+    def reset_metrics(self):
+        pass
+
+    def close(self):
+        pass
 
 
 class _Shard:
@@ -230,7 +286,7 @@ class ShardedPool(PoolDevice):
                  topology: Optional[PlacementMap] = None,
                  placement: Optional[PlacementMap] = None,
                  secret: str = "", readonly: bool = False,
-                 timeout=None, wire=None):
+                 timeout=None, wire=None, allow_unreachable: bool = False):
         placement = placement if placement is not None else topology
         if placement is None:
             addrs = [s if isinstance(s, str) else
@@ -256,13 +312,22 @@ class ShardedPool(PoolDevice):
         self.rebalance: Optional[RebalancePolicy] = None
         self.epoch_sink: Optional[Callable[[PlacementMap], None]] = None
         self.migrate_window_hook: Optional[Callable[[str], None]] = None
+        self.allow_unreachable = bool(allow_unreachable)
         self.shards: list[_Shard] = []
         for i, spec in enumerate(shards):
             if isinstance(spec, str):
-                dev = make_pool("remote", addr=spec, tenant=tenant,
-                                quota=quota, secret=secret,
-                                readonly=self.readonly, timeout=timeout,
-                                wire=wire, check=False)
+                try:
+                    dev = make_pool("remote", addr=spec, tenant=tenant,
+                                    quota=quota, secret=secret,
+                                    readonly=self.readonly, timeout=timeout,
+                                    wire=wire, check=False)
+                except (PoolError, OSError) as e:
+                    if not self.allow_unreachable:
+                        raise
+                    # permanent-loss posture: keep the index (placement is
+                    # positional), serve typed connection errors for every
+                    # op that would land there
+                    dev = _DeadDevice(i, spec, str(e))
             else:
                 dev = spec
             self.shards.append(_Shard(i, dev, tenant, quota,
@@ -392,6 +457,11 @@ class ShardedPool(PoolDevice):
         shard = self.shards[i]
         shard.device.crash()
         shard.rebuild()
+
+    def dead_shards(self) -> list[int]:
+        """Indices of members declared permanently lost at open time."""
+        return [i for i, s in enumerate(self.shards)
+                if getattr(s.device, "backend", "") == "dead"]
 
     def reconnect_shard(self, i: int):
         """Re-dial shard ``i`` after its node restarted (the old client
@@ -525,16 +595,9 @@ class ShardedPool(PoolDevice):
             raise InjectedCrash(point, f.counts[point])
 
     def _alias_group(self, domain: str) -> list[str]:
-        """`domain` plus every alias follower currently co-located with it —
-        the set one epoch must move together so the fused-op co-location
-        invariant survives the migration."""
-        group = [domain]
-        for follower, leader in self.placement.ALIAS.items():
-            if leader == domain and follower != domain \
-                    and self.placement.place(follower) \
-                    == self.placement.place(domain):
-                group.append(follower)
-        return group
+        """The alias-complete move/promote unit — placement policy owns
+        the co-location rule (``PlacementMap.group``)."""
+        return self.placement.group(domain)
 
     def migrate_domain(self, domain: str, dst: int,
                        compress: str = "zlib") -> dict:
@@ -620,14 +683,32 @@ class ShardedPool(PoolDevice):
         self._hit("replica.pre-copy")
         link_bytes = raw_bytes = nregions = 0
         ents = src_shard.list_regions(domain)
+        have = dst_shard.list_regions(replica)
+        # drop replica regions the source no longer lists (a retired
+        # undo-ring generation, a renamed region): without this the replica
+        # directory — and the shard's used_bytes gauge — creeps per refresh
+        # until RebalancePolicy trips on a phantom fill
+        for name in sorted(set(have) - set(ents) - {"watermark"}):
+            dst_shard.free_region(replica, name, "replica-gc")
+            have.pop(name, None)
         for name in sorted(ents):
             ent = ents[name]
             frame = src_q.region_export(src_shard.region(domain, name, ent),
                                         compress=compress)
             self._hit("replica.mid-copy")
-            dent = dst_shard.alloc_region(replica, name,
-                                          tuple(ent["shape"]),
-                                          ent["dtype"], "replica-alloc")
+            dent = have.get(name)
+            if dent is not None \
+                    and (list(dent["shape"]) != list(ent["shape"])
+                         or dent["dtype"] != ent["dtype"]):
+                # same-name realloc under a changed shape would leak the
+                # old directory entry (the _do_tier_m leak): free, then
+                # alloc; a shape-stable refresh reuses the region in place
+                dst_shard.free_region(replica, name, "replica-gc")
+                dent = None
+            if dent is None:
+                dent = dst_shard.alloc_region(replica, name,
+                                              tuple(ent["shape"]),
+                                              ent["dtype"], "replica-alloc")
             dst_q.region_import(dst_shard.region(replica, name, dent), frame,
                                 point="replica-import")
             link_bytes += len(frame)
@@ -635,14 +716,117 @@ class ShardedPool(PoolDevice):
             nregions += 1
         self._hit("replica.post-copy")
         if watermark is not None:
-            went = dst_shard.alloc_region(replica, "watermark", (8 << 10,),
-                                          "uint8", "replica-alloc")
+            went = dst_shard.get_region(replica, "watermark")
+            if went is None:
+                went = dst_shard.alloc_region(replica, "watermark",
+                                              (8 << 10,), "uint8",
+                                              "replica-alloc")
             wm = JsonRegion(dst_shard.region(replica, "watermark", went))
             wm.write({"step": int(watermark)}, point="replica-watermark")
         return {"replica": replica, "src": src, "dst": dst,
                 "regions": nregions, "link_bytes": link_bytes,
                 "raw_bytes": raw_bytes,
                 "watermark": watermark if watermark is not None else -1}
+
+    def ship_slot(self, domain: str, name: str, slot_off: int,
+                  buf: bytes) -> int:
+        """Commit-coupled replication of ONE committed undo slot: the
+        verbatim slot image (COMMIT word cleared) lands at the same slot
+        offset inside the ``@replica`` copy's ring region, under the same
+        two-barrier protocol the primary used (payload persist, then COMMIT
+        persist — ``uc.write_slot``). The caller ships on every commit, so
+        replica lag is bounded in committed steps, not wall time; only the
+        slot bytes cross the link, never a full-domain refresh."""
+        from repro.pool import undo_codec as uc
+
+        replica = replica_domain(domain)
+        dst = self.placement.explicit(replica)
+        if dst is None:
+            raise PoolError(f"ship {domain!r}: no pinned replica domain "
+                            f"{replica!r} — full-refresh it first")
+        shard = self.shards[dst]
+        ent = shard.get_region(replica, name)
+        if ent is None:
+            raise PoolError(f"ship {domain!r}: replica region {name!r} "
+                            f"missing on shard {dst} — refresh out of date")
+        if int(slot_off) + len(buf) > int(ent["nbytes"]):
+            raise PoolError(f"ship {domain!r}: slot at {slot_off} overflows "
+                            f"replica region {name!r}")
+        self._hit("replica.commit-ship")
+        uc.write_slot(shard.device, int(ent["off"]) + int(slot_off), buf)
+        return len(buf)
+
+    def promote_replica(self, domain: str, compress: str = "zlib",
+                        from_domain: Optional[str] = None) -> dict:
+        """Promote the replica copy of `domain` to primary after its shard
+        was declared permanently lost: copy the pinned ``@replica`` (or,
+        via `from_domain`, a quorum-witness) regions into the REAL domain
+        name on the replica's own shard — local export/import, no wire to
+        the dead node — then re-point placement in ONE epoch flip.
+
+        The alias group moves together (promoting ``embedding-mirror``
+        carries ``undo-log``), each member to its own replica's pinned
+        shard. The lost source is never GC'd: it no longer answers, and if
+        it ever reappears, placement no longer assigns it the domain so
+        ``sweep_stale_domains`` reclaims the stale copy. A crash before the
+        flip strands the promoted image under the real name on the replica
+        shard — also swept, and promotion simply reruns; after the flip the
+        promoted copy is authoritative and recovery replays the undo ring
+        from it bit-identically up to the replication watermark."""
+        group = [domain] if from_domain is not None \
+            else self._alias_group(domain)
+        srcs = {d: (from_domain if from_domain is not None
+                    else replica_domain(d)) for d in group}
+        moves = {}
+        for d, src_dom in srcs.items():
+            dst = self.placement.explicit(src_dom)
+            if dst is None:
+                raise PoolError(f"promote {d!r}: no pinned replica "
+                                f"{src_dom!r} to promote")
+            moves[d] = dst
+        old = {d: self.placement.place(d) for d in group}
+        self._hit("promote.pre-copy")
+        link_bytes = raw_bytes = nregions = 0
+        for d in group:
+            shard = self.shards[moves[d]]
+            q = shard.queue()
+            ents = shard.list_regions(srcs[d])
+            if not ents:
+                raise PoolError(f"promote {d!r}: replica {srcs[d]!r} is "
+                                f"empty on shard {moves[d]}")
+            have = shard.list_regions(d)
+            for name in sorted(ents):
+                ent = ents[name]
+                frame = q.region_export(shard.region(srcs[d], name, ent),
+                                        compress=compress)
+                self._hit("promote.mid-copy")
+                dent = have.get(name)
+                if dent is not None \
+                        and (list(dent["shape"]) != list(ent["shape"])
+                             or dent["dtype"] != ent["dtype"]):
+                    shard.free_region(d, name, "promote-gc")
+                    dent = None
+                if dent is None:
+                    dent = shard.alloc_region(d, name, tuple(ent["shape"]),
+                                              ent["dtype"], "promote-alloc")
+                q.region_import(shard.region(d, name, dent), frame,
+                                point="promote-import")
+                link_bytes += len(frame)
+                raw_bytes += int(ent["nbytes"])
+                nregions += 1
+        self._hit("promote.post-copy-pre-flip")
+        # THE flip: until the sink returns, recovery still routes the
+        # domain at the lost shard (and retries promotion); after it, the
+        # promoted copy is the domain. There is no third state.
+        self.placement = self.placement.with_epoch(
+            moves, reason=f"promote {domain}: replica replaces lost shard"
+                          f"(s) {sorted(set(old.values()))}")
+        if self.epoch_sink is not None:
+            self.epoch_sink(self.placement)
+        self._hit("promote.post-flip")
+        return {"promoted": tuple(group), "epoch": self.placement.epoch,
+                "src": old, "dst": moves, "regions": nregions,
+                "link_bytes": link_bytes, "raw_bytes": raw_bytes}
 
     def sweep_stale_domains(self) -> list[tuple[str, int]]:
         """Open-time sweep: free any copy of a domain living on a shard the

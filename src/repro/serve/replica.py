@@ -48,9 +48,27 @@ class ReplicaReader:
     def ready(self) -> bool:
         return self.region is not None or self.refresh()
 
+    def _revalidate(self):
+        """A refresh that RE-ALLOCATED the replica regions (shape growth,
+        ring turnover) leaves this reader's cached handles pointing at
+        freed bytes — a gather there serves garbage, or trips the runtime
+        checker's use-after-free. One directory probe per read compares the
+        cached entry's offset/extent against the live directory and rebinds
+        BOTH handles (rows + watermark) when the entry moved."""
+        if self.region is None:
+            return
+        try:
+            cur = self.alloc.domain(self.domain_name).get(self.name)
+        except PoolError:
+            cur = None
+        if cur is None or cur.off != self.region.off \
+                or cur.nbytes != self.region.nbytes:
+            self.refresh()
+
     def watermark(self) -> int:
         """The committed trainer step this replica reflects (-1 = never
         stamped). Serving staleness is bounded by (latest commit − this)."""
+        self._revalidate()
         if self._wm is None and not self.refresh():
             return -1
         if self._wm is None:
@@ -60,9 +78,15 @@ class ReplicaReader:
     def gather(self, idx) -> np.ndarray:
         if not self.ready:
             raise PoolError(f"replica {self.domain_name!r} not materialised")
+        self._revalidate()
+        if self.region is None:
+            raise PoolError(f"replica {self.domain_name!r} vanished")
         return self.nmp.gather(self.region, np.asarray(idx).reshape(-1))
 
     def bag_gather(self, idx, combine: str = "sum") -> np.ndarray:
         if not self.ready:
             raise PoolError(f"replica {self.domain_name!r} not materialised")
+        self._revalidate()
+        if self.region is None:
+            raise PoolError(f"replica {self.domain_name!r} vanished")
         return self.nmp.bag_gather(self.region, idx, combine=combine)

@@ -31,6 +31,7 @@ from repro.analysis.checker import (CheckedPool, CommitBeforePayloadError,
 from repro.core.checkpoint.undo_log import UndoRing
 from repro.pool import (DramPool, FaultSchedule, InjectedCrash, PmemPool,
                         PoolAllocator, PoolServer, ShardedPool)
+from repro.pool.allocator import JsonRegion
 from repro.pool import undo_codec as uc
 from repro.pool.device import make_pool
 
@@ -315,6 +316,157 @@ def test_replica_barrier_points_fire(point):
         int(rep["rows"]["off"]), int(rep["rows"]["nbytes"]), tag="drill")
     np.testing.assert_array_equal(
         np.asarray(got).view(np.float32).reshape(tab.shape), tab)
+    pool.close()
+
+
+def _promoted_ctx(rng):
+    """3 checked shards, mirror+ring live on their placed shard, replicas of
+    both refreshed onto a second shard — the promotion drills' start."""
+    pool = _checked_sharded(3)
+    tab = _seed_mirror(pool, rng)
+    a = PoolAllocator(pool)
+    ring = UndoRing(a, max_logs=4, compress="zlib")
+    idx = np.unique(rng.integers(0, 64, 12))
+    new = rng.standard_normal((idx.size, 8)).astype(np.float32)
+    ring.log_and_apply(0, a.domain("embedding-mirror").get("rows"), idx, new)
+    src = pool.placement.place("embedding-mirror")
+    dst = (src + 1) % 3
+    pool.replicate_domain("embedding-mirror", dst, watermark=0)
+    pool.replicate_domain("undo-log", dst, watermark=0)
+    return pool, ring, src, dst
+
+
+@pytest.mark.parametrize("point", ["promote.pre-copy", "promote-alloc",
+                                   "promote.mid-copy", "promote-import",
+                                   "promote.post-copy-pre-flip"])
+def test_promotion_pre_flip_crash_leaves_placement_unmoved(point):
+    """Crash anywhere before the promotion's epoch flip: the domain is
+    still routed at the (lost) source — recovery would simply retry — and
+    the re-run converges, carrying the whole alias group in one epoch."""
+    rng = np.random.default_rng(23)
+    pool, ring, src, dst = _promoted_ctx(rng)
+    replica_rows = _domain_bytes(pool, "embedding-mirror@replica")["rows"]
+    pool.faults = FaultSchedule.crash_at(point)
+    with pytest.raises(InjectedCrash):
+        pool.promote_replica("embedding-mirror")
+    pool.faults = None
+    assert pool.placement.place("embedding-mirror") == src
+    assert pool.placement.place("undo-log") == src
+    info = pool.promote_replica("embedding-mirror")
+    assert set(info["promoted"]) == {"embedding-mirror", "undo-log"}
+    assert pool.placement.place("embedding-mirror") == dst
+    assert pool.placement.place("undo-log") == dst
+    assert _domain_bytes(pool, "embedding-mirror")["rows"] == replica_rows
+    pool.close()
+
+
+def test_promotion_post_flip_crash_is_already_promoted():
+    """Crash AFTER the flip ("promote.post-flip"): the epoch already
+    committed, so the promoted copy is authoritative — rerunning recovery
+    must not re-route or re-copy anything."""
+    rng = np.random.default_rng(29)
+    pool, ring, src, dst = _promoted_ctx(rng)
+    pool.faults = FaultSchedule.crash_at("promote.post-flip")
+    with pytest.raises(InjectedCrash):
+        pool.promote_replica("embedding-mirror")
+    pool.faults = None
+    assert pool.placement.place("embedding-mirror") == dst
+    assert pool.placement.place("undo-log") == dst
+    oracle = _domain_bytes(pool, "embedding-mirror")
+    # the lost source is never GC'd by promotion itself; if that shard ever
+    # reappears (here it never died — in-process drill), the open-time
+    # sweep reclaims its stale copies, and the promoted image is untouched
+    assert sorted(pool.sweep_stale_domains()) == [
+        ("embedding-mirror", src), ("undo-log", src)]
+    assert _domain_bytes(pool, "embedding-mirror") == oracle
+    pool.close()
+
+
+def test_promotion_gc_point_reclaims_stranded_shape():
+    """A crashed earlier promotion stranded a same-name region of an OLDER
+    shape under the real domain name on the replica shard: the re-run frees
+    it at the "promote-gc" barrier (drilled), then lands the fresh copy."""
+    rng = np.random.default_rng(31)
+    pool, ring, src, dst = _promoted_ctx(rng)
+    pool.shards[dst].alloc_region("embedding-mirror", "rows", (8, 8),
+                                  "float32", "promote-alloc")
+    pool.faults = FaultSchedule.crash_at("promote-gc")
+    with pytest.raises(InjectedCrash):
+        pool.promote_replica("embedding-mirror")
+    pool.faults = None
+    info = pool.promote_replica("embedding-mirror")
+    assert info["regions"] >= 2                 # rows + watermark (+ ring)
+    got = _domain_bytes(pool, "embedding-mirror")
+    assert got["rows"] == _domain_bytes(pool,
+                                        "embedding-mirror@replica")["rows"]
+    pool.close()
+
+
+def test_replica_gc_point_fires_on_retired_source_region():
+    """The source renames a region (ring regrowth); the refresh frees the
+    stale replica name at the "replica-gc" barrier (drilled), and the clean
+    retry leaves the replica directory an exact mirror of the source's."""
+    rng = np.random.default_rng(37)
+    pool = _checked_sharded(2)
+    _seed_mirror(pool, rng)
+    src = pool.placement.place("embedding-mirror")
+    dst = 1 - src
+    pool.replicate_domain("embedding-mirror", dst, watermark=0)
+    a = PoolAllocator(pool)
+    dom = a.domain("embedding-mirror")
+    dom.free_region("rows")
+    r2 = dom.alloc("rows2", shape=(32, 8), dtype="float32")
+    r2.write_array(np.ones((32, 8), np.float32))
+    r2.persist(point="mirror-load")
+    pool.faults = FaultSchedule.crash_at("replica-gc")
+    with pytest.raises(InjectedCrash):
+        pool.replicate_domain("embedding-mirror", dst, watermark=1)
+    pool.faults = None
+    pool.replicate_domain("embedding-mirror", dst, watermark=1)
+    rep = pool.shards[dst].list_regions("embedding-mirror@replica")
+    assert set(rep) == {"rows2", "watermark"}
+    pool.close()
+
+
+def test_commit_ship_point_fires_and_slot_lands():
+    """Crash at the "replica.commit-ship" window, then retry: the verbatim
+    slot image lands inside the replica ring at the same slot offset, and
+    the destination re-commits it under the same two-barrier protocol (all
+    bytes equal except the COMMIT word, which the shipped image carries
+    cleared and write_slot sets last)."""
+    rng = np.random.default_rng(41)
+    pool, ring, src, dst = _promoted_ctx(rng)
+    name, slot_off, buf = ring.slot_image(0)
+    pool.faults = FaultSchedule.crash_at("replica.commit-ship")
+    with pytest.raises(InjectedCrash):
+        pool.ship_slot("undo-log", name, slot_off, buf)
+    pool.faults = None
+    assert pool.ship_slot("undo-log", name, slot_off, buf) == len(buf)
+    rep = pool.shards[dst].list_regions("undo-log@replica")
+    got = bytes(pool.shards[dst].device.read(
+        int(rep[name]["off"]) + slot_off, len(buf), tag="drill"))
+    assert got[:uc.COMMIT_OFF] == buf[:uc.COMMIT_OFF]
+    assert got[uc.HDR.size:] == buf[uc.HDR.size:]
+    assert int.from_bytes(got[uc.COMMIT_OFF:uc.HDR.size], "little") != 0
+    pool.close()
+
+
+def test_manifest_witness_publish_is_ab_safe():
+    """The quorum witnesses advance through the same A/B single-publish
+    election as the primary manifest: a crash at the "manifest-witness"
+    publish leaves a sealed image electable (old or new, never torn), and
+    the retry converges."""
+    pool = _checked_sharded(3)
+    jr = JsonRegion.create(PoolAllocator(pool).domain("manifest@w1"),
+                           "manifest")
+    jr.write({"mirror_step": 1}, point="manifest-witness")
+    pool.faults = FaultSchedule.crash_at("manifest-witness")
+    with pytest.raises(InjectedCrash):
+        jr.write({"mirror_step": 2}, point="manifest-witness")
+    pool.faults = None
+    assert (jr.read() or {}).get("mirror_step") in (1, 2)
+    jr.write({"mirror_step": 2}, point="manifest-witness")
+    assert (jr.read() or {}).get("mirror_step") == 2
     pool.close()
 
 

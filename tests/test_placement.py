@@ -57,6 +57,21 @@ def test_epochs_replay_in_order_and_newest_wins():
     assert back.place("embedding-mirror") == (home + 2) % 3
 
 
+def test_group_follows_colocation_not_luck():
+    """The alias-complete move/promote unit is placement policy: undo-log
+    rides with embedding-mirror while co-located, and drops out the moment
+    an explicit pin (or epoch move) separates them."""
+    pm = PlacementMap(shards=("a", "b", "c"))
+    assert pm.group("embedding-mirror") == ["embedding-mirror", "undo-log"]
+    assert pm.group("undo-log") == ["undo-log"]       # followers lead nobody
+    assert pm.group("manifest") == ["manifest"]
+    split = pm.with_pin("undo-log",
+                        (pm.place("embedding-mirror") + 1) % 3)
+    assert split.group("embedding-mirror") == ["embedding-mirror"]
+    moved = pm.with_epoch({"undo-log": (pm.place("embedding-mirror") + 1) % 3})
+    assert moved.group("embedding-mirror") == ["embedding-mirror"]
+
+
 def test_torn_epoch_record_falls_back_never_rehashes():
     pm = PlacementMap(shards=("a", "b", "c"))
     home = pm.place("embedding-mirror")

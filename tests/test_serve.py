@@ -263,6 +263,44 @@ def test_replica_refresh_advances_watermark(tmp_path):
     pool.close()
 
 
+def test_replica_reader_rebinds_across_reallocating_refresh():
+    """A refresh that RE-ALLOCATED the replica regions (the source grew, so
+    free+alloc moved the copy) must not leave a long-lived reader serving
+    from the freed extent. Every shard runs under CheckedPool — exactly what
+    REPRO_POOL_CHECK=1 wraps — so a stale handle would trip use-after-free
+    instead of silently returning garbage; the reader re-resolves when the
+    directory entry changed and keeps serving coherent rows."""
+    from repro.analysis.checker import CheckedPool
+
+    pool = ShardedPool([CheckedPool(DramPool(1 << 20)),
+                        CheckedPool(DramPool(1 << 20))],
+                       pin={"embedding-mirror": 0})
+    dom = PoolAllocator(pool).domain("embedding-mirror")
+    rows = np.arange(64 * 8, dtype=np.float32).reshape(64, 8)
+    reg = dom.alloc("rows", shape=(64, 8), dtype="float32")
+    reg.write_array(rows)
+    reg.persist(point="mirror-load")
+    pool.replicate_domain("embedding-mirror", 1, watermark=0)
+    reader = ReplicaReader(pool)
+    np.testing.assert_array_equal(reader.gather([3, 9]), rows[[3, 9]])
+    assert reader.watermark() == 0
+    # vocab growth: the source region is retired and re-allocated bigger,
+    # and the next refresh free+reallocs the replica copy at a new offset
+    dom.free_region("rows")
+    rows2 = np.arange(96 * 8, dtype=np.float32).reshape(96, 8) + 1000.0
+    reg2 = dom.alloc("rows", shape=(96, 8), dtype="float32")
+    reg2.write_array(rows2)
+    reg2.persist(point="mirror-load")
+    pool.replicate_domain("embedding-mirror", 1, watermark=1)
+    # the reader's cached handles predate the realloc: rebind, don't serve
+    # stale bytes (or row 3 would still read as the pre-growth value)
+    np.testing.assert_array_equal(reader.gather([3, 80]), rows2[[3, 80]])
+    assert reader.watermark() == 1
+    np.testing.assert_array_equal(reader.bag_gather([[1, 2]])[0],
+                                  rows2[1] + rows2[2])
+    pool.close()
+
+
 def test_manager_replicates_on_commit(tmp_path):
     from repro.configs.base import CheckpointConfig
     from repro.core.checkpoint.manager import CheckpointManager

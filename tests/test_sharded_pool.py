@@ -19,7 +19,9 @@ from repro.core.checkpoint.undo_log import UndoRing
 from repro.data.synthetic import make_batches
 from repro.pool import (DramPool, FaultSchedule, InjectedCrash, NmpQueue,
                         PmemPool, PoolAllocator, PoolError, PoolServer,
-                        PoolTopology, ShardedPool, TenantIsolationError)
+                        PoolTopology, ShardedPool, TenantIsolationError,
+                        replica_domain)
+from repro.pool.protocol import PoolConnectionError
 from repro.pool.sharded import SHARD_SPAN
 from repro.training import train_loop
 
@@ -28,6 +30,12 @@ COMPRESS = os.environ.get("REPRO_POOL_COMPRESS", "zlib")
 # whole matrix: migrations may fire mid-drill and recovery must still be
 # bit-identical (0 = off, the default cells)
 REBALANCE = float(os.environ.get("REPRO_POOL_REBALANCE", "0") or 0)
+# the CI `ckpt-replica` cell arms commit-coupled checkpoint-domain
+# replication (and the manifest quorum, on 3-shard cells) across the whole
+# matrix: every committed undo slot ships to this shard while the drills
+# kill/tear/partition nodes — shipping must degrade, never abort training
+# (-1 = off, the default cells)
+CKPT_REPLICA = int(os.environ.get("REPRO_POOL_CKPT_REPLICA", "-1") or -1)
 STEPS = 6
 SCENARIOS = ("kill-shard", "torn-shard", "partition", "all-restart")
 MANAGER_DOMAINS = ("embedding-mirror", "undo-log", "manifest", "dense")
@@ -302,7 +310,9 @@ def _sharded_cc(root, addrs):
                             pool_backend="sharded",
                             pool_shards=",".join(addrs),
                             pool_compress=COMPRESS,
-                            pool_rebalance=REBALANCE)
+                            pool_rebalance=REBALANCE,
+                            pool_ckpt_replica=CKPT_REPLICA,
+                            pool_manifest_quorum=CKPT_REPLICA >= 0)
 
 
 def _train_expect_failure(b, tc, cc, data, init_fn, upto, inject):
@@ -330,7 +340,9 @@ def _recover_and_resume(ref, root, resume_steps=3):
     st, resume = recovery.resume_train_state(rec, fresh)
     cc = CheckpointConfig(directory=root, dense_interval=1,
                           pool_backend="sharded", pool_compress=COMPRESS,
-                          pool_rebalance=REBALANCE)
+                          pool_rebalance=REBALANCE,
+                          pool_ckpt_replica=CKPT_REPLICA,
+                          pool_manifest_quorum=CKPT_REPLICA >= 0)
     mgr = CheckpointManager(b.model, cc, pool=rec.pool)
     mgr.init_mirror(st["embed"], step=rec.mirror_step)
     _, tail = train_loop.train(b.model, tc, data, resume_steps, relaxed=True,
@@ -410,6 +422,162 @@ def test_sharded_fault_matrix(tmp_path, ref_ctx, scenario, nshards):
         if scenario == "torn-shard":
             assert rec.rolled_back           # COMMITted undo entry restored it
         assert rec.mirror_step >= upto - 1
+        mgr2.pool.close()
+    finally:
+        for s in servers:
+            s.shutdown(close_device=True)
+
+
+# ---------------------------------------------------------------------------
+# permanent node loss: replica refresh hygiene, promotion, manifest quorum
+# ---------------------------------------------------------------------------
+
+
+def test_replica_refresh_used_bytes_flat(rng):
+    """Refreshing the same domain ten times leaves the replica shard's
+    used_bytes exactly flat (the same-name realloc used to leak a directory
+    entry per refresh), and a region the SOURCE retired (an undo-ring
+    regrowth renames its region) is freed replica-side on the next refresh
+    instead of creeping forever."""
+    dev = ShardedPool([DramPool(1 << 20), DramPool(1 << 20)],
+                      pin={"embedding-mirror": 0})
+    rng_tab = rng.standard_normal((64, 8)).astype(np.float32)
+    dom = PoolAllocator(dev).domain("embedding-mirror")
+    r = dom.alloc("rows", shape=rng_tab.shape, dtype="float32")
+    r.write_array(rng_tab)
+    r.persist(point="mirror-load")
+    dev.replicate_domain("embedding-mirror", 1, watermark=0)
+    flat = dev.shard_metrics()[1]["used_bytes"]
+    for k in range(1, 11):
+        dev.replicate_domain("embedding-mirror", 1, watermark=k)
+        assert dev.shard_metrics()[1]["used_bytes"] == flat, \
+            f"replica shard leaked on refresh {k}"
+    # the source retires "rows" for a differently-named, differently-shaped
+    # region (the ring-regrowth pattern): the refresh frees the stale name
+    # and the gauge settles at the new copy's size — no accumulation
+    dom.free_region("rows")
+    r2 = dom.alloc("rows2", shape=(96, 8), dtype="float32")
+    r2.write_array(np.zeros((96, 8), np.float32))
+    r2.persist(point="mirror-load")
+    dev.replicate_domain("embedding-mirror", 1, watermark=11)
+    rep = PoolAllocator(dev).domain(replica_domain("embedding-mirror"))
+    assert set(rep.regions()) == {"rows2", "watermark"}
+    grown = dev.shard_metrics()[1]["used_bytes"]
+    for k in range(12, 15):
+        dev.replicate_domain("embedding-mirror", 1, watermark=k)
+        assert dev.shard_metrics()[1]["used_bytes"] == grown
+    dev.close()
+
+
+# per-cell explicit pins: the dense tier always rides a SURVIVING shard so
+# each cell loses exactly one role — {mirror+undo-log, manifest primary,
+# replica destination (which also hosts quorum witness w1)}
+LOSS_CELLS = {"mirror": (0, "embedding-mirror=0,manifest=1,dense=1"),
+              "manifest": (1, "embedding-mirror=0,manifest=1,dense=0"),
+              "replica": (2, "embedding-mirror=0,manifest=1,dense=1")}
+
+
+def _loss_cc(root, addrs, pins):
+    return CheckpointConfig(
+        directory=root, dense_interval=1, pool_backend="sharded",
+        pool_shards=",".join(addrs), pool_placement=pins,
+        pool_compress=COMPRESS, pool_replica=2, pool_replica_every=2,
+        pool_ckpt_replica=2, pool_manifest_quorum=True)
+
+
+@pytest.mark.parametrize("when", ["mid-step", "after-crash"])
+@pytest.mark.parametrize("lost", sorted(LOSS_CELLS))
+def test_permanent_node_loss_matrix(tmp_path, ref_ctx, lost, when):
+    """A shard dies FOR GOOD: kill -9, backing image deleted, never
+    restarted. Losing the replica destination degrades (counted, logged
+    once) but never aborts training; losing the mirror+undo shard promotes
+    the commit-coupled replica in ONE placement epoch and recovers
+    bit-identically up to the replication watermark (the shipped undo ring
+    rolls the overhang back); losing the manifest primary leaves the 2-of-3
+    witness majority electing, and the witness promotes under the real
+    name. Reads routed at the dead shard raise typed connection errors —
+    never silent garbage."""
+    b, _, data, init_fn, mirrors, _ = ref_ctx
+    dead, pins = LOSS_CELLS[lost]
+    tag = f"{lost[:3]}{when[:3]}"
+    servers = _start_servers(tmp_path, 3, tag=tag)
+    addrs = [s.addr for s in servers]
+    root = str(tmp_path / "ck")
+    cc = _loss_cc(root, addrs, pins)
+    tc = TrainConfig(embed_learning_rate=0.05, checkpoint=cc)
+    upto = 4                      # steps 0..3: mirror replica watermark = 2
+    try:
+        st0 = init_fn(jax.random.PRNGKey(tc.seed))
+        mgr = CheckpointManager(b.model, cc, embed_init=st0["embed"])
+        state, _ = train_loop.train(b.model, tc, data, upto, relaxed=True,
+                                    state=st0, ckpt_manager=mgr)
+        mgr.flush()
+        assert mgr.stats["ship_steps"] == upto      # one ship per commit
+        assert mgr.stats["ship_full_refreshes"] >= 1
+        # the node is gone for good: killed, image unlinked, NEVER restarted
+        servers[dead].shutdown(close_device=True)
+        os.unlink(str(tmp_path / f"node{tag}{dead}.img"))
+
+        if lost == "replica":
+            # dead replica DESTINATION (also witness w1): training continues
+            # on the primary; every refresh/ship/witness failure is counted
+            state, _ = train_loop.train(b.model, tc, data, STEPS - upto,
+                                        relaxed=True, state=state,
+                                        start_step=upto, ckpt_manager=mgr)
+            mgr.flush()
+            assert mgr.stats["replica_refresh_failures"] >= 1
+            assert mgr.stats["manifest_witness_failures"] >= 1
+            np.testing.assert_array_equal(np.array(mgr.mirror_rows),
+                                          mirrors[STEPS - 1])
+            mgr.pool.close()
+            if when == "mid-step":
+                return
+            rec, mgr2 = _recover_and_resume(ref_ctx, root)  # 2-of-3 holds
+            assert rec.mirror_step == STEPS - 1
+            mgr2.pool.close()
+            return
+
+        if when == "after-crash":
+            # keep training until the lost shard surfaces as a writer error
+            with pytest.raises((RuntimeError, InjectedCrash, PoolError)):
+                train_loop.train(b.model, tc, data, STEPS - upto,
+                                 relaxed=True, state=state, start_step=upto,
+                                 ckpt_manager=mgr)
+                mgr.flush()
+        # ("mid-step": the trainer dies before the loss ever surfaces)
+        mgr.pool.close()
+
+        # survivors-only reopen, then promote: the flip is ONE epoch,
+        # committed durably through the recovery-side placement sink
+        pool = recovery.open_pool(root)
+        assert pool.dead_shards() == [dead]
+        epoch0 = pool.placement.epoch
+        pool.epoch_sink = lambda pm: recovery.record_placement(root, pool)
+        if lost == "mirror":
+            info = pool.promote_replica("embedding-mirror",
+                                        compress=COMPRESS)
+            assert set(info["promoted"]) == {"embedding-mirror", "undo-log"}
+        else:
+            info = pool.promote_replica("manifest", compress=COMPRESS,
+                                        from_domain="manifest@w1")
+            assert info["promoted"] == ("manifest",)
+        assert info["epoch"] == epoch0 + 1
+        assert all(d == 2 for d in info["dst"].values())
+        # beyond the promoted copies the lost shard answers typed errors
+        with pytest.raises(PoolConnectionError):
+            pool.read(dead * SHARD_SPAN, 8)
+        pool.close()
+
+        rec, mgr2 = _recover_and_resume(ref_ctx, root)
+        if lost == "mirror":
+            # bit-identical at the REPLICATION watermark: the replica was
+            # refreshed at step 2 (cadence 2) and the shipped undo ring
+            # rolled the step-3 overhang back onto the promoted copy
+            # (_recover_and_resume asserted rows == mirrors[2] verbatim)
+            assert rec.mirror_step == 2
+            assert rec.rolled_back
+        else:
+            assert rec.mirror_step == upto - 1
         mgr2.pool.close()
     finally:
         for s in servers:
