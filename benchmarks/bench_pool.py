@@ -9,13 +9,20 @@ trainer commits interleaved, measuring:
   * link bytes per 1k looked-up rows (the cache's traffic saving),
   * cache hit rate and commit-driven invalidations.
 
-Wire-v2 cells ride along:
+Wire cells ride along:
 
   * ``pipeline`` — raw pool read ops/s at in-flight depths 1/4/8 on the
     remote and sharded backends, plus the client channel's per-op latency
-    percentiles (the tagged-frame pipelining win),
+    percentiles (the tagged-frame pipelining win). A v2-vs-v3 grid of
+    64 KiB reads at depths 1/8 measures the zero-copy data path (binary
+    headers + scatter-gather I/O + pooled recv buffers); each cell
+    records the client's ``bytes_copied`` counter — 0 on the v3 path.
   * ``batch_frames`` — link bytes for N single region reads vs ONE
     scatter-gather batch frame carrying the same N reads.
+
+``key_cells()`` reduces a result dict to scale-free ratios; the
+``benchmarks.run --compare`` regression guard fails a PR when any ratio
+drops more than 20% against the committed ``BENCH_pool.json``.
 
 The JSON is flat and append-friendly so CI can diff the perf trajectory
 per PR. ``--smoke`` shrinks the stream for the CI matrix cell; the rows()
@@ -175,46 +182,60 @@ def _spawn_node(root: str, name: str) -> tuple[str, subprocess.Popen]:
         time.sleep(0.02)
 
 
-def _mkpool_proc(backend: str, root: str, tag: str):
+def _mkpool_proc(backend: str, root: str, tag: str, wire=None):
     procs = []
     if backend == "remote":
         addr, p = _spawn_node(root, f"{tag}0")
         procs.append(p)
-        return make_pool("remote", addr=addr), procs
+        return make_pool("remote", addr=addr, wire=wire), procs
     addrs = []
     for i in range(2):
         addr, p = _spawn_node(root, f"{tag}{i}")
         addrs.append(addr)
         procs.append(p)
-    return make_pool("sharded", shards=",".join(addrs)), procs
+    return make_pool("sharded", shards=",".join(addrs), wire=wire), procs
 
 
-def bench_pipeline(backend: str, depth: int, *, nops: int,
-                   root: str) -> dict:
+def bench_pipeline(backend: str, depth: int, *, nops: int, root: str,
+                   wire=None, read_bytes: int = 128,
+                   repeats: int = 1) -> dict:
     """Raw pool-read throughput with ``depth`` requests in flight on one
     connection — depth 1 is the old one-at-a-time wire discipline, depth
-    8 is the pipelined v2 channel earning its keep. Nodes run
-    out-of-process (the deployment shape)."""
-    pool, servers = _mkpool_proc(backend, root, f"pipe-{backend}-{depth}-")
+    8 is the pipelined channel earning its keep. ``wire`` pins the
+    protocol revision (the v2-vs-v3 zero-copy comparison cells);
+    ``read_bytes`` sizes each read (64 KiB cells are where scatter-gather
+    I/O and buffer reuse pay). Nodes run out-of-process (the deployment
+    shape)."""
+    pool, servers = _mkpool_proc(
+        backend, root, f"pipe-{backend}-{depth}-w{wire or 0}-", wire=wire)
     try:
         alloc = PoolAllocator(pool)
+        blk = max(1 << 16, read_bytes * 16)
         region = alloc.domain("pipe-bench").alloc(
-            "blk", shape=(1 << 16,), dtype="uint8")
-        pool.write(region.off, np.zeros(1 << 16, np.uint8))
-        offs = [region.off + (i % 512) * 128 for i in range(nops)]
-        t0 = time.perf_counter()
-        pending: deque = deque()
-        for off in offs:
-            pending.append(pool.read_async(off, 128))
-            while len(pending) >= depth:
+            "blk", shape=(blk,), dtype="uint8")
+        pool.write(region.off, np.zeros(blk, np.uint8))
+        span = blk // read_bytes
+        offs = [region.off + (i % span) * read_bytes for i in range(nops)]
+
+        def one_pass() -> float:
+            t0 = time.perf_counter()
+            pending: deque = deque()
+            for off in offs:
+                pending.append(pool.read_async(off, read_bytes))
+                while len(pending) >= depth:
+                    pending.popleft().result()
+            while pending:
                 pending.popleft().result()
-        while pending:
-            pending.popleft().result()
-        wall = time.perf_counter() - t0
+            return time.perf_counter() - t0
+
+        # comparison cells take the best of ``repeats`` passes: scheduler
+        # noise on short walls otherwise swamps the wire-level difference
+        wall = min(one_pass() for _ in range(max(1, repeats)))
         cell = {
             "backend": backend,
             "depth": depth,
             "ops": nops,
+            "read_bytes": read_bytes,
             "ops_per_s": round(nops / wall, 1),
             "wall_s": round(wall, 4),
         }
@@ -229,9 +250,16 @@ def bench_pipeline(backend: str, depth: int, *, nops: int,
                 cell["read_p99_us"] = round(read["p99_s"] * 1e6, 1)
         if hasattr(pool, "wire_stats"):
             ws = pool.wire_stats()
-            if "wire" not in ws:                   # sharded: per-node
-                ws = next(iter(ws.values()), {})
-            cell["wire"] = ws.get("wire")
+            # sharded: per-node dicts — wire from any node, copy counters
+            # summed over all of them (the region lives on ONE shard)
+            nodes = [ws] if "wire" in ws else list(ws.values())
+            if nodes:
+                cell["wire"] = nodes[0].get("wire")
+                if any("bytes_copied" in n for n in nodes):
+                    cell["bytes_copied"] = sum(
+                        int(n.get("bytes_copied", 0)) for n in nodes)
+                    cell["data_frames"] = sum(
+                        int(n.get("data_frames", 0)) for n in nodes)
         return cell
     finally:
         pool.close()
@@ -276,6 +304,7 @@ def run(backends, *, smoke: bool = False, seed: int = 0) -> dict:
     batches = 8 if smoke else 64
     batch_requests = 8 if smoke else 32
     nops = 256 if smoke else 2048
+    nops_bulk = 64 if smoke else 1024      # 64 KiB reads: fewer, bigger
     root = tempfile.mkdtemp(prefix="bench_pool_")
     cells = []
     for backend in backends:
@@ -283,12 +312,18 @@ def run(backends, *, smoke: bool = False, seed: int = 0) -> dict:
             cells.append(bench_cell(backend, cache_rows, batches=batches,
                                     batch_requests=batch_requests,
                                     root=root, seed=seed))
+    wired = [b for b in backends if b in ("remote", "sharded")]
     pipeline = [bench_pipeline(backend, depth, nops=nops, root=root)
-                for backend in backends
-                if backend in ("remote", "sharded")
+                for backend in wired
                 for depth in (1, 4, 8)]
-    batch_frames = bench_batch_frames(root) \
-        if any(b in ("remote", "sharded") for b in backends) else None
+    # the zero-copy comparison grid: v2 vs v3, 64 KiB reads, depth 1 / 8
+    pipeline += [bench_pipeline(backend, depth, nops=nops_bulk, root=root,
+                                wire=wire, read_bytes=64 * 1024,
+                                repeats=1 if smoke else 5)
+                 for backend in wired
+                 for wire in (2, 3)
+                 for depth in (1, 8)]
+    batch_frames = bench_batch_frames(root) if wired else None
     return {
         "bench": "pool_serve",
         "smoke": smoke,
@@ -297,6 +332,43 @@ def run(backends, *, smoke: bool = False, seed: int = 0) -> dict:
         "pipeline": pipeline,
         "batch_frames": batch_frames,
     }
+
+
+def key_cells(res: dict) -> dict:
+    """Scale-free regression keys over one result dict: ratios survive
+    hardware changes, absolute ops/s do not. ``benchmarks.run --compare``
+    fails a PR when any of these drops >20% against the committed
+    baseline."""
+    out: dict[str, float] = {}
+    by = {}
+    for c in res.get("pipeline") or []:
+        by[(c["backend"], c.get("wire"), c.get("read_bytes", 128),
+            c["depth"])] = c["ops_per_s"]
+    for backend in ("remote", "sharded"):
+        d1 = next((v for (b, _w, rb, d), v in by.items()
+                   if b == backend and rb == 128 and d == 1), None)
+        d8 = next((v for (b, _w, rb, d), v in by.items()
+                   if b == backend and rb == 128 and d == 8), None)
+        if d1 and d8:
+            out[f"pipeline.{backend}.d8_over_d1"] = round(d8 / d1, 3)
+        v2 = by.get((backend, 2, 65536, 8))
+        v3 = by.get((backend, 3, 65536, 8))
+        if v2 and v3:
+            out[f"pipeline.{backend}.v3_over_v2_64k_d8"] = \
+                round(v3 / v2, 3)
+    bf = res.get("batch_frames")
+    if bf:
+        out["batch_frames.savings_ratio"] = float(bf["savings_ratio"])
+    on = off = None
+    for c in res.get("cells") or []:
+        if c["backend"] == "dram":
+            if c["cache_rows"]:
+                on = c["link_bytes_per_1k_lookups"]
+            else:
+                off = c["link_bytes_per_1k_lookups"]
+    if on and off:
+        out["serve.cache_link_savings"] = round(off / on, 3)
+    return out
 
 
 def rows(smoke: bool = True):
@@ -335,7 +407,10 @@ def main():
         if "read_p50_us" in c:
             extra = (f" read_p50={c['read_p50_us']}us "
                      f"p99={c['read_p99_us']}us")
+        if "bytes_copied" in c:
+            extra += f" copied={c['bytes_copied']}B"
         print(f"[bench_pool] {c['backend']:7s} pipeline depth={c['depth']} "
+              f"wire=v{c.get('wire')} read={c.get('read_bytes', 128)}B "
               f"ops/s={c['ops_per_s']}{extra}")
     bf = res["batch_frames"]
     if bf:

@@ -1,12 +1,22 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig11,fig13]
+    PYTHONPATH=src python -m benchmarks.run --compare BENCH_pool.json
 
 Prints ``name,value,derived`` CSV lines (value units are in the name).
+
+``--compare BASELINE`` is the perf regression guard: it re-runs the pool
+bench (smoke size, remote+sharded) and compares the scale-free ratio
+keys (``bench_pool.key_cells``) against the committed baseline — exits 1
+when any named key drops more than 20%. Ratios (pipelining speedup,
+v3-over-v2 zero-copy speedup, batch-frame savings, cache link savings)
+survive hardware differences between the baseline box and CI runners;
+absolute ops/s do not, so they are not compared.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -27,10 +37,53 @@ BENCHES = {
 }
 
 
+DROP_TOLERANCE = 0.20      # a key cell may lose at most 20% vs baseline
+
+
+def compare(baseline_path: str) -> int:
+    """Regression guard: fresh smoke run vs the committed baseline, on
+    the scale-free ratio keys only. Returns a process exit code."""
+    with open(baseline_path) as f:
+        base = bench_pool.key_cells(json.load(f))
+    if not base:
+        print(f"# compare: no key cells in {baseline_path}")
+        return 1
+    # full-size run, not smoke: the baseline's ratios were measured at
+    # full scale, and pipelining/zero-copy ratios shrink at smoke sizes
+    # where startup dominates — a smoke run would false-alarm every time
+    fresh_res = bench_pool.run(["dram", "remote", "sharded"], smoke=False)
+    fresh = bench_pool.key_cells(fresh_res)
+    failed = []
+    for key in sorted(base):
+        b = base[key]
+        g = fresh.get(key)
+        if g is None:
+            print(f"{key},MISSING,baseline={b}")
+            failed.append(key)
+            continue
+        floor = b * (1.0 - DROP_TOLERANCE)
+        verdict = "ok" if g >= floor else "REGRESSED"
+        print(f"{key},{g:.3f},baseline={b:.3f}|floor={floor:.3f}"
+              f"|{verdict}")
+        if g < floor:
+            failed.append(key)
+    if failed:
+        print(f"# compare FAILED: {failed}")
+        return 1
+    print(f"# compare ok: {len(base)} key cells within "
+          f"{int(DROP_TOLERANCE * 100)}% of {baseline_path}")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--compare", default="",
+                    help="baseline BENCH_pool.json: run the pool bench "
+                         "and fail on a >20% drop in any key cell")
     args = ap.parse_args()
+    if args.compare:
+        sys.exit(compare(args.compare))
     names = [n.strip() for n in args.only.split(",") if n.strip()] \
         or list(BENCHES)
     failed = []

@@ -43,7 +43,8 @@ import numpy as np
 __all__ = [
     "OrderingViolation", "UnpersistedReadError", "CommitBeforePayloadError",
     "WriteAfterPublishError", "UseAfterFreeError", "DoubleFreeError",
-    "RegionOverlapError", "ShadowTracker", "CheckedPool", "checking_enabled",
+    "RegionOverlapError", "RecycledBufferError", "ShadowTracker",
+    "CheckedPool", "checking_enabled",
 ]
 
 
@@ -92,6 +93,14 @@ class DoubleFreeError(OrderingViolation):
 class RegionOverlapError(OrderingViolation):
     """Rule F: an allocation landed over the bytes of a different live
     region."""
+
+
+class RecycledBufferError(OrderingViolation):
+    """Rule L (loaned-buffer lifetime): a wire-v3 recv-buffer memoryview
+    was used after its channel recycled the buffer for a later frame —
+    the bytes under the view belong to someone else now. Raised by
+    ``protocol.Loan.view()`` on a stale generation; the fix is to copy
+    the data out before releasing, or ``detach()`` the loan."""
 
 
 # ---------------------------------------------------------------------------

@@ -27,9 +27,20 @@ enforces the invariants code review keeps missing:
     form an acyclic order graph (one level of same-class call propagation
     is followed); cycles are reported with both acquisition paths.
   * **R4 no socket I/O under a device lock** — no blocking socket call
-    (``send_frame``/``recv_frame``/``sendall``/``recv``/``accept``/
-    ``connect``) while holding a ``_lock`` device lock (the PoolServer
-    pattern): a slow peer must never stall every other tenant's media ops.
+    (``send_frame``/``recv_frame``/``sendall``/``sendmsg``/``recv``/
+    ``accept``/``connect``) while holding a ``_lock`` device lock (the
+    PoolServer pattern): a slow peer must never stall every other
+    tenant's media ops.
+  * **R5 v3-codec completeness** — every data-class op the wire declares
+    binary (``read``/``write`` plus the ``_V3_NMP_KINDS`` tuple) has a
+    ``V3_CODECS`` entry with a callable pack/unpack pair, every codec
+    names a registered op or nmp kind, opcodes are collision-free, and
+    each request codec is reachable from ``_V3_BY_CODE``.
+  * **R6 no bytes() on the data path** — in ``pool/{protocol,remote,
+    server}.py`` any ``bytes(...)``/``.tobytes()``/``b"".join(...)``
+    call must carry a ``# wire-copy:`` annotation (same line or the one
+    above) naming why the copy is sanctioned; unannotated copies are how
+    zero-copy regresses one innocent-looking call at a time.
 
 Exit status 0 when clean; 1 with ``file:line: [rule] message`` diagnostics
 otherwise. Passing explicit ``.py`` files runs the file-local rules only
@@ -50,8 +61,12 @@ from dataclasses import dataclass, field
 INLINE_SERVER_OPS = frozenset({"hello", "ping", "close", "batch"})
 
 # blocking socket surface (raw socket + framing helpers)
-SOCKET_CALLS = frozenset({"sendall", "send", "recv", "recv_into", "accept",
-                          "connect", "send_frame", "recv_frame"})
+SOCKET_CALLS = frozenset({"sendall", "send", "sendmsg", "sendmsg_all",
+                          "recv", "recv_into", "accept", "connect",
+                          "send_frame", "recv_frame", "recv_frame_pooled"})
+
+# the zero-copy wire data path: files where R6 polices byte materialization
+DATA_PATH_FILES = ("pool/protocol.py", "pool/remote.py", "pool/server.py")
 
 # schedule constructors whose literal args arm a fault point. ``seeded`` is
 # absent on purpose: its real call sites take a *POINTS constant (covered by
@@ -470,6 +485,77 @@ def _rule_ops(src_facts, findings: list):
                     f"the by-name re-raise on the client would TypeError"))
 
 
+def _rule_v3(findings: list):
+    """R5: the binary-header registry is complete and closed."""
+    from repro.pool import protocol as P
+    path = "src/repro/pool/protocol.py"
+    declared = ("read", "write") + tuple(P._V3_NMP_KINDS)
+    for name in declared:
+        codec = P.V3_CODECS.get(name)
+        if codec is None:
+            findings.append(Finding(
+                "R5a-missing-v3-codec", path, 1,
+                f"data op {name!r} is declared binary on the v3 wire but "
+                f"V3_CODECS has no entry — it silently rides as JSON"))
+        elif not (callable(codec.pack) and callable(codec.unpack)):
+            findings.append(Finding(
+                "R5a-missing-v3-codec", path, 1,
+                f"V3_CODECS[{name!r}] is missing a callable pack/unpack "
+                f"pair"))
+    codes: dict[int, str] = {}
+    for name, codec in sorted(P.V3_CODECS.items()):
+        if name not in P.OPS and name not in P.NMP_OPS:
+            findings.append(Finding(
+                "R5b-unknown-v3-op", path, 1,
+                f"V3_CODECS[{name!r}] names neither a protocol.OPS op nor "
+                f"an NMP_OPS kind"))
+        other = codes.setdefault(codec.code, name)
+        if other != name:
+            findings.append(Finding(
+                "R5c-opcode-collision", path, 1,
+                f"binary opcode {codec.code} is claimed by both "
+                f"{other!r} and {name!r}"))
+        if P._V3_BY_CODE.get(codec.code) is not codec:
+            findings.append(Finding(
+                "R5d-unreachable-codec", path, 1,
+                f"V3_CODECS[{name!r}] (code {codec.code}) is not what "
+                f"_V3_BY_CODE decodes — requests would unpack as the "
+                f"wrong op"))
+
+
+def _rule_copies(paths, findings: list):
+    """R6: unannotated byte materialization on the wire data path."""
+    for path in paths:
+        norm = path.replace(os.sep, "/")
+        if not any(norm.endswith(rel) for rel in DATA_PATH_FILES):
+            continue
+        with open(path, "r", encoding="utf-8") as fh:
+            src = fh.read()
+        lines = src.splitlines()
+        for node in ast.walk(ast.parse(src, filename=path)):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id == "bytes":
+                what = "bytes()"
+            elif isinstance(fn, ast.Attribute) and fn.attr == "tobytes":
+                what = ".tobytes()"
+            elif isinstance(fn, ast.Attribute) and fn.attr == "join" and \
+                    isinstance(fn.value, ast.Constant) and \
+                    isinstance(fn.value.value, bytes):
+                what = 'b"".join()'
+            else:
+                continue
+            window = lines[max(0, node.lineno - 2):node.lineno]
+            if any("wire-copy:" in ln for ln in window):
+                continue
+            findings.append(Finding(
+                "R6-copy-on-data-path", path, node.lineno,
+                f"{what} on the wire data path without a '# wire-copy:' "
+                f"annotation — bodies travel as memoryview/np.frombuffer "
+                f"views; annotate the line if this copy is sanctioned"))
+
+
 def _rule_locks(facts_list, findings: list):
     """R3: the lock-order graph must be acyclic; R4: no socket I/O under a
     device lock."""
@@ -582,6 +668,8 @@ def run(paths: list[str]) -> list[Finding]:
     _rule_points(src_facts, aux_facts, findings)
     _rule_ops(src_facts, findings)
     _rule_locks(src_facts, findings)
+    _rule_v3(findings)
+    _rule_copies([f.path for f in src_facts], findings)
     return findings
 
 

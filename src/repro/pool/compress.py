@@ -115,11 +115,14 @@ _FRAME = struct.Struct("<4sBxxxQQI")    # magic, mode, raw_len, stored_len, crc
 FRAME_OVERHEAD = _FRAME.size
 
 
-def frame(raw: bytes, mode: str = "zlib") -> bytes:
-    """Wrap `raw` in a self-describing compressed container."""
+def frame(raw, mode: str = "zlib") -> bytes:
+    """Wrap `raw` (any bytes-like buffer) in a self-describing compressed
+    container."""
     stored, eff = encode_bytes(mode, raw)
+    # bytes() is free when the codec already produced bytes (zlib path);
+    # it materialises only an uncompressed memoryview passthrough
     return _FRAME.pack(_MAGIC, MODE_ID[eff], len(raw), len(stored),
-                       zlib.crc32(stored)) + stored
+                       zlib.crc32(stored)) + bytes(stored)
 
 
 def unframe(buf: bytes) -> bytes:

@@ -328,8 +328,8 @@ def make_pool(backend: str, *, path: Optional[str] = None,
     """``timeout`` (remote/sharded only): a float rescales the per-op-class
     wire deadlines around it; a ``protocol.Timeouts`` pins them exactly.
     None keeps the registry's per-class defaults. ``wire`` pins the
-    protocol revision to negotiate (1 or 2); None honours
-    ``REPRO_POOL_WIRE`` and otherwise asks for v2. ``check`` wraps the
+    protocol revision to negotiate (1, 2 or 3); None honours
+    ``REPRO_POOL_WIRE`` and otherwise asks for v3. ``check`` wraps the
     device in the crash-consistency checker (``repro.analysis``); None
     honours ``REPRO_POOL_CHECK`` — strictly off the default path."""
     dev: PoolDevice

@@ -59,6 +59,8 @@ class PoolMetrics:
     cache_invalidations: int = 0                  # rows evicted by commits
     replica_refreshes: int = 0                    # read-replica copy rounds
     replica_bytes: int = 0                        # ...and bytes they moved
+    bytes_copied: int = 0                         # body bytes memcpy'd at the
+    data_frames: int = 0                          # frame boundary / data ops
 
     def reset(self):
         """Zero the traffic counters (fault/crash tallies are kept) — e.g.
@@ -75,6 +77,8 @@ class PoolMetrics:
         self.cache_invalidations = 0
         self.replica_refreshes = 0
         self.replica_bytes = 0
+        self.bytes_copied = 0
+        self.data_frames = 0
 
     def record_cache(self, hits: int = 0, misses: int = 0,
                      invalidations: int = 0):
@@ -186,6 +190,8 @@ class PoolMetrics:
         m.cache_invalidations = int(snap.get("cache_invalidations", 0))
         m.replica_refreshes = int(snap.get("replica_refreshes", 0))
         m.replica_bytes = int(snap.get("replica_bytes", 0))
+        m.bytes_copied = int(snap.get("bytes_copied", 0))
+        m.data_frames = int(snap.get("data_frames", 0))
         return m
 
     def snapshot(self) -> dict:
@@ -214,6 +220,8 @@ class PoolMetrics:
             "cache_hit_rate": self.cache_hit_rate(),
             "replica_refreshes": self.replica_refreshes,
             "replica_bytes": self.replica_bytes,
+            "bytes_copied": self.bytes_copied,
+            "data_frames": self.data_frames,
             "energy_j": self.energy(),
         }
 
@@ -241,6 +249,9 @@ class PoolMetrics:
         if self.replica_refreshes:
             lines.append(f"  replica: refreshes={self.replica_refreshes} "
                          f"bytes={self.replica_bytes}")
+        if self.data_frames:
+            lines.append(f"  wire: data_frames={self.data_frames} "
+                         f"bytes_copied={self.bytes_copied}")
         if self.dropped_flushes or self.torn_writes or self.crashes:
             lines.append(f"  faults: dropped={self.dropped_flushes} "
                          f"torn={self.torn_writes} crashes={self.crashes}")

@@ -305,9 +305,8 @@ class NmpQueue:
         node, land the RAW image verbatim in the region, persist exactly
         that range. The write half of live migration — the destination copy
         is bit-identical to the exported source image by construction."""
-        frame = bytes(frame) if isinstance(frame, (bytes, bytearray,
-                                                   memoryview)) \
-            else bytes(np.ascontiguousarray(frame).view(np.uint8))
+        if not isinstance(frame, (bytes, bytearray, memoryview)):
+            frame = memoryview(np.ascontiguousarray(frame)).cast("B")
         if self._remote:
             self.device.nmp("region_import", region, blob=frame, point=point)
             return
@@ -332,8 +331,8 @@ class NmpQueue:
         if self._remote:
             return self.device.nmp("blob_put", region, blob=blob,
                                    point=point, compress=compress)["stored"]
-        raw = bytes(blob) if isinstance(blob, (bytes, bytearray, memoryview)) \
-            else np.ascontiguousarray(blob).tobytes()
+        raw = blob if isinstance(blob, (bytes, bytearray, memoryview)) \
+            else memoryview(np.ascontiguousarray(blob)).cast("B")
         framed = pc.frame(raw, mode=compress)
         if len(framed) > region.nbytes:
             raise PoolError(f"blob ({len(framed)}B framed) overflows region "

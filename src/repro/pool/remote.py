@@ -45,10 +45,10 @@ from repro.pool.metrics import PoolMetrics
 # the protocol module is the registry of record; these re-exports keep the
 # historical import surface (tests, tools) working unchanged
 from repro.pool.protocol import (  # noqa: F401  (re-exported)
-    MAX_FRAME, NMP_OPS, OPS, WIRE_V1, WIRE_V2, MappedFuture, PoolChannel,
-    PoolConnectionError, PoolTimeoutError, Timeouts, WireError, _recv_exact,
-    error_to_frame, format_addr, frame_to_error, parse_addr, recv_frame,
-    register_error, send_frame, wire_from_env)
+    MAX_FRAME, NMP_OPS, OPS, WIRE_V1, WIRE_V2, WIRE_V3, MappedFuture,
+    PoolChannel, PoolConnectionError, PoolTimeoutError, Timeouts, WireError,
+    _recv_exact, error_to_frame, format_addr, frame_to_error, parse_addr,
+    recv_frame, register_error, send_frame, tune_socket, wire_from_env)
 
 # historical alias — the flat timeout is gone; ops now carry per-class
 # deadlines (protocol.Timeouts). This is only the default "data" deadline.
@@ -82,10 +82,13 @@ def auth_proof(secret: str, challenge: str, tenant: str) -> str:
                     f"{challenge}:{tenant}".encode(), "sha256").hexdigest()
 
 
-def _as_bytes(data) -> bytes:
+def _as_segment(data):
+    """One outbound body buffer, uncopied: bytes-likes pass through,
+    arrays become flat byte views (contiguity materialized only when the
+    array actually is strided)."""
     if isinstance(data, (bytes, bytearray, memoryview)):
-        return bytes(data)
-    return np.ascontiguousarray(data).tobytes()
+        return data
+    return memoryview(np.ascontiguousarray(data)).cast("B")
 
 
 def _region_hdr(region) -> dict:
@@ -96,36 +99,39 @@ def _region_hdr(region) -> dict:
 def encode_nmp(kind: str, region, idx=None, rows=None, blob=None,
                combine: str = "sum", point: Optional[str] = None,
                log_region=None, **extra):
-    """One nmp call -> (hdr, body) — the wire form shared by the single-op
-    path and scatter-gather batch frames."""
+    """One nmp call -> (hdr, body segments) — the wire form shared by the
+    single-op path and scatter-gather batch frames. The body is a scatter
+    list of views over the caller's own idx/rows/blob buffers; nothing is
+    joined client-side (the channel ships the segments vectored)."""
     hdr = {"op": "nmp", "kind": kind, "combine": combine, "point": point,
            "region": _region_hdr(region)}
-    body = b""
+    body = []
     if idx is not None:
         idx = np.ascontiguousarray(np.asarray(idx), dtype=np.int64)
         hdr["idx_shape"] = list(idx.shape)
-        body += idx.tobytes()
+        body.append(_as_segment(idx))
     if rows is not None:
         rows = np.ascontiguousarray(rows)
         hdr["rows_dtype"] = str(rows.dtype)
         hdr["rows_shape"] = list(rows.shape)
-        body += rows.tobytes()
+        body.append(_as_segment(rows))
     if blob is not None:
-        body += _as_bytes(blob)
+        body.append(_as_segment(blob))
     if log_region is not None:
         hdr["log_region"] = _region_hdr(log_region)
     hdr.update(extra)
     return hdr, body
 
 
-def decode_nmp(rh: dict, rbody: bytes):
-    """Reply frame -> stats dict | result array | None."""
+def decode_nmp(rh: dict, rbody):
+    """Reply frame -> stats dict | result array | None. The array is a
+    zero-copy view over the reply body — on a v3 channel that is the
+    pooled recv buffer itself (detached to the caller, never recycled)."""
     if "stats" in rh:
         return rh["stats"]
     if rh.get("shape") is None:
         return None
-    return np.frombuffer(rbody, dtype=rh["dtype"]) \
-        .reshape(rh["shape"]).copy()
+    return np.frombuffer(rbody, dtype=rh["dtype"]).reshape(rh["shape"])
 
 
 # ---------------------------------------------------------------------------
@@ -144,7 +150,7 @@ class RemotePool(PoolDevice):
 
     ``timeout`` accepts a float (rescales every timeout class around it —
     the historical knob) or a ``protocol.Timeouts``; ``wire`` pins the
-    maximum protocol generation to offer (default: v2, or
+    maximum protocol generation to offer (default: v3, or
     ``REPRO_POOL_WIRE``).
     """
 
@@ -170,6 +176,7 @@ class RemotePool(PoolDevice):
             else:
                 sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
             sock.settimeout(self._timeouts.data)
+            tune_socket(sock)
             sock.connect(target)
         except OSError as e:
             raise PoolConnectionError(
@@ -261,13 +268,14 @@ class RemotePool(PoolDevice):
                                                          dtype=np.uint8))
 
     def read_batch(self, reqs, tag: str = "read") -> list:
-        """[(off, nbytes), ...] -> [bytes, ...] in ONE scatter-gather
-        frame: one link round trip for N region reads."""
+        """[(off, nbytes), ...] -> [bytes-like, ...] in ONE scatter-gather
+        frame: one link round trip for N region reads. On a v3 channel the
+        results are zero-copy views into the frame's recv buffer."""
         if not reqs:
             return []
         items = [({"op": "read", "off": int(o), "nbytes": int(n),
                    "tag": tag}, b"") for o, n in reqs]
-        return [bytes(sb) for _, sb in self._request_batch(items)]
+        return [sb for _, sb in self._request_batch(items)]
 
     def view(self, off: int, nbytes: int) -> np.ndarray:
         # a writable LOCAL copy: mutations do not reach the server (remote
@@ -279,11 +287,11 @@ class RemotePool(PoolDevice):
 
     def write(self, off: int, data, tag: str = "write"):
         self._request({"op": "write", "off": int(off), "tag": tag},
-                      _as_bytes(data))
+                      _as_segment(data))
 
     def write_async(self, off: int, data, tag: str = "write"):
         fut = self._chan.submit({"op": "write", "off": int(off),
-                                 "tag": tag}, _as_bytes(data))
+                                 "tag": tag}, _as_segment(data))
         return MappedFuture(fut, lambda r: None)
 
     def mark_dirty(self, off: int, nbytes: int):

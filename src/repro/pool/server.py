@@ -8,7 +8,10 @@ TCP socket. Connections negotiate a wire generation at hello: v2 peers get
 tagged frames — the connection's reader decodes and dispatches while
 replies drain out of a per-connection writer queue tagged with each
 request's ``rid`` — plus scatter-gather ``batch`` frames and keepalive
-``ping``s; v1 peers keep the strict request/response protocol unchanged. Trainer death (including ``kill -9``) costs the node nothing; node
+``ping``s; v3 peers additionally run the zero-copy data path (binary
+headers, pooled ``recv_into`` request buffers, reply bodies sent as
+device-memory views through vectored ``sendmsg``); v1 peers keep the
+strict request/response protocol unchanged. Trainer death (including ``kill -9``) costs the node nothing; node
 death loses only unpersisted cache, exactly like a power-cycled module —
 pmem-backed servers recover their media image on restart.
 
@@ -66,11 +69,14 @@ from repro.pool.device import (DramPool, PmemPool, PoolDevice, PoolError,
 from repro.pool.faults import FaultEvent, FaultSchedule, InjectedCrash
 from repro.pool.metrics import PoolMetrics
 from repro.pool.nmp import NmpQueue
-from repro.pool.protocol import (NMP_OPS, OPS, WIRE_V1, WIRE_V2,
-                                 BufferedSocket, WireError, error_to_frame,
-                                 format_addr, pack_batch_results, pack_frame,
+from repro.pool.protocol import (DATA_OPS, NMP_OPS, OPS, WIRE_V1, WIRE_V2,
+                                 WIRE_V3, BufferedSocket, BufferPool,
+                                 PooledIngest, WireError, _as_segment_list,
+                                 error_to_frame, format_addr,
+                                 pack_batch_results, pack_frame_segments,
                                  parse_addr, recv_frame, send_frame,
-                                 unpack_batch, wire_from_env)
+                                 sendmsg_all, tune_socket, unpack_batch,
+                                 wire_from_env)
 from repro.pool.remote import PoolAuthError, auth_proof
 
 
@@ -106,6 +112,10 @@ class PoolServer:
         self.wire_max = int(wire) if wire is not None else wire_from_env()
         self.tenants: dict[str, Tenant] = {}
         self._lock = threading.RLock()       # serialises all device work
+        # zero-copy read replies are live views of device cache while they
+        # sit in a reply queue; mutating ops drain them first (view gate)
+        self._views_cv = threading.Condition()
+        self._views_out = 0
         self._nmp = NmpQueue(device)
         self._stop = threading.Event()
         self._conns: set = set()
@@ -134,6 +144,7 @@ class PoolServer:
                 conn, _ = self._listener.accept()
             except OSError:
                 break                       # listener closed by shutdown()
+            tune_socket(conn)
             with self._lock:
                 self._conns.add(conn)
             threading.Thread(target=self._serve_conn, args=(conn,),
@@ -161,34 +172,96 @@ class PoolServer:
         if close_device:
             self.device.close()
 
+    # -- view gate --------------------------------------------------------------
+    # Zero-copy read replies carry views of the live device cache until the
+    # writer puts them on the wire. A mutating op dispatched while such a
+    # view is queued (on ANY connection) could change the bytes under it,
+    # so mutators wait for the in-flight view count to reach zero first.
+    def _views_add(self, n: int):
+        if n:
+            with self._views_cv:
+                self._views_out += n
+
+    def _views_done(self, n: int):
+        if n:
+            with self._views_cv:
+                self._views_out -= n
+                self._views_cv.notify_all()
+
+    def _views_drain(self):
+        with self._views_cv:
+            if self._views_out:
+                # bounded wait: a writer that died mid-send must not wedge
+                # every mutator forever
+                self._views_cv.wait_for(lambda: self._views_out == 0,
+                                        timeout=5.0)
+
+    def _mutates(self, op, hdr: dict) -> bool:
+        if op == "batch":
+            return any(isinstance(s, dict) and self._mutates(s.get("op"), s)
+                       for s in hdr.get("ops") or [])
+        if op == "nmp":
+            nspec = NMP_OPS.get(hdr.get("kind"))
+            return bool(nspec is None or nspec.mutating)
+        spec = OPS.get(op)
+        return bool(spec is not None and spec.mutating)
+
     # -- per-connection loop ----------------------------------------------------
-    def _conn_writer(self, conn: socket.socket, out_q: "queue.Queue"):
-        """v2 reply pump: the reader decodes + dispatches, replies drain
+    def _conn_writer(self, conn: socket.socket, out_q: "queue.Queue",
+                     wire: int):
+        """Reply pump (v2+): the reader decodes + dispatches, replies drain
         out of this queue tagged with their request's rid. Replies that
         queued up while a send was in flight are corked into a single
-        sendall — under pipelining this collapses N reply syscalls into
-        one and is a large part of the depth>1 throughput win."""
+        send — one joined sendall for a v2 peer, one vectored sendmsg of
+        every frame's segments for v3 (reply bodies are the dispatchers'
+        own buffers, device-cache views included, copied nowhere on the
+        way out)."""
         while True:
             item = out_q.get()
-            if item is None:
-                return
+            stop = item is None
+            batch = [] if stop else [item]
+            while not stop:
+                try:
+                    item = out_q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is None:
+                    stop = True
+                    break
+                batch.append(item)
+            views = sum(nv for _, _, nv in batch)
             try:
-                frames = []
-                while item is not None:
-                    rh, rbody = item
-                    frames.append(pack_frame(rh, rbody))
-                    try:
-                        item = out_q.get_nowait()
-                    except queue.Empty:
-                        break
-                conn.sendall(b"".join(frames))
+                segs = []
+                for rh, rbody, _ in batch:
+                    frame, _ = pack_frame_segments(rh, rbody, wire=wire)
+                    if wire >= WIRE_V3:
+                        segs.extend(frame)
+                    else:
+                        # wire-copy: v1/v2 peers take joined frames
+                        segs.append(b"".join(frame))
+                if segs:
+                    if wire >= WIRE_V3:
+                        sendmsg_all(conn, segs)
+                    else:
+                        # wire-copy: one corked sendall per reply burst
+                        conn.sendall(b"".join(segs))
             except (OSError, PoolError):
                 # reply path broken: kill the conn so the reader unblocks
                 with contextlib.suppress(OSError):
                     conn.close()
-                return
-            if item is None:
-                return
+                stop = True
+            finally:
+                self._views_done(views)
+            if stop:
+                # surrender any still-queued view counts so mutators on
+                # other connections don't wait out the gate timeout
+                while True:
+                    try:
+                        item = out_q.get_nowait()
+                    except queue.Empty:
+                        return
+                    if item is not None:
+                        self._views_done(item[2])
 
     def _serve_conn(self, conn: socket.socket):
         if self.conn_timeout:
@@ -207,24 +280,39 @@ class PoolServer:
         # keeps the strict one-op-at-a-time protocol unchanged
         conn_wire = WIRE_V1
         out_q: Optional[queue.Queue] = None
+        # v3 connections receive whole bursts into one pooled buffer
+        # (recv_into, zero body copies): frame bodies are views of the
+        # ingest buffer, reclaimed in place once dispatch consumed them
+        conn_pool: Optional[BufferPool] = None
+        ingest: Optional[PooledIngest] = None
         # shared-secret auth is a TCP property: unix sockets are already
         # gated by filesystem permissions. State is per connection — each
         # tcp hello must answer a fresh nonce, so proofs never replay.
         auth = {"required": bool(self.secret) and self._kind == "tcp",
                 "challenge": None}
 
-        def reply(rh: dict, rbody: bytes = b"", rid=None):
+        def reply(rh: dict, rbody=b"", rid=None, views: int = 0):
             if rid is not None:
                 rh["rid"] = rid
             if out_q is not None:
-                out_q.put((rh, rbody))
+                self._views_add(views)
+                out_q.put((rh, rbody, views))
             else:
                 send_frame(conn, rh, rbody)
 
         try:
             while not self._stop.is_set():
+                loan = None
                 try:
-                    frame = recv_frame(rsock)
+                    if ingest is not None:
+                        got = ingest.next_frame()
+                        if got is None:
+                            frame = None
+                        else:
+                            hdr, body, _, loan = got
+                            frame = (hdr, body)
+                    else:
+                        frame = recv_frame(rsock)
                 except WireError as e:
                     # a fatal wire error means frame sync is gone (corrupt
                     # length prefix, EOF mid-frame): report once and drop.
@@ -269,26 +357,61 @@ class PoolServer:
                         raise TenantIsolationError(
                             "no tenant identity: send hello first")
                     elif op == "batch":
+                        if self._mutates(op, hdr):
+                            self._views_drain()
                         rh, rbody = self._run_batch(tenant, readonly, hdr,
                                                     body)
                     else:
                         if readonly:
                             self._check_readonly(tenant, op, hdr)
+                        if self._mutates(op, hdr):
+                            self._views_drain()
                         rh, rbody = self._dispatch(tenant, op, hdr, body)
                     rh["ok"] = True
-                    reply(rh, rbody, rid)
+                    nviews = 0
+                    if op == "read":
+                        nviews = 1
+                    elif op == "batch":
+                        nviews = sum(1 for s in hdr.get("ops") or []
+                                     if isinstance(s, dict)
+                                     and s.get("op") == "read")
+                    reply(rh, rbody, rid, views=nviews)
+                    if tenant is not None and op in DATA_OPS:
+                        m = tenant.metrics
+                        m.data_frames += 1
+                        if conn_wire < WIRE_V3:
+                            # pre-v3: request body staged by the buffered
+                            # reader + reply body joined by the writer
+                            m.bytes_copied += len(body) + sum(
+                                len(s) for s in _as_segment_list(rbody))
+                        elif ingest is not None:
+                            # v3's only copies: partial-frame relocations
+                            # when the kernel split a burst (usually 0)
+                            m.bytes_copied += ingest.take_moved()
                 except (PoolError, InjectedCrash) as e:
                     reply(error_to_frame(e), rid=rid)
                 except Exception as e:      # defensive: typed, keep serving
                     reply(error_to_frame(
                         PoolError(f"{type(e).__name__}: {e}")), rid=rid)
+                finally:
+                    if loan is not None:
+                        # every handler consumed the request body above;
+                        # recycle its buffer for the next frame
+                        loan.release()
                 if conn_wire >= WIRE_V2 and out_q is None:
                     # hello settled on v2: replies move to the writer pump
                     # (the hello reply itself went out strict, above)
                     out_q = queue.Queue()
                     threading.Thread(target=self._conn_writer,
-                                     args=(conn, out_q),
+                                     args=(conn, out_q, conn_wire),
                                      daemon=True).start()
+                if conn_wire >= WIRE_V3 and conn_pool is None:
+                    # v3 settled: move receives to the pooled burst
+                    # reader, handing over whatever the buffered reader
+                    # already pulled out of the kernel
+                    conn_pool = BufferPool()
+                    ingest = PooledIngest(conn, conn_pool,
+                                          residue=rsock.take_buffer())
         except PoolError:
             pass                            # peer vanished mid-reply
         finally:
@@ -431,8 +554,10 @@ class PoolServer:
     # -- ops ---------------------------------------------------------------------
     def _op_read(self, tenant, hdr, body):
         off, nbytes = self._check_owned(tenant, hdr["off"], hdr["nbytes"])
+        # the raw device-cache view rides the reply uncopied; the view
+        # gate keeps mutators off it until the writer sent it
         arr = self.device.read(off, nbytes, tag=hdr.get("tag", "read"))
-        return {}, bytes(arr)
+        return {}, arr
 
     def _op_write(self, tenant, hdr, body):
         off, _ = self._check_owned(tenant, hdr["off"], len(body))
@@ -576,16 +701,16 @@ class PoolServer:
 
 def _nmp_result_frame(out):
     """Registry-executor result -> reply frame: None (pure mutation),
-    stats dict, raw blob bytes, or a result array."""
+    stats dict, raw blob bytes, or a result array. Executor results are
+    freshly-built buffers, so they ride the reply frame uncopied."""
     if out is None:
         return {"shape": None}, b""
     if isinstance(out, dict):
         return {"shape": None, "stats": out}, b""
     if isinstance(out, (bytes, bytearray, memoryview)):
-        return {"shape": [len(out)], "dtype": "uint8"}, bytes(out)
+        return {"shape": [len(out)], "dtype": "uint8"}, out
     arr = np.ascontiguousarray(out)
-    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}, \
-        arr.tobytes()
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}, arr
 
 
 def _entry(region: Region) -> dict:
@@ -637,9 +762,9 @@ def main(argv=None):
                     help="per-connection idle timeout in seconds "
                          "(0 = never drop quiet trainers; v2 clients "
                          "keepalive-ping through it)")
-    ap.add_argument("--wire", type=int, choices=[1, 2], default=None,
+    ap.add_argument("--wire", type=int, choices=[1, 2, 3], default=None,
                     help="max wire protocol generation to offer "
-                         "(default: v2, or REPRO_POOL_WIRE)")
+                         "(default: v3, or REPRO_POOL_WIRE)")
     ap.add_argument("--fault", type=_parse_fault, action="append",
                     default=[], metavar="KIND:POINT[:OCC[:PHASE]]",
                     help="arm a deterministic fault event (repeatable)")

@@ -267,6 +267,8 @@ def merge_metrics(snapshots: Sequence[dict],
         agg.cache_invalidations += m.cache_invalidations
         agg.replica_refreshes += m.replica_refreshes
         agg.replica_bytes += m.replica_bytes
+        agg.bytes_copied += m.bytes_copied
+        agg.data_frames += m.data_frames
     return agg
 
 

@@ -31,23 +31,39 @@ class RequestBatcher:
         flat = np.concatenate([r.reshape(-1) for r in reqs])
         uniq, inverse = np.unique(flat, return_inverse=True)
         rows = self._fetch_unique(uniq)
+        batch = rows[inverse]         # ONE fancy-index for the whole batch
         out, pos = [], 0
         for r in reqs:
             n = r.size
-            block = rows[inverse[pos:pos + n]]
-            out.append(block.reshape(r.shape + (rows.shape[-1],)))
+            # each request's block is a zero-copy view into `batch`
+            out.append(batch[pos:pos + n].reshape(r.shape
+                                                  + (rows.shape[-1],)))
             pos += n
         return out
 
     def _fetch_unique(self, uniq: np.ndarray) -> np.ndarray:
         if self.cache is None:
             return np.asarray(self.gather(uniq))
+        if uniq.size == 0:
+            return np.empty((0, 0), np.float32)
         hits, missing = self.cache.get_many(uniq)
+        fetched = None
         if missing:
             miss_ids = np.asarray(missing, dtype=np.int64)
             fetched = np.asarray(self.gather(miss_ids))
             self.cache.put_many(missing, fetched)
-            for k, i in enumerate(missing):
-                hits[i] = fetched[k]
-        # uniq is sorted and hits now covers it completely
-        return np.stack([hits[int(i)] for i in uniq])
+            if not hits:
+                # all cold: miss order follows sorted uniq, so the gather
+                # block already IS the answer
+                return fetched
+        some = fetched if fetched is not None else next(iter(hits.values()))
+        out = np.empty((uniq.size, some.shape[-1]), dtype=some.dtype)
+        if fetched is not None:
+            # uniq is sorted: one vectorized scatter places every cold row
+            out[np.searchsorted(uniq, miss_ids)] = fetched
+        if hits:
+            hit_ids = np.fromiter(hits, dtype=np.int64, count=len(hits))
+            for j, row in zip(np.searchsorted(uniq, hit_ids),
+                              hits.values()):
+                out[j] = row          # cached views copy ONCE, into `out`
+        return out

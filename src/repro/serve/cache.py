@@ -33,8 +33,8 @@ class HotRowCache:
 
     def get_many(self, ids) -> tuple[dict, list]:
         """Split `ids` into ({id: row} hits, [missing ids]). Hits are moved
-        to the MRU end; rows returned are the cached arrays (read-only by
-        convention — callers copy before mutating)."""
+        to the MRU end; rows returned are read-only views of the cached
+        batch blocks — no per-hit copy. Callers copy before mutating."""
         hits: dict[int, np.ndarray] = {}
         missing: list[int] = []
         for i in ids:
@@ -51,10 +51,13 @@ class HotRowCache:
 
     def put_many(self, ids, rows: np.ndarray):
         """Insert gathered rows (rows[k] is the row for ids[k]); evicts LRU
-        entries beyond capacity."""
-        rows = np.asarray(rows)
+        entries beyond capacity. The whole batch enters as read-only views
+        of ONE shared block — the gather result itself (a fresh array per
+        gather, so aliasing it is safe) — not one copy per row."""
+        block = np.asarray(rows).view()
+        block.setflags(write=False)
         for k, i in enumerate(ids):
-            self._rows[int(i)] = np.array(rows[k], copy=True)
+            self._rows[int(i)] = block[k]
             self._rows.move_to_end(int(i))
         while len(self._rows) > self.capacity:
             self._rows.popitem(last=False)

@@ -218,6 +218,48 @@ def test_lint_flags_seeded_fixture():
         assert str(f).startswith(f"{f.path}:{f.line}: [{f.rule}]")
 
 
+def test_lint_v3_codec_rule_clean_and_loud(monkeypatch):
+    """R5: clean on the real registry; a binary kind declared without a
+    codec (or a codec naming an unknown op) is flagged."""
+    from repro.pool import protocol
+    findings = []
+    lint._rule_v3(findings)
+    assert findings == [], findings
+    monkeypatch.setattr(protocol, "_V3_NMP_KINDS",
+                        protocol._V3_NMP_KINDS + ("ghost_kind",))
+    findings = []
+    lint._rule_v3(findings)
+    assert any(f.rule == "R5a-missing-v3-codec" and "ghost_kind" in f.msg
+               for f in findings), findings
+
+
+def test_lint_copy_rule_flags_unannotated_bytes(tmp_path):
+    """R6: a bytes()/tobytes()/join copy in a data-path file is a finding
+    unless the line (or the one above) carries '# wire-copy:'."""
+    pdir = tmp_path / "pool"
+    pdir.mkdir()
+    bad = pdir / "remote.py"
+    bad.write_text(
+        "def leak(mv, arr, segs):\n"
+        "    a = bytes(mv)\n"
+        "    b = arr.tobytes()\n"
+        "    c = b\"\".join(segs)\n"
+        "    # wire-copy: sanctioned staging copy\n"
+        "    d = bytes(mv)\n"
+        "    e = arr.tobytes()  # wire-copy: sanctioned inline\n"
+        "    return a, b, c, d, e\n")
+    findings = []
+    lint._rule_copies([str(bad)], findings)
+    assert [f.line for f in findings] == [2, 3, 4], findings
+    assert all(f.rule == "R6-copy-on-data-path" for f in findings)
+    # non-data-path files are out of scope
+    other = tmp_path / "elsewhere.py"
+    other.write_text("x = bytes(b'ab')\n")
+    findings = []
+    lint._rule_copies([str(other)], findings)
+    assert findings == []
+
+
 def test_lint_main_exit_codes(capsys):
     assert lint.main([os.path.join(REPO, "src", "repro")]) == 0
     fixture = os.path.join(REPO, "tests", "fixtures", "lint_bad.py")

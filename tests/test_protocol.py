@@ -14,8 +14,11 @@ from repro.pool import (DramPool, PmemPool, PoolAllocator,
                         PoolConnectionError, PoolError, PoolServer,
                         PoolTimeoutError, RemotePool, Timeouts, make_pool)
 from repro.pool import protocol, remote, server, sharded
-from repro.pool.protocol import (WIRE_V1, WIRE_V2, PoolChannel, recv_frame,
-                                 send_frame, wire_from_env)
+from repro.analysis.checker import RecycledBufferError
+from repro.pool.protocol import (BIN_HDR_FLAG, WIRE_V1, WIRE_V2, WIRE_V3,
+                                 BufferPool, PoolChannel, V3_CODECS,
+                                 pack_v3_header, recv_frame, send_frame,
+                                 unpack_v3_header, wire_from_env)
 
 
 @pytest.fixture
@@ -60,7 +63,7 @@ def test_v2_client_against_v1_server(tmp_path):
     s = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/v1.sock",
                    wire=WIRE_V1).start()
     try:
-        dev = RemotePool(s.addr, timeout=20.0)     # asks for v2
+        dev = RemotePool(s.addr, timeout=20.0)     # asks for v3
         assert dev.wire == WIRE_V1
         r = _mkdata(dev)
         assert bytes(dev.read(r.off, 8)) == bytes(range(8))
@@ -82,10 +85,19 @@ def test_v1_client_against_v2_server(srv):
     dev.close()
 
 
-def test_v2_both_sides_negotiates_v2(srv):
+def test_default_both_sides_negotiates_v3(srv):
     dev = RemotePool(srv.addr, timeout=20.0)
+    assert dev.wire == WIRE_V3
+    assert dev.wire_stats()["wire"] == WIRE_V3
+    dev.close()
+
+
+def test_v2_pinned_both_sides_stays_v2(srv):
+    dev = RemotePool(srv.addr, timeout=20.0, wire=WIRE_V2)
     assert dev.wire == WIRE_V2
     assert dev.wire_stats()["wire"] == WIRE_V2
+    r = _mkdata(dev)
+    assert bytes(dev.read(r.off, 8)) == bytes(range(8))
     dev.close()
 
 
@@ -94,8 +106,12 @@ def test_wire_from_env(monkeypatch):
     assert wire_from_env() == WIRE_V1
     monkeypatch.setenv("REPRO_POOL_WIRE", "2")
     assert wire_from_env() == WIRE_V2
+    monkeypatch.setenv("REPRO_POOL_WIRE", "v3")
+    assert wire_from_env() == WIRE_V3
+    monkeypatch.setenv("REPRO_POOL_WIRE", "3")
+    assert wire_from_env() == WIRE_V3
     monkeypatch.delenv("REPRO_POOL_WIRE")
-    assert wire_from_env() == WIRE_V2
+    assert wire_from_env() == WIRE_V3
 
 
 # -- pipelining ---------------------------------------------------------------
@@ -141,7 +157,7 @@ def test_pipelined_error_rejects_only_its_future(srv):
     future; requests before and after it complete, and the connection
     keeps serving."""
     dev = RemotePool(srv.addr, timeout=20.0)
-    assert dev.wire == WIRE_V2
+    assert dev.wire == WIRE_V3
     r = _mkdata(dev)
     good1 = dev.read_async(r.off, 8)
     bad = dev.read_async(1 << 29, 8)        # beyond capacity: typed error
@@ -354,3 +370,181 @@ def test_sharded_batch_routing_preserves_order(tmp_path):
     finally:
         for s in servers:
             s.shutdown(close_device=True)
+
+
+# -- wire v3: binary headers, zero-copy bodies, pooled buffers ----------------
+
+def test_v3_client_against_v2_server(tmp_path):
+    """Interop down: a default (v3) client lands on v2 against a v2-pinned
+    server and round-trips data."""
+    s = PoolServer(DramPool(1 << 18), f"unix:{tmp_path}/v2.sock",
+                   wire=WIRE_V2).start()
+    try:
+        dev = RemotePool(s.addr, timeout=20.0)
+        assert dev.wire == WIRE_V2
+        r = _mkdata(dev)
+        assert bytes(dev.read(r.off, 8)) == bytes(range(8))
+        fut = dev.read_async(r.off, 8)
+        assert bytes(fut.result()) == bytes(range(8))
+        dev.close()
+    finally:
+        s.shutdown(close_device=True)
+
+
+def test_v3_binary_header_roundtrip_over_the_wire(srv):
+    """A default connection really uses binary headers: data ops succeed
+    end to end and every data-class op name has a codec."""
+    dev = RemotePool(srv.addr, timeout=20.0)
+    assert dev.wire == WIRE_V3
+    r = _mkdata(dev, n=128)
+    dev.write(r.off, np.arange(128, dtype=np.uint8)[::-1].copy())
+    assert bytes(dev.read(r.off, 4)) == bytes([127, 126, 125, 124])
+    got = dev.read_batch([(r.off, 4), (r.off + 4, 4)])
+    assert bytes(got[1]) == bytes([123, 122, 121, 120])
+    for name in ("read", "write", "gather", "bag_gather",
+                 "undo_log_append", "slot_headers", "region_export",
+                 "region_import", "blob_put"):
+        assert name in V3_CODECS, name
+    dev.close()
+
+
+def test_v3_data_path_copies_zero_bytes(srv):
+    """The acceptance gate: on a v3 connection neither side copies data
+    bytes — client and server bytes_copied stay 0 while data_frames
+    count, for read, write, read_batch and nmp gather alike."""
+    dev = RemotePool(srv.addr, timeout=20.0, tenant="zc")
+    assert dev.wire == WIRE_V3
+    a = PoolAllocator(dev)
+    r = a.domain("zc").alloc("m", shape=(16, 8), dtype="float32")
+    dev.write(r.off, np.arange(128, dtype=np.float32).reshape(16, 8))
+    assert bytes(dev.read(r.off, 16)) == \
+        np.arange(4, dtype=np.float32).tobytes()
+    dev.read_batch([(r.off, 8), (r.off + 8, 8)])
+    rows = dev.nmp("gather", r, idx=np.array([1, 3]))
+    assert rows.shape == (2, 8)
+    st = dev.wire_stats()
+    assert st["data_frames"] >= 4
+    assert st["bytes_copied"] == 0
+    assert st["recv_pool"]["acquired"] > 0
+    m = srv.tenants["zc"].metrics
+    assert m.data_frames >= 4
+    assert m.bytes_copied == 0
+    dev.close()
+    # contrast cell: the same ops over a pinned v2 connection DO copy
+    dev2 = RemotePool(srv.addr, timeout=20.0, tenant="zc2", wire=WIRE_V2)
+    r2 = PoolAllocator(dev2).domain("zc2").alloc("m", shape=(64,),
+                                                 dtype="uint8")
+    dev2.write(r2.off, np.arange(64, dtype=np.uint8))
+    bytes(dev2.read(r2.off, 64))
+    st2 = dev2.wire_stats()
+    assert st2["bytes_copied"] > 0
+    assert srv.tenants["zc2"].metrics.bytes_copied > 0
+    dev2.close()
+
+
+def test_torn_binary_frame_mid_pipeline_rejects_exactly_one(srv):
+    """The binary twin of the JSON torn-frame cell: a BIN_HDR_FLAG frame
+    whose header fails to decode produces ONE no-rid error reply; the
+    requests around it succeed and the connection keeps serving."""
+    kind, target = protocol.parse_addr(srv.addr)
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.connect(target)
+    sock.settimeout(10.0)
+    try:
+        assert _raw_hello(sock, wire=WIRE_V3) == WIRE_V3
+        send_frame(sock, {"op": "capacity", "rid": 1})
+        bh = struct.pack("<HHQ", 127, 0, 2)   # unknown binary op code
+        sock.sendall(struct.pack("<II", 4 + len(bh),
+                                 len(bh) | BIN_HDR_FLAG) + bh)
+        send_frame(sock, {"op": "capacity", "rid": 3})
+        replies = [recv_frame(sock)[0] for _ in range(3)]
+        by_rid = {h.get("rid"): h for h in replies}
+        assert by_rid[1]["ok"] and by_rid[3]["ok"]
+        (err,) = [h for h in replies if not h.get("ok")]
+        assert err.get("rid") is None
+        send_frame(sock, {"op": "capacity", "rid": 4})
+        hdr, _ = recv_frame(sock)
+        assert hdr["ok"] and hdr["rid"] == 4
+    finally:
+        sock.close()
+
+
+def test_v3_codec_pack_unpack_roundtrip():
+    """pack_v3_header -> unpack_v3_header is the identity on canonical
+    data-op headers, and falls back (None) on anything else."""
+    hdrs = [
+        {"op": "read", "off": 4096, "nbytes": 65536, "rid": 7},
+        {"op": "write", "off": 0, "rid": 1},
+        {"op": "nmp", "kind": "gather", "rid": 9,
+         "region": {"off": 64, "nbytes": 512, "dtype": "float32",
+                    "shape": [16, 8]},
+         "combine": "sum", "point": None},
+    ]
+    for hdr in hdrs:
+        bh = pack_v3_header(hdr)
+        assert bh is not None, hdr
+        back = unpack_v3_header(memoryview(bh))
+        for k, v in hdr.items():
+            assert back[k] == v, (k, hdr)
+    assert pack_v3_header({"op": "capacity", "rid": 1}) is None
+    assert pack_v3_header({"op": "read", "off": 0, "nbytes": 8,
+                           "weird": 1}) is None
+
+
+def test_buffer_pool_reuse_after_release_is_typed_violation():
+    """Rule L drill: a loan's view dies with a RecycledBufferError once
+    the pool recycles the buffer; detach() keeps views alive forever;
+    double release is a no-op."""
+    pool = BufferPool(max_free=4)
+    loan = pool.acquire(64)
+    v = loan.view()
+    v[:4] = b"abcd"
+    assert bytes(loan.view()[:4]) == b"abcd"
+    loan.release()
+    loan.release()                           # double release: no-op
+    again = pool.acquire(32)                 # recycles the same buffer
+    assert pool.stats()["reused"] == 1
+    with pytest.raises(RecycledBufferError):
+        loan.view()
+    # detached loans survive recycling of everything else
+    keeper = pool.acquire(16)
+    kv_src = keeper.view()
+    kv_src[:2] = b"ok"
+    keeper.detach()
+    keeper.release()                         # no-op on a detached loan
+    again.release()
+    for _ in range(8):
+        pool.acquire(16).release()
+    assert bytes(keeper.view()[:2]) == b"ok"
+
+
+def test_channel_recycles_recv_buffers_across_requests(srv):
+    """Ack frames return their loaned buffers to the channel pool, so a
+    write-heavy stream reuses buffers instead of allocating per frame."""
+    dev = RemotePool(srv.addr, timeout=20.0)
+    r = _mkdata(dev)
+    blob = np.arange(64, dtype=np.uint8)
+    for _ in range(16):
+        dev.write(r.off, blob)
+    st = dev.wire_stats()["recv_pool"]
+    assert st["reused"] > 0, st
+    dev.close()
+
+
+def test_bulk_timeout_scales_with_payload():
+    """Satellite: the flat bulk deadline is the FLOOR; payload-heavy bulk
+    ops get transfer time at the modeled link floor on top."""
+    t = Timeouts(control=5.0, data=10.0, bulk=30.0, keepalive=0.0)
+    flat = t.for_hdr({"op": "nmp", "kind": "region_export",
+                      "region": {"off": 0, "nbytes": 1024}})
+    assert flat == pytest.approx(30.0, abs=1e-3)
+    big = t.for_hdr({"op": "nmp", "kind": "region_export",
+                     "region": {"off": 0, "nbytes": 40 * (1 << 20)}})
+    assert big == pytest.approx(30.0 + 40 * (1 << 20) / t.BULK_BW_FLOOR)
+    assert big > flat
+    # request-body side (import/blob_put) scales through nbytes
+    up = t.for_hdr({"op": "nmp", "kind": "blob_put"},
+                   nbytes=80 * (1 << 20))
+    assert up > t.for_hdr({"op": "nmp", "kind": "blob_put"}, nbytes=0)
+    # data/control classes stay flat no matter the size
+    assert t.for_hdr({"op": "read"}, nbytes=1 << 30) == 10.0
